@@ -1,0 +1,87 @@
+"""Clustering-quality benchmarks: paper Tables 2, 3, 4 (+ Fig. 6 counts).
+
+Rand index of each approximation algorithm against Ex-DPC's clustering
+(Ex-DPC = ground truth, exactly the paper's §6.1 protocol).
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core import DPCConfig, cluster, rand_index
+from repro.data.points import gaussian_mixture, random_walk, real_proxy, with_noise
+
+from .util import CSV, pick_dcut
+
+
+def _cluster_labels(points, d_cut, algorithm, rho_min, eps=1.0):
+    out, _ = cluster(points, DPCConfig(d_cut=d_cut, rho_min=rho_min,
+                                       algorithm=algorithm, eps=eps))
+    return np.asarray(out.labels), int(out.num_clusters)
+
+
+ALGOS = ("approxdpc", "sapproxdpc", "lsh_ddp")
+
+
+def noise_sweep(n=20_000, seed=0):
+    """Table 2: Rand index vs noise rate on Syn (random-walk, 13 peaks)."""
+    csv = CSV("table2_noise")
+    csv.header(f"Rand index vs noise rate (Syn-like, n={n})")
+    for rate in (0.01, 0.02, 0.04, 0.08, 0.16):
+        base, labels = random_walk(int(n / (1 + rate)), k=13, seed=seed)
+        pts, _ = with_noise(base, labels, rate, seed=seed)
+        d_cut = pick_dcut(pts, target_rho=min(40.0, n / 100))
+        ref, k_ref = _cluster_labels(pts, d_cut, "exdpc", rho_min=8)
+        row = {"noise_rate": rate, "clusters_exdpc": k_ref}
+        for algo in ALGOS:
+            got, _ = _cluster_labels(pts, d_cut, algo, rho_min=8)
+            row[f"rand_{algo}"] = rand_index(ref, got)
+        csv.add(**row)
+    return csv
+
+
+def overlap_sweep(n=20_000, seed=1):
+    """Table 3: Rand index vs cluster overlap (S1..S4 analogues)."""
+    csv = CSV("table3_overlap")
+    csv.header(f"Rand index vs overlap degree (15 Gaussians, n={n})")
+    for name, overlap in (("S1", 0.010), ("S2", 0.016), ("S3", 0.022),
+                          ("S4", 0.028)):
+        pts, _ = gaussian_mixture(n, k=15, d=2, overlap=overlap, seed=seed)
+        d_cut = pick_dcut(pts, target_rho=min(40.0, n / 100))
+        ref, k_ref = _cluster_labels(pts, d_cut, "exdpc", rho_min=8)
+        row = {"dataset": name, "clusters_exdpc": k_ref}
+        for algo in ALGOS:
+            got, _ = _cluster_labels(pts, d_cut, algo, rho_min=8)
+            row[f"rand_{algo}"] = rand_index(ref, got)
+        csv.add(**row)
+    return csv
+
+
+def realistic(n=20_000, seed=2):
+    """Table 4: Rand index on real-dataset proxies (Airline/Household/
+    PAMAP2/Sensor dims + skewed densities)."""
+    csv = CSV("table4_real")
+    csv.header(f"Rand index on real-like datasets (n={n})")
+    for name in ("airline", "household", "pamap2", "sensor"):
+        pts, _ = real_proxy(name, n, seed=seed)
+        d_cut = pick_dcut(pts, target_rho=min(40.0, n / 100))
+        ref, k_ref = _cluster_labels(pts, d_cut, "exdpc", rho_min=8)
+        row = {"dataset": name, "clusters_exdpc": k_ref}
+        for algo in ALGOS:
+            got, _ = _cluster_labels(pts, d_cut, algo, rho_min=8)
+            row[f"rand_{algo}"] = rand_index(ref, got)
+        csv.add(**row)
+    return csv
+
+
+def main(n=20_000):
+    noise_sweep(n)
+    overlap_sweep(n)
+    realistic(n)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=20_000)
+    main(ap.parse_args().n)

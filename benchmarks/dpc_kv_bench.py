@@ -1,0 +1,69 @@
+"""Beyond-paper benchmark: DPC-KV cache compression quality/size trade.
+
+Measures attention-output relative error of the DPC-compressed cache vs
+(a) random eviction and (b) strided keeping, across compression budgets —
+the serving-side application of the paper's technique (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.serve.dpc_kv import DPCKVConfig, attend_compressed, compress_kv
+from .util import CSV
+
+
+def _cache(B, S, K, hd, modes, seed):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(0, 1, (modes, hd)).astype(np.float32) * 3
+    assign = rng.integers(0, modes, (B, S, K))
+    k = centers[assign] + rng.normal(0, 0.2, (B, S, K, hd))
+    v = centers[assign] * 0.5 + rng.normal(0, 0.05, (B, S, K, hd))
+    return jnp.asarray(k, jnp.float32), jnp.asarray(v, jnp.float32)
+
+
+def _full(q, k, v):
+    B, H, hd = q.shape
+    K = k.shape[2]
+    qg = q.reshape(B, K, H // K, hd)
+    logits = jnp.einsum("bkgh,bskh->bkgs", qg, k) * hd ** -0.5
+    p = jax.nn.softmax(logits, -1)
+    return jnp.einsum("bkgs,bskh->bkgh", p, v).reshape(B, H, hd)
+
+
+def _err(a, b):
+    return float(jnp.linalg.norm(a - b) / jnp.linalg.norm(b))
+
+
+def main(S=1024, modes=12):
+    csv = CSV("dpc_kv")
+    csv.header(f"attention error vs budget (S={S}, {modes} key modes)")
+    B, K, hd = 2, 2, 64
+    k, v = _cache(B, S, K, hd, modes, seed=0)
+    q = jnp.asarray(np.random.default_rng(1).normal(0, 1, (B, 8, hd)),
+                    jnp.float32)
+    ref = _full(q, k, v)
+    rng = np.random.default_rng(2)
+    for budget in (32, 64, 128, 256):
+        kc, vc, cnt = compress_kv(k, v, jnp.int32(S),
+                                  DPCKVConfig(budget=budget))
+        e_dpc = _err(attend_compressed(q, kc, vc, cnt), ref)
+        keep = rng.choice(S, budget, replace=False)
+        e_rand = _err(attend_compressed(q, k[:, keep], v[:, keep],
+                                        jnp.ones((B, budget, K))), ref)
+        stride = S // budget
+        e_stride = _err(attend_compressed(q, k[:, ::stride][:, :budget],
+                                          v[:, ::stride][:, :budget],
+                                          jnp.ones((B, budget, K))), ref)
+        csv.add(budget=budget, compress_ratio=S / budget, err_dpc=e_dpc,
+                err_random=e_rand, err_strided=e_stride)
+    return csv
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--S", type=int, default=1024)
+    main(ap.parse_args().S)

@@ -1,0 +1,37 @@
+"""Table 5: S-Approx-DPC time vs accuracy across its eps parameter."""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core import DPCConfig, cluster, rand_index
+from repro.core.sapproxdpc import run_sapproxdpc
+
+from repro.data.points import real_proxy
+
+from .util import CSV, pick_dcut, timeit
+
+
+def main(n=20_000):
+    csv = CSV("table5_eps")
+    csv.header(f"S-Approx-DPC eps sweep (n={n})")
+    for dataset in ("airline", "household"):
+        pts, _ = real_proxy(dataset, n, seed=3)
+        d_cut = pick_dcut(pts, target_rho=min(40.0, n / 100))
+        ref, _ = cluster(pts, DPCConfig(d_cut=d_cut, rho_min=8,
+                                        algorithm="exdpc"))
+        ref_labels = np.asarray(ref.labels)
+        for eps in (0.2, 0.4, 0.6, 0.8, 1.0):
+            t = timeit(run_sapproxdpc, pts, d_cut, eps, repeats=2)
+            out, _ = cluster(pts, DPCConfig(d_cut=d_cut, rho_min=8,
+                                            algorithm="sapproxdpc", eps=eps))
+            ri = rand_index(ref_labels, np.asarray(out.labels))
+            csv.add(dataset=dataset, eps=eps, time_s=t, rand_index=ri)
+    return csv
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=20_000)
+    main(ap.parse_args().n)

@@ -1,0 +1,174 @@
+"""Roofline analysis over the dry-run records (single-pod mesh).
+
+Terms per (arch x shape), all per-device (the partitioned module IS the
+per-device program):
+
+    T_comp = HLO_flops / 197e12           (bf16 MXU peak, TPU v5e-like)
+    T_mem  = HLO_bytes / 819e9            (HBM bandwidth)
+    T_coll = sum_k mult_k * bytes_k / 50e9  (ICI link bandwidth)
+
+Link-traffic multipliers: ring all-reduce moves ~2x its payload per device;
+all-gather payload is already counted as the gathered output (~1x traffic);
+reduce-scatter / all-to-all / collective-permute ~1x.  These are the
+standard ring-collective estimates; EXPERIMENTS.md documents them.
+
+MODEL_FLOPS = 6 * N_matmul * D (train) or 2 * N_matmul * D (serve forward),
+with N_matmul = matmul-visible parameters (embedding *gathers* excluded,
+the unembedding matmul included, MoE experts counted at top_k/E activity).
+The MODEL/HLO ratio exposes remat + sharding redundancy.
+
+Usage:  PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+
+COLL_MULT = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+             "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def model_flops(arch: str, shape: dict, devices: int) -> float:
+    """Analytic MODEL_FLOPS per device for the cell."""
+    import jax
+    from repro.configs import ARCHS, SHAPES
+    from repro.models import build_model
+
+    cfg = ARCHS[arch]
+    spec = SHAPES[shape["shape"]]
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    flat = jax.tree_util.tree_leaves_with_path(params)
+    total = sum(int(_np_prod(l.shape)) for _, l in flat)
+    embed = sum(int(_np_prod(l.shape)) for p, l in flat
+                if "embed" in jax.tree_util.keystr(p))
+    n_matmul = total if cfg.tie_embeddings else total - embed
+    if cfg.family == "moe":
+        expert = sum(int(_np_prod(l.shape)) for p, l in flat
+                     if any(w in jax.tree_util.keystr(p)
+                            for w in ("w_gate", "w_up", "w_down")))
+        # active share over the (possibly padded) expert count: padded
+        # experts receive no tokens, so k/Ep x padded_total = k x (d x ff x 3)
+        e_p = max(cfg.n_experts_padded, cfg.n_experts)
+        n_matmul -= expert * (1.0 - cfg.top_k / e_p)
+    if spec.kind == "train":
+        tokens = spec.global_batch * spec.seq_len
+        return 6.0 * n_matmul * tokens / devices
+    if spec.kind == "prefill":
+        tokens = spec.global_batch * spec.seq_len
+        return 2.0 * n_matmul * tokens / devices
+    tokens = spec.global_batch            # one new token per sequence
+    return 2.0 * n_matmul * tokens / devices
+
+
+def _np_prod(shape):
+    out = 1
+    for s in shape:
+        out *= s
+    return out
+
+
+def cell_terms(rec: dict) -> dict:
+    c = rec["cost"]
+    t_comp = c["flops"] / PEAK_FLOPS
+    t_mem = c["bytes"] / HBM_BW
+    t_coll = sum(COLL_MULT.get(k, 1.0) * v / LINK_BW
+                 for k, v in c["collectives"]["bytes"].items())
+    dom = max(("compute", t_comp), ("memory", t_mem),
+              ("collective", t_coll), key=lambda kv: kv[1])
+    mf = model_flops(rec["arch"], rec, rec["devices"])
+    bound = max(t_comp, t_mem, t_coll)
+    return {
+        "t_comp_s": t_comp, "t_mem_s": t_mem, "t_coll_s": t_coll,
+        "dominant": dom[0],
+        "model_flops_per_device": mf,
+        "useful_ratio": mf / max(c["flops"], 1.0),
+        # fraction of the bound spent on *useful* model math at MXU peak:
+        # the roofline score for the cell
+        "roofline_fraction": (mf / PEAK_FLOPS) / max(bound, 1e-30),
+        "step_time_bound_s": bound,
+    }
+
+
+_NOTES = {
+    "compute": ("compute-bound: raise useful_ratio — cut remat recompute or "
+                "reshard so both mesh axes contribute to the dominant "
+                "matmuls"),
+    "memory": ("memory-bound: shrink materialized intermediates (fuse f32 "
+               "chains, narrower activations dtype, bigger effective "
+               "microbatch) or shard the traffic-heavy tensor"),
+    "collective": ("collective-bound: reduce per-step traffic — accumulate "
+                   "grads locally and all-reduce once, overlap the ring "
+                   "with compute, or reshard to kill the biggest gather"),
+}
+
+
+def load_records(d: str, mesh: str = "pod16x16"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(d, f"*__{mesh}.json"))):
+        r = json.load(open(f))
+        if "cost" in r:
+            recs.append(r)
+        elif "skipped" in r:
+            recs.append(r)
+    return recs
+
+
+def table(d: str, mesh: str = "pod16x16"):
+    rows = []
+    for r in load_records(d, mesh):
+        if "skipped" in r:
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "skipped": r["skipped"]})
+            continue
+        t = cell_terms(r)
+        biggest_coll = max(r["cost"]["collectives"]["bytes"].items(),
+                           key=lambda kv: kv[1], default=("-", 0))
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], **t,
+            "biggest_coll": biggest_coll[0],
+            "note": _NOTES[t["dominant"]],
+        })
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--md-out", default="experiments/roofline.md")
+    args = ap.parse_args()
+
+    rows = table(args.dir, args.mesh)
+    hdr = (f"| arch | shape | T_comp s | T_mem s | T_coll s | dominant | "
+           f"MODEL/HLO | roofline frac | top coll |")
+    sep = "|" + "---|" * 9
+    lines = [f"Roofline over {args.mesh} "
+             f"(197 TF/s bf16, 819 GB/s HBM, 50 GB/s ICI)", "", hdr, sep]
+    for r in rows:
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skip: {r['skipped']} | — | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_comp_s']:.3g} | "
+            f"{r['t_mem_s']:.3g} | {r['t_coll_s']:.3g} | {r['dominant']} | "
+            f"{r['useful_ratio']:.2f} | {r['roofline_fraction']:.2%} | "
+            f"{r['biggest_coll']} |")
+    out = "\n".join(lines)
+    print(out)
+    if args.md_out:
+        os.makedirs(os.path.dirname(args.md_out), exist_ok=True)
+        with open(args.md_out, "w") as f:
+            f.write(out + "\n")
+        print(f"\n[roofline] table -> {args.md_out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Fig. 8: running time vs d_cut.
+
+Paper claims: Scan is insensitive to d_cut; the grid algorithms degrade as
+d_cut grows (rho_avg enters their complexity); S-Approx-DPC is least
+sensitive (|G'| shrinks as d_cut grows).
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.core.approxdpc import run_approxdpc
+from repro.core.exdpc import run_exdpc
+from repro.core.sapproxdpc import run_sapproxdpc
+from repro.core.scan import run_scan
+from repro.data.points import real_proxy
+from .util import CSV, pick_dcut, timeit
+
+
+def main(n=10_000, dataset="household"):
+    csv = CSV("fig8_dcut")
+    csv.header(f"time vs d_cut ({dataset}, n={n})")
+    pts, _ = real_proxy(dataset, n, seed=7)
+    base = pick_dcut(pts, target_rho=min(20.0, n / 200))
+    for mult in (0.5, 1.0, 2.0, 4.0):
+        d_cut = base * mult
+        csv.add(dcut_mult=mult, d_cut=d_cut,
+                scan_s=timeit(run_scan, pts, d_cut, repeats=2),
+                exdpc_s=timeit(run_exdpc, pts, d_cut, repeats=2),
+                approxdpc_s=timeit(run_approxdpc, pts, d_cut, repeats=2),
+                sapproxdpc_s=timeit(run_sapproxdpc, pts, d_cut, repeats=2))
+    return csv
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=10_000)
+    main(ap.parse_args().n)

@@ -1,0 +1,56 @@
+"""Fig. 7: end-to-end running time vs cardinality (sampling rate).
+
+Validates the paper's scaling claims: Scan is O(n^2); Ex-DPC/Approx-DPC are
+sub-quadratic; S-Approx-DPC is ~linear for fixed parameters.  The fitted
+log-log slope per algorithm is printed alongside the raw times.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core.approxdpc import run_approxdpc
+from repro.core.exdpc import run_exdpc
+from repro.core.lsh_ddp import run_lsh_ddp
+from repro.core.sapproxdpc import run_sapproxdpc
+from repro.core.scan import run_scan
+from repro.data.points import real_proxy
+from .util import CSV, pick_dcut, timeit
+
+
+def main(n_max=32_000, dataset="household", include_scan=True):
+    csv = CSV("fig7_scaling_n")
+    csv.header(f"time vs n ({dataset}, n_max={n_max})")
+    ns = [n_max // 8, n_max // 4, n_max // 2, n_max]
+    pts_full, _ = real_proxy(dataset, n_max, seed=6)
+    d_cut = pick_dcut(pts_full, target_rho=min(30.0, n_max / 200))
+    algos = {
+        "exdpc": run_exdpc,
+        "approxdpc": run_approxdpc,
+        "sapproxdpc": run_sapproxdpc,
+        "lsh_ddp": run_lsh_ddp,
+    }
+    if include_scan:
+        algos["scan"] = run_scan
+    times = {a: [] for a in algos}
+    for n in ns:
+        pts = pts_full[:n]
+        row = {"n": n}
+        for algo, fn in algos.items():
+            t = timeit(fn, pts, d_cut, repeats=2)
+            times[algo].append(t)
+            row[f"{algo}_s"] = t
+        csv.add(**row)
+    # fitted scaling exponents
+    logn = np.log(np.array(ns, float))
+    exps = {a: float(np.polyfit(logn, np.log(np.maximum(ts, 1e-9)), 1)[0])
+            for a, ts in times.items()}
+    csv.add(**{f"slope_{a}": e for a, e in exps.items()})
+    return exps
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-max", type=int, default=32_000)
+    main(ap.parse_args().n_max)

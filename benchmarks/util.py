@@ -1,0 +1,60 @@
+"""Shared benchmark utilities: timing, d_cut selection, CSV emission.
+
+Scale note: the paper's machine is a 24-core Xeon running C++ on datasets of
+2-6M points; this container is a single-core CPU interpreting JAX, so the
+default sizes are scaled down (n ~ 2e4) and every table records its n.  The
+paper's *claims* that we validate — accuracy ordering, scaling exponents,
+algorithm speed ordering — are size-robust; absolute seconds are not
+comparable and are not the deliverable (the roofline/dry-run is).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+
+
+def timeit(fn, *args, repeats: int = 3, warmup: int = 1, **kw):
+    """Median wall seconds of fn(*args); blocks on all jax outputs."""
+    for _ in range(warmup):
+        _block(fn(*args, **kw))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        _block(fn(*args, **kw))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def _block(out):
+    for leaf in jax.tree.leaves(out):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+    return out
+
+
+from repro.core.tuning import pick_dcut  # noqa: F401  (re-export)
+
+
+class CSV:
+    """Collects rows and prints a section of `name,key=val,...` lines."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.rows = []
+
+    def add(self, **kv):
+        self.rows.append(kv)
+        print(f"[{self.name}] " + ",".join(f"{k}={_fmt(v)}"
+                                           for k, v in kv.items()),
+              flush=True)
+
+    def header(self, note: str = ""):
+        print(f"\n=== {self.name} {note}", flush=True)
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)

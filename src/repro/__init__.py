@@ -1,0 +1,12 @@
+"""repro: Fast Density-Peaks Clustering on TPU pods (JAX).
+
+x64 is enabled globally: the grid cell keys (DESIGN.md §2) are mixed-radix
+encodings over up to 8 dims and overflow int32.  All numeric model code in
+this package is dtype-explicit (bf16/f32), so the only x64 effect is on index
+arithmetic.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+__version__ = "1.0.0"

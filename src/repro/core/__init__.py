@@ -1,0 +1,8 @@
+"""Core DPC algorithms (the paper's contribution) in JAX."""
+from .dpc_api import (Clustering, DPCConfig, DPCResult, assign_labels, cluster,
+                      compute_dpc, decision_graph)
+from .metrics import rand_index
+from .tuning import pick_dcut
+
+__all__ = ["DPCConfig", "DPCResult", "Clustering", "compute_dpc", "cluster",
+           "assign_labels", "decision_graph", "rand_index", "pick_dcut"]

@@ -1,0 +1,83 @@
+"""Approx-DPC (§4): exact rho, O(1) approximate dependents, same centers.
+
+Paper rules, realized with segment ops over the grouping grid G (side
+d_cut/sqrt(d), in-cell diameter < d_cut):
+
+1. p_i != p*(cell)  ->  parent = p*(cell), delta = d_cut.     [segment argmax]
+2. p_i == p*(cell)  ->  nearest denser point within d_cut via the stencil
+   (the paper's N(c)/min-rho test, evaluated directly in vector form);
+   if found: parent = it, delta = d_cut.
+3. otherwise (cell-max with no denser point within d_cut): exact global
+   masked-NN fallback — these are the "stem" roots, |roots| << n.
+
+rho is exact (joint per-cell range count), so Theorem 4 (identical cluster
+centers to Ex-DPC for the same rho_min/delta_min) carries over: every point
+resolved by rules 1-2 has true delta < d_cut < delta_min under Ex-DPC too, and
+every root gets its exact delta.  Property-tested in tests/test_dpc_core.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .dpc_types import DPCResult, with_jitter
+from .exdpc import resolve_fallback
+from .grid import build_grid, Grid
+from .stencil import density_per_cell, dependent_stencil
+
+
+def _group_segments(grid: Grid):
+    """Contiguous grouping-cell segment id per sorted point (G is a refinement
+    of the candidate grid on the leading dims, so one sort serves both)."""
+    gk = grid.group_key
+    is_first = jnp.concatenate([jnp.ones((1,), bool), gk[1:] != gk[:-1]])
+    return (jnp.cumsum(is_first) - 1).astype(jnp.int32)
+
+
+def run_approxdpc(points, d_cut: float, *, g: int | None = None,
+                  cell_block: int = 32, block: int = 256,
+                  fallback_block: int = 4096,
+                  grid: Grid | None = None) -> DPCResult:
+    points = jnp.asarray(points, jnp.float32)
+    n = points.shape[0]
+    if grid is None:
+        grid = build_grid(points, d_cut, g=g)
+
+    # --- exact local density via joint per-cell range count (§4.2) ---
+    rho_sorted = density_per_cell(grid, block=cell_block)
+    rho = rho_sorted[grid.inv_order]
+    rho_key = with_jitter(rho)
+    rk_sorted = rho_key[grid.order]
+
+    # --- rule 1: in-cell O(1) dependents via segment argmax ---
+    seg = _group_segments(grid)
+    num_seg = n  # <= n segments; segment ops padded to n
+    seg_max = jax.ops.segment_max(rk_sorted, seg, num_segments=num_seg)
+    is_cellmax = rk_sorted == seg_max[seg]
+    # index of each cell's max point (sorted order)
+    slot = jnp.arange(n, dtype=jnp.int32)
+    cellmax_slot = jax.ops.segment_max(jnp.where(is_cellmax, slot, -1), seg,
+                                       num_segments=num_seg)
+    parent_s = cellmax_slot[seg]                 # rule-1 parent (sorted idx)
+    delta_s = jnp.full((n,), grid.d_cut, jnp.float32)
+    resolved_s = ~is_cellmax
+
+    # --- rule 2: cell maxima consult the d_cut stencil ---
+    # (the stencil pass computes for every point; only cell maxima consume it.
+    #  This is the vector-SPMD trade: lanes are cheaper than gather plumbing.)
+    st_delta, st_parent, st_found = dependent_stencil(grid, rk_sorted, block=block)
+    use2 = is_cellmax & st_found
+    parent_s = jnp.where(use2, st_parent, parent_s)
+    delta_s = jnp.where(use2, jnp.float32(grid.d_cut), delta_s)  # paper sets d_cut
+    resolved_s = resolved_s | use2
+
+    delta = delta_s[grid.inv_order]
+    parent_sorted = parent_s[grid.inv_order]
+    parent = jnp.where(parent_sorted >= 0, grid.order[parent_sorted], -1).astype(jnp.int32)
+    resolved = resolved_s[grid.inv_order]
+
+    # --- rule 3: exact fallback for the stem roots ---
+    delta, parent = resolve_fallback(points, rho_key, delta, parent, resolved,
+                                     block=fallback_block)
+    return DPCResult(rho=rho, rho_key=rho_key, delta=delta,
+                     parent=parent.astype(jnp.int32))

@@ -1,0 +1,62 @@
+"""Public DPC API: one config, one entry point, all algorithms."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Literal
+
+import jax.numpy as jnp
+
+from .approxdpc import run_approxdpc
+from .cfsfdp_a import run_cfsfdp_a
+from .dpc_types import DPCResult
+from .exdpc import run_exdpc
+from .labels import Clustering, assign_labels, decision_graph
+from .lsh_ddp import run_lsh_ddp
+from .sapproxdpc import run_sapproxdpc
+from .scan import run_scan
+
+Algorithm = Literal["scan", "exdpc", "approxdpc", "sapproxdpc",
+                    "lsh_ddp", "cfsfdp_a"]
+
+
+@dataclass(frozen=True)
+class DPCConfig:
+    d_cut: float
+    rho_min: float = 10.0
+    delta_min: float | None = None      # default 2 * d_cut (must be > d_cut)
+    algorithm: Algorithm = "approxdpc"
+    eps: float = 0.8                    # S-Approx-DPC only
+    grid_dims: int | None = None        # candidate-grid dims (default min(d,3))
+    block: int = 256
+
+    def resolved_delta_min(self) -> float:
+        dm = 2.0 * self.d_cut if self.delta_min is None else self.delta_min
+        if dm <= self.d_cut:
+            raise ValueError("delta_min must exceed d_cut (Def. 5)")
+        return dm
+
+
+_RUNNERS = {
+    "scan": lambda p, c: run_scan(p, c.d_cut, block=max(c.block, 256)),
+    "exdpc": lambda p, c: run_exdpc(p, c.d_cut, g=c.grid_dims, block=c.block),
+    "approxdpc": lambda p, c: run_approxdpc(p, c.d_cut, g=c.grid_dims, block=c.block),
+    "sapproxdpc": lambda p, c: run_sapproxdpc(p, c.d_cut, eps=c.eps,
+                                              g=c.grid_dims, block=c.block),
+    "lsh_ddp": lambda p, c: run_lsh_ddp(p, c.d_cut),
+    "cfsfdp_a": lambda p, c: run_cfsfdp_a(p, c.d_cut),
+}
+
+
+def compute_dpc(points, config: DPCConfig) -> DPCResult:
+    """rho/delta/dependent-point computation with the configured algorithm."""
+    return _RUNNERS[config.algorithm](jnp.asarray(points, jnp.float32), config)
+
+
+def cluster(points, config: DPCConfig) -> tuple[Clustering, DPCResult]:
+    res = compute_dpc(points, config)
+    out = assign_labels(res, config.rho_min, config.resolved_delta_min())
+    return out, res
+
+
+__all__ = ["DPCConfig", "DPCResult", "Clustering", "compute_dpc", "cluster",
+           "assign_labels", "decision_graph"]

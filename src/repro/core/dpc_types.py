@@ -1,0 +1,35 @@
+"""Shared DPC result types and the density tie-break rule.
+
+The paper assumes all local densities are distinct, "which is practically
+possible by adding a random value in (0,1) to rho_i" (§3).  We use a
+*deterministic* jitter — a fixed pseudo-random permutation of point indices
+scaled into (0,1) — so results are reproducible and checkpoint/restart replays
+bit-identically (DESIGN.md §9.4).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+_KNUTH = 2654435761  # Fibonacci hashing multiplier
+
+
+class DPCResult(NamedTuple):
+    rho: jnp.ndarray     # (n,) float32 — integer local density (self included)
+    rho_key: jnp.ndarray  # (n,) float32 — rho + jitter, all-distinct comparison key
+    delta: jnp.ndarray   # (n,) float32 — dependent distance (inf for global peak)
+    parent: jnp.ndarray  # (n,) int32 — dependent point (original index); -1 = none
+
+
+def density_jitter(n: int) -> jnp.ndarray:
+    """Deterministic all-distinct jitter in (0, 1), one value per point."""
+    idx = jnp.arange(n, dtype=jnp.uint32)
+    h = (idx * jnp.uint32(_KNUTH)) ^ (idx >> 13)
+    # distinct ranks -> distinct jitter; +0.5 keeps it strictly inside (0,1)
+    rank = jnp.argsort(jnp.argsort(h))
+    return (rank.astype(jnp.float32) + 0.5) / jnp.float32(n)
+
+
+def with_jitter(rho: jnp.ndarray) -> jnp.ndarray:
+    return rho.astype(jnp.float32) + density_jitter(rho.shape[0])

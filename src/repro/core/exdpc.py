@@ -1,0 +1,71 @@
+"""Ex-DPC (§3): the exact algorithm, TPU-adapted.
+
+Paper mechanism: kd-tree range search for rho; incrementally-rebuilt kd-tree
+over density-sorted points for delta (which the paper proves cannot be
+parallelized).  TPU adaptation (DESIGN.md §2): grid-stencil range count for
+rho; for delta, the invariant "the tree contains exactly the denser points"
+becomes a *static masked search* — first the d_cut stencil (exact whenever a
+denser point exists within d_cut, i.e. the paper's Lemma-2 alpha fraction),
+then a global masked-NN fallback for the few stencil-unresolved points.
+Output is exact — bit-equal to the O(n^2) Scan oracle (tested).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from .dpc_types import DPCResult, with_jitter
+from .grid import build_grid, Grid
+from .stencil import density_per_point, dependent_stencil, masked_nn_rows
+
+
+def _pow2_pad(m: int) -> int:
+    p = 1
+    while p < m:
+        p *= 2
+    return p
+
+
+def resolve_fallback(points, rho_key, delta, parent, resolved, block=4096):
+    """Global masked-NN for stencil-unresolved rows (host-orchestrated)."""
+    unresolved = np.asarray(~resolved).nonzero()[0]
+    if unresolved.size == 0:
+        return delta, parent
+    m = _pow2_pad(unresolved.size)
+    rows = np.pad(unresolved, (0, m - unresolved.size))
+    q_pts = points[rows]
+    q_rk = jnp.asarray(rho_key)[rows]
+    fdelta, fparent = masked_nn_rows(q_pts, q_rk, points, rho_key, block=block)
+    fdelta = np.asarray(fdelta)[: unresolved.size]
+    fparent = np.asarray(fparent)[: unresolved.size]
+    delta = np.asarray(delta).copy()
+    parent = np.asarray(parent).copy()
+    # the single global density peak keeps delta = inf, parent = -1 (Def. 3)
+    delta[unresolved] = np.where(np.isfinite(fdelta), fdelta, np.inf)
+    parent[unresolved] = fparent
+    return jnp.asarray(delta), jnp.asarray(parent)
+
+
+def run_exdpc(points, d_cut: float, *, g: int | None = None,
+              block: int = 256, fallback_block: int = 4096,
+              grid: Grid | None = None) -> DPCResult:
+    points = jnp.asarray(points, jnp.float32)
+    if grid is None:
+        grid = build_grid(points, d_cut, g=g)
+
+    rho_sorted = density_per_point(grid, block=block)
+    rho = rho_sorted[grid.inv_order]
+    rho_key = with_jitter(rho)
+
+    rk_sorted = rho_key[grid.order]
+    delta_s, parent_s, resolved_s = dependent_stencil(grid, rk_sorted, block=block)
+    # back to original indexing
+    delta = delta_s[grid.inv_order]
+    parent_sorted = parent_s[grid.inv_order]
+    parent = jnp.where(parent_sorted >= 0, grid.order[parent_sorted], -1).astype(jnp.int32)
+    resolved = resolved_s[grid.inv_order]
+
+    delta, parent = resolve_fallback(points, rho_key, delta, parent, resolved,
+                                     block=fallback_block)
+    return DPCResult(rho=rho, rho_key=rho_key, delta=delta,
+                     parent=parent.astype(jnp.int32))

@@ -1,0 +1,202 @@
+"""Uniform-grid cell lists: the TPU-native replacement for the paper's kd-tree.
+
+The paper indexes P with a kd-tree (range search / NN search) plus, for
+Approx-DPC, a uniform grid G with cell side d_cut/sqrt(d).  Pointer-chased
+trees do not map to TPU, so this module provides the adapted structure used by
+every algorithm in ``repro.core``:
+
+* a *grouping* grid with side ``d_cut/sqrt(d)`` over all ``d`` dims — same-cell
+  diameter < d_cut, exactly the paper's G (used by Approx-DPC rule 1 and
+  S-Approx-DPC representatives);
+* a *candidate* grid over ``g = min(d, 3)`` leading dims with side
+  ``ceil(sqrt(d)) * d_cut/sqrt(d) >= d_cut`` — any point within Euclidean
+  distance d_cut lies in one of the 3^g neighbouring candidate cells, so a
+  radius-d_cut search is a gather over a **constant stencil** of cells.  The
+  candidate grid is a coarsening of the grouping grid on the leading dims, so a
+  single sort by (candidate-cell, grouping-cell) key makes *both* partitions
+  contiguous.  Stencil cells that share a (g-1)-prefix are merged into one
+  contiguous span, so a search touches only ``3^(g-1)`` gathers.
+
+All arrays are fixed-shape; capacities (max span length, max members per cell)
+are measured at build time on the host, which is the standard JAX cell-list
+pattern (capacities are data statistics, not traced values).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class Grid:
+    """Sorted cell-list view of a point set (all indices refer to sorted order).
+
+    Array fields are pytree children; capacities/dims are static metadata so
+    jitted consumers specialize on them (they shape the gathers).
+    """
+
+    points: jnp.ndarray        # (n, d) float32, sorted by (candidate, grouping) key
+    order: jnp.ndarray         # (n,)  original index of sorted slot i
+    inv_order: jnp.ndarray     # (n,)  sorted slot of original index i
+    cand_key: jnp.ndarray      # (n,)  int64 candidate-cell key, non-decreasing
+    group_key: jnp.ndarray     # (n,)  int64 grouping-cell key (refines cand_key order)
+    cand_coords: jnp.ndarray   # (n, g) int32 candidate-cell coords per point
+    cand_extent: jnp.ndarray   # (g,)  int64 number of candidate cells per dim
+    cand_strides: jnp.ndarray  # (g,)  int64 mixed-radix strides of cand key
+    # Unique candidate cells (padded to n with sentinel key):
+    cell_keys: jnp.ndarray     # (n,) int64, unique candidate keys ascending then sentinel
+    cell_start: jnp.ndarray    # (n,) int32 first sorted slot of each cell
+    cell_count: jnp.ndarray    # (n,) int32 members per cell
+    point_cell: jnp.ndarray    # (n,) int32 unique-cell index of each sorted point
+    num_cells: int = field(metadata=dict(static=True))  # python int (static)
+    # static capacities
+    span_cap: int = field(metadata=dict(static=True))   # max span length
+    cell_cap: int = field(metadata=dict(static=True))   # max members per cell
+    g: int = field(metadata=dict(static=True))          # gridded dims
+    d: int = field(metadata=dict(static=True))
+    d_cut: float = field(metadata=dict(static=True))
+
+
+SENTINEL = jnp.iinfo(jnp.int64).max
+
+
+def _num_prefix_offsets(g: int) -> int:
+    return 3 ** max(g - 1, 0)
+
+
+def prefix_offsets(g: int) -> np.ndarray:
+    """All {-1,0,1}^(g-1) offsets over the leading g-1 candidate dims."""
+    if g <= 1:
+        return np.zeros((1, 0), dtype=np.int64)
+    grids = np.meshgrid(*([np.array([-1, 0, 1])] * (g - 1)), indexing="ij")
+    return np.stack([a.ravel() for a in grids], axis=-1).astype(np.int64)
+
+
+def build_grid(points: jnp.ndarray, d_cut: float, g: int | None = None) -> Grid:
+    """Build the two-level sorted cell list.  Host-level (measures capacities)."""
+    points = jnp.asarray(points, jnp.float32)
+    n, d = points.shape
+    if g is None:
+        g = min(d, 3)
+    side_group = d_cut / math.sqrt(d)            # paper's G side (Def. §4.1)
+    q = max(int(math.ceil(math.sqrt(d))), 1)     # coarsening factor
+    side_cand = q * side_group                   # >= d_cut -> stencil reach 1
+
+    lo = jnp.min(points, axis=0)
+    gcoords = jnp.floor((points - lo) / side_group).astype(jnp.int64)  # (n, d)
+    ccoords = gcoords[:, :g] // q                                      # (n, g)
+
+    # mixed-radix encode; extents from data (dynamic values, static shapes)
+    c_ext = jnp.max(ccoords, axis=0) + 1                               # (g,)
+    g_ext = jnp.max(gcoords, axis=0) + 1                               # (d,)
+    c_strides = jnp.flip(jnp.cumprod(jnp.flip(jnp.concatenate([c_ext[1:], jnp.ones((1,), jnp.int64)]))))
+    g_strides = jnp.flip(jnp.cumprod(jnp.flip(jnp.concatenate([g_ext[1:], jnp.ones((1,), jnp.int64)]))))
+    cand_key = (ccoords * c_strides).sum(-1)
+    group_key = (gcoords * g_strides).sum(-1)
+
+    # one sort makes candidate cells contiguous and grouping cells contiguous
+    # within them (cand key is coarser on the leading dims).
+    sort_key = cand_key * (jnp.max(group_key) + 1) + group_key
+    order = jnp.argsort(sort_key)
+    inv_order = jnp.argsort(order)
+
+    pts_s = points[order]
+    cand_s = cand_key[order]
+    group_s = group_key[order]
+    ccoords_s = ccoords[order].astype(jnp.int32)
+
+    # unique candidate cells, padded to n
+    is_first = jnp.concatenate([jnp.ones((1,), bool), cand_s[1:] != cand_s[:-1]])
+    num_cells = int(jnp.sum(is_first))
+    first_slots = jnp.nonzero(is_first, size=n, fill_value=n - 1)[0].astype(jnp.int32)
+    cell_keys = jnp.where(jnp.arange(n) < num_cells, cand_s[first_slots], SENTINEL)
+    cell_start = jnp.where(jnp.arange(n) < num_cells, first_slots, n).astype(jnp.int32)
+    nxt = jnp.concatenate([cell_start[1:], jnp.full((1,), n, jnp.int32)])
+    cell_count = jnp.where(jnp.arange(n) < num_cells, nxt - cell_start, 0).astype(jnp.int32)
+    point_cell = (jnp.cumsum(is_first) - 1).astype(jnp.int32)
+
+    # measured capacities (host sync — cell-list build is a host-level op)
+    cell_cap = int(jnp.max(cell_count))
+    # span = 3 consecutive last-dim cells sharing a prefix offset: bounded by the
+    # occupancy of 3 adjacent cells; measure exactly via searchsorted per offset.
+    offs = prefix_offsets(g)
+    starts, ends = _span_bounds(
+        ccoords_s[first_slots[:num_cells].astype(jnp.int32)] if num_cells < n else ccoords_s[first_slots],
+        jnp.asarray(offs), c_ext, c_strides, cand_s, g)
+    span_cap = int(jnp.max(ends - starts)) if num_cells > 0 else 0
+
+    return Grid(points=pts_s, order=order, inv_order=inv_order,
+                cand_key=cand_s, group_key=group_s, cand_coords=ccoords_s,
+                cand_extent=c_ext, cand_strides=c_strides,
+                cell_keys=cell_keys, cell_start=cell_start, cell_count=cell_count,
+                point_cell=point_cell, num_cells=num_cells,
+                span_cap=max(span_cap, 1), cell_cap=max(cell_cap, 1),
+                g=g, d=d, d_cut=float(d_cut))
+
+
+def _span_bounds(coords, offs, extent, strides, cand_sorted, g):
+    """[start, end) sorted-slot bounds of each (cell, prefix-offset) span.
+
+    coords: (m, g) candidate coords of the query cells; offs: (S, g-1).
+    Returns (m, S) int32 starts and ends.  Out-of-range prefix offsets yield
+    empty spans.  The span covers last-dim coords {c-1, c, c+1} clamped.
+    """
+    m = coords.shape[0]
+    S = offs.shape[0]
+    c = coords.astype(jnp.int64)[:, None, :]                        # (m,1,g)
+    if g > 1:
+        pref = c[..., :-1] + offs[None, :, :]                       # (m,S,g-1)
+        valid = jnp.all((pref >= 0) & (pref < extent[:-1]), axis=-1)
+    else:
+        pref = jnp.zeros((m, S, 0), jnp.int64)
+        valid = jnp.ones((m, S), bool)
+    last = c[..., -1]                                               # (m,1)
+    lo_last = jnp.maximum(last - 1, 0)
+    hi_last = jnp.minimum(last + 1, extent[-1] - 1)
+    base = (pref * strides[:-1]).sum(-1) if g > 1 else jnp.zeros((m, S), jnp.int64)
+    key_lo = base + lo_last * strides[-1]
+    key_hi = base + hi_last * strides[-1]
+    starts = jnp.searchsorted(cand_sorted, key_lo, side="left")
+    ends = jnp.searchsorted(cand_sorted, key_hi, side="right")
+    starts = jnp.where(valid, starts, 0).astype(jnp.int32)
+    ends = jnp.where(valid, ends, 0).astype(jnp.int32)
+    ends = jnp.maximum(ends, starts)
+    return starts, ends
+
+
+def point_span_bounds(grid: Grid) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per sorted-point candidate spans: (n, S) starts and ends."""
+    offs = jnp.asarray(prefix_offsets(grid.g))
+    return _span_bounds(grid.cand_coords, offs, grid.cand_extent,
+                        grid.cand_strides, grid.cand_key, grid.g)
+
+
+def cell_span_bounds(grid: Grid) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per unique-cell candidate spans: (n, S) starts/ends (padded cells empty)."""
+    first = jnp.minimum(grid.cell_start, grid.points.shape[0] - 1).astype(jnp.int32)
+    coords = grid.cand_coords[first]
+    offs = jnp.asarray(prefix_offsets(grid.g))
+    starts, ends = _span_bounds(coords, offs, grid.cand_extent,
+                                grid.cand_strides, grid.cand_key, grid.g)
+    alive = (jnp.arange(grid.cell_keys.shape[0]) < grid.num_cells)[:, None]
+    return jnp.where(alive, starts, 0), jnp.where(alive, ends, 0)
+
+
+def gather_window(arr: jnp.ndarray, start: jnp.ndarray, length: int):
+    """Gather ``arr[start : start+length]`` rows with clamping; returns (length, ...)."""
+    idx = start + jnp.arange(length)
+    idx_c = jnp.minimum(idx, arr.shape[0] - 1)
+    return arr[idx_c], idx
+
+
+def sq_dists(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Squared Euclidean distances (|A|, |B|) in the MXU-friendly expanded form."""
+    a2 = jnp.sum(a * a, axis=-1)[:, None]
+    b2 = jnp.sum(b * b, axis=-1)[None, :]
+    ab = a @ b.T
+    return jnp.maximum(a2 + b2 - 2.0 * ab, 0.0)

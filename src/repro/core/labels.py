@@ -1,0 +1,65 @@
+"""Noise/center selection (Defs. 4-5) and cluster label propagation (Def. 6).
+
+The paper propagates labels by DFS from each center.  DFS is sequential; the
+TPU-native equivalent is pointer jumping (path doubling) on the dependency
+forest: ``parent <- parent[parent]`` for ceil(log2 n) rounds.  Chains ascend
+strictly in density, so the forest is acyclic and every non-noise point reaches
+its center; noise (rho < rho_min) can only depend on denser noise, so noise
+never contaminates a cluster (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .dpc_types import DPCResult
+
+
+class Clustering(NamedTuple):
+    labels: jnp.ndarray    # (n,) int32 — cluster id 0..k-1, -1 for noise
+    centers: jnp.ndarray   # (n,) bool  — cluster-center mask
+    num_clusters: jnp.ndarray  # () int32
+
+
+def select_centers(res: DPCResult, rho_min: float, delta_min: float):
+    noise = res.rho < rho_min
+    centers = (~noise) & (res.delta >= delta_min)
+    return centers, noise
+
+
+@jax.jit
+def _propagate(parent: jnp.ndarray, roots: jnp.ndarray) -> jnp.ndarray:
+    """Pointer-jump until every point points at its root (roots are self-loops)."""
+    n = parent.shape[0]
+    p = jnp.where(roots, jnp.arange(n, dtype=parent.dtype), parent)
+    # global density peak has parent -1; make it a self-loop root as well
+    p = jnp.where(p < 0, jnp.arange(n, dtype=parent.dtype), p)
+    steps = max(int(math.ceil(math.log2(max(n, 2)))), 1)
+
+    def body(p, _):
+        return p[p], None
+
+    p, _ = jax.lax.scan(body, p, None, length=steps)
+    return p
+
+
+def assign_labels(res: DPCResult, rho_min: float, delta_min: float) -> Clustering:
+    centers, noise = select_centers(res, rho_min, delta_min)
+    root = _propagate(res.parent, centers)
+    # densify center ids -> cluster labels 0..k-1
+    cid = jnp.cumsum(centers.astype(jnp.int32)) - 1           # label at center slots
+    labels = cid[root]
+    # a point whose root is not a center (its chain tops out at a noise peak or
+    # the global peak below delta_min) is unassigned -> noise
+    reached = centers[root]
+    labels = jnp.where(noise | ~reached, -1, labels).astype(jnp.int32)
+    return Clustering(labels=labels, centers=centers,
+                      num_clusters=jnp.sum(centers.astype(jnp.int32)))
+
+
+def decision_graph(res: DPCResult):
+    """(rho_i, delta_i) pairs for the paper's Fig. 1 decision graph."""
+    return jnp.stack([res.rho, res.delta], axis=-1)

@@ -1,0 +1,32 @@
+"""Clustering quality metrics: Rand index (paper Tables 2-5)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def rand_index(labels_a, labels_b) -> float:
+    """Rand index between two labelings; noise (-1) is treated as a label.
+
+    Computed from the contingency table: RI = 1 - (A + B - 2*AB) / C(n,2) where
+    A/B are same-pair counts of each labeling and AB of the intersection.
+    """
+    a = np.asarray(labels_a).astype(np.int64)
+    b = np.asarray(labels_b).astype(np.int64)
+    assert a.shape == b.shape
+    n = a.shape[0]
+    if n < 2:
+        return 1.0
+    _, a = np.unique(a, return_inverse=True)
+    _, b = np.unique(b, return_inverse=True)
+    ka, kb = a.max() + 1, b.max() + 1
+    cont = np.zeros((ka, kb), dtype=np.int64)
+    np.add.at(cont, (a, b), 1)
+
+    def comb2(x):
+        return (x * (x - 1)) // 2
+
+    sum_ab = comb2(cont).sum()
+    sum_a = comb2(cont.sum(axis=1)).sum()
+    sum_b = comb2(cont.sum(axis=0)).sum()
+    total = comb2(np.int64(n))
+    return float((total + 2 * sum_ab - sum_a - sum_b) / total)

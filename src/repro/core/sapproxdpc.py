@@ -1,0 +1,128 @@
+"""S-Approx-DPC (§5): grid sampling + cell-based clustering.
+
+A coarse grid G' with side eps*d_cut/sqrt(d) picks one *representative* per
+cell; only representatives do range searches (exact rho) and dependent-point
+searches; the remaining points chain to their representative in O(1).  Point
+clustering becomes cell clustering — range-search count drops from n to |G'|.
+
+Phase 1 (paper): a denser representative within (1+eps)*d_cut can be taken as
+the approximate dependent (we use the d_cut stencil, a subset of that bound,
+so the paper's (1+eps)*d_cut delta bound holds a fortiori).
+Phase 2: unresolved representatives get their exact nearest denser
+representative.  The paper prunes with temporal clusters + triangle
+inequality (a CPU work-saving trick); the TPU form is one blocked masked-NN
+over the (small) unresolved set — same output, dense schedule (DESIGN.md §2).
+
+Members: parent = representative, delta = min(eps,1)*d_cut (< delta_min, so
+members are never centers — matching "rho_min/centers are not applicable to
+non-picked points"), rho = representative's rho.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .dpc_types import DPCResult, with_jitter
+from .exdpc import _pow2_pad
+from .grid import build_grid, Grid
+from .stencil import density_for_slots, dependent_stencil_slots, masked_nn_rows
+
+
+def coarse_cell_key(points: jnp.ndarray, d_cut: float, eps: float) -> jnp.ndarray:
+    n, d = points.shape
+    side = eps * d_cut / math.sqrt(d)
+    lo = jnp.min(points, axis=0)
+    coords = jnp.floor((points - lo) / side).astype(jnp.int64)
+    ext = jnp.max(coords, axis=0) + 1
+    strides = jnp.flip(jnp.cumprod(jnp.flip(jnp.concatenate([ext[1:], jnp.ones((1,), jnp.int64)]))))
+    return (coords * strides).sum(-1)
+
+
+def run_sapproxdpc(points, d_cut: float, eps: float = 0.8, *,
+                   g: int | None = None, block: int = 256,
+                   fallback_block: int = 4096,
+                   grid: Grid | None = None) -> DPCResult:
+    points = jnp.asarray(points, jnp.float32)
+    n = points.shape[0]
+    if grid is None:
+        grid = build_grid(points, d_cut, g=g)
+
+    # --- representatives: first point of each coarse cell in grid-sorted order
+    ckey_sorted = coarse_cell_key(grid.points, d_cut, eps)
+    order_c = jnp.argsort(ckey_sorted, stable=True)
+    ck = ckey_sorted[order_c]
+    is_first = jnp.concatenate([jnp.ones((1,), bool), ck[1:] != ck[:-1]])
+    seg = (jnp.cumsum(is_first) - 1).astype(jnp.int32)     # coarse segment ids
+    num_reps = int(jnp.sum(is_first))
+    # rep slot (grid-sorted index) per coarse segment
+    rep_slot_per_seg = jax.ops.segment_min(
+        jnp.where(is_first, order_c, n).astype(jnp.int32), seg, num_segments=n)
+    rep_slots = np.asarray(rep_slot_per_seg[:num_reps])
+    m_pad = _pow2_pad(max(num_reps, 1))
+    rep_slots_p = jnp.asarray(np.pad(rep_slots, (0, m_pad - num_reps),
+                                     constant_values=n))
+
+    # --- exact rho for representatives only ---
+    rep_rho = density_for_slots(grid, rep_slots_p, block=block)[:num_reps]
+
+    # rho per point: members inherit their representative's rho
+    rho_sorted = jnp.zeros((n,), jnp.float32)
+    seg_of_sorted = jnp.zeros((n,), jnp.int32).at[order_c].set(seg)
+    rep_rho_per_seg = jnp.zeros((n,), jnp.float32).at[
+        jnp.arange(num_reps)].set(rep_rho)
+    rho_sorted = rep_rho_per_seg[seg_of_sorted]
+    rho = rho_sorted[grid.inv_order]
+    rho_key = with_jitter(rho)
+    rk_sorted = rho_key[grid.order]
+
+    # --- phase 1: stencil among representatives (d_cut ⊂ (1+eps)d_cut bound) --
+    rep_mask_sorted = jnp.zeros((n,), bool).at[jnp.minimum(rep_slots_p, n - 1)].set(
+        rep_slots_p < n)
+    rk_reps_only = jnp.where(rep_mask_sorted, rk_sorted, -jnp.inf)
+    p1_delta, p1_parent, p1_found = dependent_stencil_slots(
+        grid, rk_reps_only, rep_slots_p, block=block)
+    # The paper's phase-1 search radius is (1+eps)*d_cut and stamps that bound
+    # as the delta.  Our stencil only resolves within d_cut, so d_cut is the
+    # valid *and tighter* bound — resolved reps can never become spurious
+    # centers at large eps (beyond-paper improvement, DESIGN.md §9).
+    p1_delta = jnp.where(p1_found, jnp.float32(d_cut), jnp.inf)
+
+    # --- phase 2: exact NN among representatives for unresolved reps ---
+    found_np = np.asarray(p1_found[:num_reps])
+    unresolved = np.nonzero(~found_np)[0]
+    rep_pts = grid.points[jnp.asarray(rep_slots)]
+    rep_rk = rk_sorted[jnp.asarray(rep_slots)]
+    p2_delta = np.asarray(p1_delta[:num_reps]).copy()
+    p2_parent = np.asarray(p1_parent[:num_reps]).copy()   # grid-sorted slots
+    if unresolved.size:
+        mq = _pow2_pad(unresolved.size)
+        qs = np.pad(unresolved, (0, mq - unresolved.size))
+        fd, fp = masked_nn_rows(rep_pts[qs], rep_rk[qs], rep_pts, rep_rk,
+                                block=fallback_block)
+        fd = np.asarray(fd)[: unresolved.size]
+        fp = np.asarray(fp)[: unresolved.size]            # rep-index space
+        p2_delta[unresolved] = np.where(np.isfinite(fd), fd, np.inf)
+        p2_parent[unresolved] = np.where(fp >= 0, rep_slots[np.maximum(fp, 0)], -1)
+
+    # --- assemble per-point delta/parent in sorted space ---
+    rep_parent_per_seg = jnp.full((n,), -1, jnp.int32).at[
+        jnp.arange(num_reps)].set(jnp.asarray(p2_parent))
+    rep_delta_per_seg = jnp.full((n,), jnp.inf).at[
+        jnp.arange(num_reps)].set(jnp.asarray(p2_delta))
+    rep_slot_of_seg = jnp.full((n,), -1, jnp.int32).at[
+        jnp.arange(num_reps)].set(jnp.asarray(rep_slots))
+
+    member_delta = jnp.float32(min(eps, 1.0) * d_cut)
+    is_rep_sorted = rep_mask_sorted
+    parent_s = jnp.where(is_rep_sorted, rep_parent_per_seg[seg_of_sorted],
+                         rep_slot_of_seg[seg_of_sorted])
+    delta_s = jnp.where(is_rep_sorted, rep_delta_per_seg[seg_of_sorted],
+                        member_delta)
+
+    delta = delta_s[grid.inv_order]
+    parent_sorted = parent_s[grid.inv_order]
+    parent = jnp.where(parent_sorted >= 0, grid.order[parent_sorted], -1).astype(jnp.int32)
+    return DPCResult(rho=rho, rho_key=rho_key, delta=delta, parent=parent)

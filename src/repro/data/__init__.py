@@ -1,0 +1,1 @@
+"""Data pipelines: synthetic point sets (DPC) and token streams (LM)."""

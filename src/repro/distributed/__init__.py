@@ -1,0 +1,4 @@
+"""Distributed DPC runtime (shard_map) + sharding utilities."""
+from .dpc import DistDPCConfig, distributed_dpc
+
+__all__ = ["DistDPCConfig", "distributed_dpc"]

@@ -1,0 +1,388 @@
+"""Multi-chip DPC: the paper's multicore parallelization as shard_map SPMD.
+
+Mapping (DESIGN.md §2/§4):
+
+* OpenMP ``schedule(dynamic)``  ->  *space-sorted equal-count partitioning*:
+  points are globally sorted by grid cell id (the build_grid sort), then
+  split into equal contiguous chunks over the ``data`` mesh axis.  Sorting
+  groups dense cells together, so equal point counts imply similar candidate
+  volumes — the paper's cost model (cost ∝ |P(c)|) baked into the layout.
+* Shared-memory reads of P  ->  an explicit ``all_gather`` of the sorted
+  point table (baseline) or a ring of ``ppermute`` block exchanges
+  (optimized; see benchmarks/roofline notes).  DPC datasets are O(1e6-1e7)
+  rows of 2-8 f32s, so a replicated table is ~100 MB — the standard
+  time/space trade at pod scale.
+* Ex-DPC's sequential kd-tree delta  ->  the stencil + masked-NN fallback
+  (exact; parallel over rows), as in core/exdpc.py.
+* Label propagation (DFS)  ->  pointer jumping on replicated parents
+  (core/labels.py), cheap enough to run replicated.
+
+Phases (each a shard_map over the ``data`` axis; fixed shapes throughout):
+
+1. rho:    my rows x gathered table, grid-stencil range count.
+2. delta:  my rows x gathered table, stencil NN among denser rows
+           (resolves the paper's alpha fraction exactly).
+3. fallback: stencil-unresolved rows (padded to a static cap) x gathered
+           table, dense masked NN — the (1-alpha) remainder.
+
+Everything is exact: output equals core.run_exdpc / run_scan (tested).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.dpc_types import DPCResult, with_jitter
+from repro.core.grid import build_grid, point_span_bounds
+
+
+@dataclass(frozen=True)
+class DistDPCConfig:
+    d_cut: float
+    block: int = 256            # row block inside each shard
+    data_axis: str = "data"
+    fallback_cap_factor: float = 0.05   # static cap: fraction of n (padded)
+    # 'gather': replicate the sorted table per shard (baseline; traffic =
+    #   n*d per device).  'halo': ring-ppermute only the blocks that
+    #   intersect each shard's stencil window (traffic = (W+m)*d — the
+    #   space-sorted layout makes candidate windows narrow; §Perf).
+    strategy: str = "gather"
+
+
+def _pad_rows(x, m, value):
+    pad = [(0, m - x.shape[0])] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad, constant_values=value)
+
+
+def _blocked(n, block):
+    return -(-n // block)
+
+
+def _halo_window(tbl_my, lo_my, axis, n_shards: int, W: int,
+                 hops_fwd: int, hops_bwd: int):
+    """Assemble each shard's candidate window [lo, lo+W) via ppermute rings.
+
+    tbl_my: (m, ...) my block of the sorted table; lo_my: (1,) my window
+    start.  Two chains: pass-left delivers blocks AFTER mine (hop h sees
+    block s+h), pass-right delivers blocks BEFORE mine (hop h sees s-h);
+    rows whose global index falls inside my window are copied in.  Traffic
+    per shard = (hops_fwd + hops_bwd) * m * rowbytes, vs n * rowbytes for
+    the all-gather baseline — the space-sorted layout keeps windows narrow.
+    """
+    m = tbl_my.shape[0]
+    my_id = jax.lax.axis_index(axis)
+    lo = lo_my[0]
+    wrow = lo + jnp.arange(W)                        # global row of window w
+    wblock = wrow // m                               # owning block
+    wpos = wrow % m
+    left = [(i, (i - 1) % n_shards) for i in range(n_shards)]
+    right = [(i, (i + 1) % n_shards) for i in range(n_shards)]
+
+    def take_into(window, visiting, vid):
+        take = wblock == vid
+        rows = visiting[jnp.minimum(wpos, m - 1)]
+        return jnp.where(take.reshape((W,) + (1,) * (tbl_my.ndim - 1)),
+                         rows, window)
+
+    window = jnp.zeros((W,) + tbl_my.shape[1:], tbl_my.dtype)
+    visiting = tbl_my
+    for h in range(hops_fwd + 1):                    # h=0: my own block
+        window = take_into(window, visiting, (my_id + h) % n_shards)
+        if h < hops_fwd:
+            visiting = jax.lax.ppermute(visiting, axis, left)
+    visiting = tbl_my
+    for h in range(1, hops_bwd + 1):
+        visiting = jax.lax.ppermute(visiting, axis, right)
+        window = take_into(window, visiting, (my_id - h) % n_shards)
+    return window
+
+
+def _make_rho_halo(axis, d_cut, block, span_w, n_shards, W, hf, hb):
+    d2cut = jnp.float32(d_cut) ** 2
+
+    def rho(my_pts, my_starts, my_ends, tbl_my, lo_my):
+        window = _halo_window(tbl_my, lo_my, axis, n_shards, W, hf, hb)
+        m = my_pts.shape[0]
+        lo = lo_my[0]
+        nb = _blocked(m, block)
+        mp = nb * block
+        pts_p = _pad_rows(my_pts, mp, 0.0)
+        st_p = _pad_rows(my_starts, mp, 0)
+        en_p = _pad_rows(my_ends, mp, 0)
+
+        def chunk(i0):
+            rows = jax.lax.dynamic_slice_in_dim(pts_p, i0, block, 0)
+            st = jax.lax.dynamic_slice_in_dim(st_p, i0, block, 0) - lo
+            en = jax.lax.dynamic_slice_in_dim(en_p, i0, block, 0) - lo
+            idx = st[..., None] + jnp.arange(span_w, dtype=st.dtype)
+            valid = (idx < en[..., None]) & (idx >= 0)
+            cand = window[jnp.clip(idx, 0, W - 1)]
+            d2 = jnp.sum((rows[:, None, None, :] - cand) ** 2, axis=-1)
+            return jnp.sum((d2 < d2cut) & valid, axis=(1, 2))
+
+        cnt = jax.lax.map(chunk, jnp.arange(nb) * block).reshape(-1)[:m]
+        return cnt.astype(jnp.float32)
+
+    return rho
+
+
+def _make_delta_halo(axis, d_cut, block, span_w, n_shards, W, hf, hb):
+    d2cut = jnp.float32(d_cut) ** 2
+
+    def delta(my_pts, my_rk, my_starts, my_ends, tbl_my, rk_my, lo_my):
+        both = jnp.concatenate([tbl_my, rk_my[:, None]], axis=1)
+        wboth = _halo_window(both, lo_my, axis, n_shards, W, hf, hb)
+        window, wrk = wboth[:, :-1], wboth[:, -1]
+        m = my_pts.shape[0]
+        lo = lo_my[0]
+        nb = _blocked(m, block)
+        mp = nb * block
+        pts_p = _pad_rows(my_pts, mp, 0.0)
+        rk_p = _pad_rows(my_rk, mp, jnp.inf)
+        st_p = _pad_rows(my_starts, mp, 0)
+        en_p = _pad_rows(my_ends, mp, 0)
+
+        def chunk(i0):
+            rows = jax.lax.dynamic_slice_in_dim(pts_p, i0, block, 0)
+            rk = jax.lax.dynamic_slice_in_dim(rk_p, i0, block, 0)
+            st = jax.lax.dynamic_slice_in_dim(st_p, i0, block, 0) - lo
+            en = jax.lax.dynamic_slice_in_dim(en_p, i0, block, 0) - lo
+            idx = st[..., None] + jnp.arange(span_w, dtype=st.dtype)
+            valid = (idx < en[..., None]) & (idx >= 0)
+            idx_c = jnp.clip(idx, 0, W - 1)
+            cand = window[idx_c]
+            cand_rk = wrk[idx_c]
+            d2 = jnp.sum((rows[:, None, None, :] - cand) ** 2, axis=-1)
+            mask = valid & (cand_rk > rk[:, None, None]) & (d2 < d2cut)
+            d2m = jnp.where(mask, d2, jnp.inf).reshape(block, -1)
+            j = jnp.argmin(d2m, axis=1)
+            best = d2m[jnp.arange(block), j]
+            # local window idx -> global sorted slot
+            pidx = (idx_c.reshape(block, -1)[jnp.arange(block), j]
+                    + lo).astype(jnp.int32)
+            ok = jnp.isfinite(best)
+            return (jnp.sqrt(best),
+                    jnp.where(ok, pidx, -1).astype(jnp.int32), ok)
+
+        dd, pp, ff = jax.lax.map(chunk, jnp.arange(nb) * block)
+        return (dd.reshape(-1)[:m], pp.reshape(-1)[:m], ff.reshape(-1)[:m])
+
+    return delta
+
+
+def _make_rho(axis, d_cut, block, span_w):
+    d2cut = jnp.float32(d_cut) ** 2
+
+    def rho(my_pts, my_starts, my_ends, tbl_my):
+        tbl = jax.lax.all_gather(tbl_my, axis, axis=0, tiled=True)
+        n = tbl.shape[0]
+        m = my_pts.shape[0]
+        nb = _blocked(m, block)
+        mp = nb * block
+        pts_p = _pad_rows(my_pts, mp, 0.0)
+        st_p = _pad_rows(my_starts, mp, 0)
+        en_p = _pad_rows(my_ends, mp, 0)
+
+        def chunk(i0):
+            rows = jax.lax.dynamic_slice_in_dim(pts_p, i0, block, 0)
+            st = jax.lax.dynamic_slice_in_dim(st_p, i0, block, 0)
+            en = jax.lax.dynamic_slice_in_dim(en_p, i0, block, 0)
+            idx = st[..., None] + jnp.arange(span_w, dtype=st.dtype)
+            valid = idx < en[..., None]
+            cand = tbl[jnp.minimum(idx, n - 1)]
+            d2 = jnp.sum((rows[:, None, None, :] - cand) ** 2, axis=-1)
+            return jnp.sum((d2 < d2cut) & valid, axis=(1, 2))
+
+        cnt = jax.lax.map(chunk, jnp.arange(nb) * block).reshape(-1)[:m]
+        return cnt.astype(jnp.float32)
+
+    return rho
+
+
+def _make_delta(axis, d_cut, block, span_w):
+    d2cut = jnp.float32(d_cut) ** 2
+
+    def delta(my_pts, my_rk, my_starts, my_ends, tbl_my, rk_my):
+        tbl = jax.lax.all_gather(tbl_my, axis, axis=0, tiled=True)
+        rk_all = jax.lax.all_gather(rk_my, axis, axis=0, tiled=True)
+        n = tbl.shape[0]
+        m = my_pts.shape[0]
+        nb = _blocked(m, block)
+        mp = nb * block
+        pts_p = _pad_rows(my_pts, mp, 0.0)
+        rk_p = _pad_rows(my_rk, mp, jnp.inf)
+        st_p = _pad_rows(my_starts, mp, 0)
+        en_p = _pad_rows(my_ends, mp, 0)
+
+        def chunk(i0):
+            rows = jax.lax.dynamic_slice_in_dim(pts_p, i0, block, 0)
+            rk = jax.lax.dynamic_slice_in_dim(rk_p, i0, block, 0)
+            st = jax.lax.dynamic_slice_in_dim(st_p, i0, block, 0)
+            en = jax.lax.dynamic_slice_in_dim(en_p, i0, block, 0)
+            idx = st[..., None] + jnp.arange(span_w, dtype=st.dtype)
+            valid = idx < en[..., None]
+            idx_c = jnp.minimum(idx, n - 1)
+            cand = tbl[idx_c]
+            cand_rk = rk_all[idx_c]
+            d2 = jnp.sum((rows[:, None, None, :] - cand) ** 2, axis=-1)
+            mask = valid & (cand_rk > rk[:, None, None]) & (d2 < d2cut)
+            d2m = jnp.where(mask, d2, jnp.inf).reshape(block, -1)
+            j = jnp.argmin(d2m, axis=1)
+            best = d2m[jnp.arange(block), j]
+            pidx = idx_c.reshape(block, -1)[jnp.arange(block), j]
+            ok = jnp.isfinite(best)
+            return (jnp.sqrt(best),
+                    jnp.where(ok, pidx, -1).astype(jnp.int32), ok)
+
+        dd, pp, ff = jax.lax.map(chunk, jnp.arange(nb) * block)
+        return (dd.reshape(-1)[:m], pp.reshape(-1)[:m], ff.reshape(-1)[:m])
+
+    return delta
+
+
+def _make_fallback(axis, block):
+    def fallback(q_pts, q_rk, tbl_my, rk_my):
+        """Dense masked NN for unresolved rows (padded, rk=+inf rows inert)."""
+        tbl = jax.lax.all_gather(tbl_my, axis, axis=0, tiled=True)
+        rk_all = jax.lax.all_gather(rk_my, axis, axis=0, tiled=True)
+        n = tbl.shape[0]
+        m = q_pts.shape[0]
+        nb = _blocked(n, block)
+        npad = nb * block
+        tbl_p = _pad_rows(tbl, npad, 0.0)
+        rk_p = _pad_rows(rk_all, npad, -jnp.inf)
+
+        def col(j0):
+            cols = jax.lax.dynamic_slice_in_dim(tbl_p, j0, block, 0)
+            crk = jax.lax.dynamic_slice_in_dim(rk_p, j0, block, 0)
+            d2 = jnp.sum((q_pts[:, None, :] - cols[None, :, :]) ** 2, -1)
+            d2 = jnp.where(crk[None, :] > q_rk[:, None], d2, jnp.inf)
+            j = jnp.argmin(d2, axis=1)
+            return d2[jnp.arange(m), j], (j0 + j).astype(jnp.int32)
+
+        d2s, js = jax.lax.map(col, jnp.arange(nb) * block)
+        kk = jnp.argmin(d2s, axis=0)
+        best = d2s[kk, jnp.arange(m)]
+        parent = jnp.where(jnp.isfinite(best), js[kk, jnp.arange(m)], -1)
+        return jnp.sqrt(best), parent.astype(jnp.int32)
+
+    return fallback
+
+
+def distributed_dpc(points, cfg: DistDPCConfig, mesh: Mesh) -> DPCResult:
+    """Exact DPC (Ex-DPC semantics) on a device mesh.  Host-orchestrated
+    phases, each an SPMD shard_map over cfg.data_axis."""
+    points = jnp.asarray(points, jnp.float32)
+    n_orig, d = points.shape
+    S_data = math.prod(mesh.devices.shape)  # shard over ALL mesh axes' product
+    axis = cfg.data_axis
+    # flatten every mesh axis into the data dimension for DPC: the paper's
+    # algorithm is data-parallel only (the model axis is reused as more
+    # workers).  A dedicated 1-axis view keeps specs simple.
+    flat_mesh = Mesh(mesh.devices.reshape(-1), (axis,))
+    S_data = flat_mesh.devices.size
+
+    grid = build_grid(points, cfg.d_cut)
+    n = grid.points.shape[0]
+    starts, ends = point_span_bounds(grid)          # (n, S_spans)
+    span_w = grid.span_cap
+    # pad rows to a multiple of the shard count; padded rows are inert
+    m = -(-n // S_data) * S_data
+    pts_s = _pad_rows(grid.points, m, 1e9)
+    starts_p = _pad_rows(starts, m, 0).astype(jnp.int32)
+    ends_p = _pad_rows(ends, m, 0).astype(jnp.int32)
+
+    halo = cfg.strategy == "halo"
+    if halo:
+        # per-shard window bounds from the span table (host: data statistic)
+        rows_per = m // S_data
+        st_np = np.asarray(starts_p).reshape(S_data, rows_per, -1)
+        en_np = np.asarray(ends_p).reshape(S_data, rows_per, -1)
+        nonempty = en_np > st_np
+        lo_s = np.where(nonempty, st_np, np.iinfo(np.int64).max) \
+                 .reshape(S_data, -1).min(axis=1)
+        hi_s = en_np.reshape(S_data, -1).max(axis=1)
+        starts_block = np.arange(S_data) * rows_per
+        lo_s = np.minimum(lo_s, starts_block)
+        hi_s = np.maximum(hi_s, starts_block + rows_per)
+        W = int((hi_s - lo_s).max())
+        # ring reach in blocks, forward and backward of each shard's own
+        hf = int(min(S_data - 1,
+                     -(-max(int((hi_s - starts_block - rows_per).max()), 0)
+                       // rows_per)))
+        hb = int(min(S_data - 1,
+                     -(-max(int((starts_block - lo_s).max()), 0)
+                       // rows_per)))
+        lo_arr = jnp.asarray(lo_s[:, None].astype(np.int64))  # (S, 1)
+
+        rho_fn = _make_rho_halo(axis, cfg.d_cut, cfg.block, span_w,
+                                S_data, W, hf, hb)
+        sm_rho = shard_map(rho_fn, mesh=flat_mesh,
+                           in_specs=(P(axis),) * 5, out_specs=P(axis))
+        rho_sorted = jax.jit(sm_rho)(pts_s, starts_p, ends_p, pts_s,
+                                     lo_arr)[:n]
+    else:
+        rho_fn = _make_rho(axis, cfg.d_cut, cfg.block, span_w)
+        sm_rho = shard_map(rho_fn, mesh=flat_mesh,
+                           in_specs=(P(axis), P(axis), P(axis), P(axis)),
+                           out_specs=P(axis))
+        rho_sorted = jax.jit(sm_rho)(pts_s, starts_p, ends_p, pts_s)[:n]
+
+    rho = rho_sorted[grid.inv_order]
+    rho_key = with_jitter(rho)
+    rk_sorted_full = _pad_rows(rho_key[grid.order], m, -jnp.inf)
+    # queries must carry +inf keys on padded rows so they never match
+    rk_query = _pad_rows(rho_key[grid.order], m, jnp.inf)
+    if halo:
+        delta_fn = _make_delta_halo(axis, cfg.d_cut, cfg.block, span_w,
+                                    S_data, W, hf, hb)
+        sm_delta = shard_map(delta_fn, mesh=flat_mesh,
+                             in_specs=(P(axis),) * 7,
+                             out_specs=(P(axis), P(axis), P(axis)))
+        dlt_s, par_s, ok_s = jax.jit(sm_delta)(
+            pts_s, rk_query, starts_p, ends_p, pts_s, rk_sorted_full,
+            lo_arr)
+    else:
+        delta_fn = _make_delta(axis, cfg.d_cut, cfg.block, span_w)
+        sm_delta = shard_map(delta_fn, mesh=flat_mesh,
+                             in_specs=(P(axis),) * 6,
+                             out_specs=(P(axis), P(axis), P(axis)))
+        dlt_s, par_s, ok_s = jax.jit(sm_delta)(
+            pts_s, rk_query, starts_p, ends_p, pts_s, rk_sorted_full)
+    dlt_s, par_s, ok_s = dlt_s[:n], par_s[:n], ok_s[:n]
+
+    # ---- fallback for stencil-unresolved rows (exact, the 1-alpha tail)
+    unresolved = np.nonzero(~np.asarray(ok_s))[0]
+    if unresolved.size:
+        cap = max(S_data, int(-(-unresolved.size // S_data) * S_data))
+        q_idx = np.pad(unresolved, (0, cap - unresolved.size),
+                       constant_values=0)
+        q_pts = grid.points[jnp.asarray(q_idx)]
+        q_rk = jnp.asarray(np.where(
+            np.arange(cap) < unresolved.size,
+            np.asarray(rho_key[grid.order])[q_idx], np.inf))
+        fb_fn = _make_fallback(axis, max(cfg.block, 1024))
+        sm_fb = shard_map(fb_fn, mesh=flat_mesh,
+                          in_specs=(P(axis), P(axis), P(axis), P(axis)),
+                          out_specs=(P(axis), P(axis)))
+        fd, fp = jax.jit(sm_fb)(q_pts, q_rk, pts_s, rk_sorted_full)
+        fd = np.asarray(fd)[: unresolved.size]
+        fp = np.asarray(fp)[: unresolved.size]
+        dlt = np.asarray(dlt_s).copy()
+        par = np.asarray(par_s).copy()
+        dlt[unresolved] = np.where(np.isfinite(fd), fd, np.inf)
+        par[unresolved] = fp
+        dlt_s, par_s = jnp.asarray(dlt), jnp.asarray(par)
+
+    delta = dlt_s[grid.inv_order]
+    parent_sorted = par_s[grid.inv_order]
+    parent = jnp.where(parent_sorted >= 0, grid.order[parent_sorted],
+                       -1).astype(jnp.int32)
+    return DPCResult(rho=rho, rho_key=rho_key, delta=delta, parent=parent)

@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for DPC's two compute hot spots (+ jnp oracles)."""
+from .ops import dependent_masked, dependent_prefix, local_density
+
+__all__ = ["local_density", "dependent_prefix", "dependent_masked"]

@@ -1,0 +1,70 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode for
+correctness; on TPU they compile to Mosaic.  ``pad_points`` implements the
+padding contract shared by all kernels (rows padded at PAD_COORD, far outside
+any d_cut; padded output rows sliced off).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .density import PAD_COORD, range_count
+from .dependent import masked_min_dist, prefix_min_dist
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def pad_points(x: jnp.ndarray, multiple: int) -> jnp.ndarray:
+    n = x.shape[0]
+    npad = -(-n // multiple) * multiple
+    return jnp.pad(x, ((0, npad - n), (0, 0)), constant_values=PAD_COORD)
+
+
+def pad_vec(x: jnp.ndarray, multiple: int, value) -> jnp.ndarray:
+    n = x.shape[0]
+    npad = -(-n // multiple) * multiple
+    return jnp.pad(x, (0, npad - n), constant_values=value)
+
+
+def local_density(points: jnp.ndarray, d_cut: float, *,
+                  block_n: int = 256, block_m: int = 512,
+                  interpret: bool | None = None) -> jnp.ndarray:
+    """Kernel-backed all-pairs local density (Scan's rho on TPU)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    n = points.shape[0]
+    x = pad_points(points.astype(jnp.float32), block_n)
+    y = pad_points(points.astype(jnp.float32), block_m)
+    cnt = range_count(x, y, d_cut, block_n=block_n, block_m=block_m,
+                      interpret=interpret)
+    return cnt[:n].astype(jnp.float32)
+
+
+def dependent_prefix(points_sorted_desc: jnp.ndarray, *, block: int = 256,
+                     interpret: bool | None = None):
+    """Kernel-backed triangular dependent-point pass (rows pre-sorted)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    n = points_sorted_desc.shape[0]
+    x = pad_points(points_sorted_desc.astype(jnp.float32), block)
+    delta, parent = prefix_min_dist(x, block=block, interpret=interpret)
+    return delta[:n], parent[:n]
+
+
+def dependent_masked(x, x_key, y, y_key, *, block_n: int = 128,
+                     block_m: int = 256, interpret: bool | None = None):
+    """Kernel-backed masked NN fallback (strictly-denser candidates)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    n = x.shape[0]
+    xp = pad_points(x.astype(jnp.float32), block_n)
+    xk = pad_vec(x_key.astype(jnp.float32), block_n, jnp.inf)
+    yp = pad_points(y.astype(jnp.float32), block_m)
+    yk = pad_vec(y_key.astype(jnp.float32), block_m, -jnp.inf)
+    delta, parent = masked_min_dist(xp, xk, yp, yk, block_n=block_n,
+                                    block_m=block_m, interpret=interpret)
+    return delta[:n], parent[:n]

@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for the Pallas kernels (the ground truth in kernel tests)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def range_count_ref(x: jnp.ndarray, y: jnp.ndarray, d_cut: float) -> jnp.ndarray:
+    """For each row of x: |{j : ||x_i - y_j|| < d_cut}| (direct-diff form)."""
+    d2 = jnp.sum((x[:, None, :] - y[None, :, :]) ** 2, axis=-1)
+    return jnp.sum(d2 < jnp.float32(d_cut) ** 2, axis=1).astype(jnp.int32)
+
+
+def prefix_min_dist_ref(pts: jnp.ndarray):
+    """Prefix NN: for each i, min_j<i ||p_i - p_j|| and its argmin.
+
+    Rows must be sorted by descending density key, so j < i == "j is denser"
+    (Ex-DPC's incremental-tree invariant as a static iteration space).
+    """
+    n = pts.shape[0]
+    d2 = jnp.sum((pts[:, None, :] - pts[None, :, :]) ** 2, axis=-1)
+    mask = jnp.arange(n)[None, :] < jnp.arange(n)[:, None]
+    d2 = jnp.where(mask, d2, jnp.inf)
+    arg = jnp.argmin(d2, axis=1)
+    best = d2[jnp.arange(n), arg]
+    return jnp.sqrt(best), jnp.where(jnp.isfinite(best), arg, -1).astype(jnp.int32)
+
+
+def masked_min_dist_ref(x, x_key, y, y_key):
+    """For each row of x: nearest y with y_key strictly greater (+argmin)."""
+    d2 = jnp.sum((x[:, None, :] - y[None, :, :]) ** 2, axis=-1)
+    d2 = jnp.where(y_key[None, :] > x_key[:, None], d2, jnp.inf)
+    arg = jnp.argmin(d2, axis=1)
+    best = d2[jnp.arange(x.shape[0]), arg]
+    return jnp.sqrt(best), jnp.where(jnp.isfinite(best), arg, -1).astype(jnp.int32)

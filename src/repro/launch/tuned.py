@@ -1,0 +1,26 @@
+"""Per-(architecture, step-kind) tuned launch settings (EXPERIMENTS.md §Perf).
+
+The dry-run/launcher applies these with ``--tuned``; without the flag every
+arch runs the uniform paper-faithful baseline layout (DP=16 x TP=16,
+microbatches=8, scatter MoE dispatch) so the baseline records stay
+reproducible.
+
+Settings are keyed by step kind because the optimum depends on the batch
+geometry: mamba2's data-only mesh needs global_batch >= 256 (train_4k), and
+actively hurts prefill_32k (batch 32 cannot shard 256 ways — measured 10x
+flops regression when applied blindly; see §Perf cell 2 notes).
+"""
+
+TUNED: dict[str, dict[str, dict]] = {
+    # model dims (H=24, d_model=768) cannot use 16-way tensor parallelism:
+    # fold the model axis into data parallelism for TRAINING; per-device
+    # batch of one sequence needs no gradient accumulation.
+    # (flops/dev /8.3, coll /31 — EXPERIMENTS.md §Perf cell 2)
+    "mamba2-130m": {"train": {"data_only": True, "microbatches": 1}},
+}
+
+
+def launch_kwargs(arch: str, kind: str, tuned: bool) -> dict:
+    if not tuned:
+        return {}
+    return dict(TUNED.get(arch, {}).get(kind, {}))

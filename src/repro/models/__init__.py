@@ -1,0 +1,5 @@
+"""Model zoo: the 10 assigned architectures as composable JAX modules."""
+from .common import ArchConfig
+from .model_api import build_model, Model
+
+__all__ = ["ArchConfig", "build_model", "Model"]

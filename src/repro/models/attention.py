@@ -1,0 +1,122 @@
+"""GQA/MQA attention with RoPE, sliding windows, prefix-LM masks and KV caches.
+
+Memory discipline: training/prefill attention is chunked over the query axis
+(lax.scan) so the live score tensor is (B, H, q_chunk, Lk) — a 4k x 4k f32
+score matrix per layer would otherwise dominate HBM at the assigned shapes.
+Softmax/logit arithmetic is f32; inputs/outputs bf16.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ArchConfig, apply_rope, rope_angles, softcap, mscan
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray  # (B, S, n_kv, head_dim) bf16
+    v: jnp.ndarray  # (B, S, n_kv, head_dim) bf16
+    # number of valid positions is tracked by the serving engine
+
+
+def attn_mask(q_pos, k_pos, *, causal: bool, window: int | None,
+              prefix_len: int | None, k_valid=None):
+    """Boolean mask (..., Lq, Lk). True = attend."""
+    m = jnp.ones(q_pos.shape[:-1] + (q_pos.shape[-1], k_pos.shape[-1]), bool)
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    if causal:
+        c = kp <= qp
+        if prefix_len is not None:
+            c = c | (kp < prefix_len)
+        m = m & c
+    if window is not None:
+        m = m & (kp > qp - window)
+    if k_valid is not None:
+        m = m & k_valid[..., None, :]
+    return m
+
+
+def _sdpa(q, k, v, mask, cfg: ArchConfig):
+    """q: (B, Lq, K, G, hd); k/v: (B, Lk, K, hd); mask: (B or 1, Lq, Lk)."""
+    scale = cfg.head_dim ** -0.5
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = softcap(logits, cfg.attn_logit_softcap)
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    return out
+
+
+def attention(q, k, v, q_positions, k_positions, cfg: ArchConfig, *,
+              causal=True, window=None, prefix_len=None, k_valid=None,
+              q_chunk: int = 512):
+    """q: (B, Lq, H, hd); k/v: (B, Lk, K, hd).  Chunked over Lq.
+
+    q_positions/k_positions: (Lq,)/(Lk,) absolute positions (RoPE applied by
+    the caller).  Returns (B, Lq, H, hd).
+    """
+    B, Lq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, Lq, K, G, hd)
+
+    if Lq <= q_chunk:
+        mask = attn_mask(jnp.broadcast_to(q_positions, (B, Lq)),
+                         jnp.broadcast_to(k_positions, (B, k.shape[1])),
+                         causal=causal, window=window, prefix_len=prefix_len,
+                         k_valid=k_valid)
+        out = _sdpa(qg, k, v, mask, cfg)
+        return out.reshape(B, Lq, H, hd)
+
+    assert Lq % q_chunk == 0, "query length must be divisible by q_chunk"
+    nq = Lq // q_chunk
+    qg = qg.reshape(B, nq, q_chunk, K, G, hd)
+    qp = q_positions.reshape(nq, q_chunk)
+
+    def body(_, inp):
+        q_i, qp_i = inp
+        mask = attn_mask(jnp.broadcast_to(qp_i, (B, q_chunk)),
+                         jnp.broadcast_to(k_positions, (B, k.shape[1])),
+                         causal=causal, window=window, prefix_len=prefix_len,
+                         k_valid=k_valid)
+        return None, _sdpa(q_i, k, v, mask, cfg)
+
+    _, out = mscan(body, None,
+                          (jnp.moveaxis(qg, 1, 0), qp))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, Lq, K, G, hd)
+    return out.reshape(B, Lq, H, hd)
+
+
+def qkv_project(x, wq, wk, wv, cfg: ArchConfig, positions):
+    """x: (B, L, d) -> RoPE'd q (B,L,H,hd), k/v (B,L,K,hd)."""
+    q = jnp.einsum("bld,dnh->blnh", x, wq)
+    k = jnp.einsum("bld,dnh->blnh", x, wk)
+    v = jnp.einsum("bld,dnh->blnh", x, wv)
+    cos, sin = rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def out_project(o, wo):
+    """o: (B, L, H, hd) x wo (H, hd, d) -> (B, L, d)."""
+    return jnp.einsum("blnh,nhd->bld", o, wo)
+
+
+def seq_update(arr, new, slot):
+    """dynamic_update_slice at sequence position ``slot`` (axis 1) for a
+    (B, S, heads, head_dim) buffer; index dtypes are unified (x64-safe)."""
+    slot = jnp.asarray(slot)
+    z = jnp.zeros((), slot.dtype)
+    return jax.lax.dynamic_update_slice(arr, new.astype(arr.dtype),
+                                        (z, slot, z, z))
+
+
+def update_cache(cache: KVCache, k_new, v_new, pos) -> KVCache:
+    """Write k/v at [pos : pos+Lnew) (decode Lnew=1; prefill writes a prompt)."""
+    return KVCache(k=seq_update(cache.k, k_new, pos),
+                   v=seq_update(cache.v, v_new, pos))

@@ -1,0 +1,227 @@
+"""Shared model config, layers, init and sharding helpers.
+
+All parameters are stored in bf16 (training keeps f32 masters in the
+optimizer state — see repro.train.optimizer); all norms/softmax/losses
+accumulate in f32.  Parameter pytrees are plain nested dicts; a parallel
+pytree of PartitionSpecs is produced by ``*_specs`` functions using logical
+sharding rules resolved against the mesh axis sizes (a kv-head axis smaller
+than the model axis falls back to replication, e.g. MQA).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+# --------------------------------------------------------------- scan shim
+# XLA's cost_analysis counts a while-loop body ONCE, not x trip-count, so the
+# dry-run's roofline pass lowers a separate fully-unrolled "cost program"
+# (launch/dryrun.py).  All model scans go through ``mscan`` so that pass can
+# flip them to unroll without touching call sites.
+_UNROLL_SCANS = False
+
+
+@contextlib.contextmanager
+def unroll_scans(enable: bool = True):
+    global _UNROLL_SCANS
+    old = _UNROLL_SCANS
+    _UNROLL_SCANS = enable
+    try:
+        yield
+    finally:
+        _UNROLL_SCANS = old
+
+
+def mscan(body, init, xs, length=None):
+    n = length
+    if n is None:
+        n = jax.tree.leaves(xs)[0].shape[0]
+    return jax.lax.scan(body, init, xs, length=length,
+                        unroll=n if _UNROLL_SCANS else 1)
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | encoder | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    activation: str = "swiglu"   # swiglu | geglu
+    rope_theta: float = 10000.0
+    sliding_window: int | None = None
+    attn_logit_softcap: float | None = None
+    final_logit_softcap: float | None = None
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    embed_scale: bool = False    # gemma-style sqrt(d) embedding scaling
+    # moe
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    n_experts_padded: int = 0   # pad expert count to a shardable multiple
+    # ssm (mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    # hybrid (recurrentgemma): block pattern, local-attn window, rnn width
+    pattern: tuple = ()
+    local_window: int = 0
+    rnn_width: int = 0
+    # modality frontends (STUBS: inputs are precomputed embeddings)
+    frontend_dim: int = 0        # audio frame / vision patch feature dim
+    num_patches: int = 0         # vlm image tokens per example
+    is_causal: bool = True
+    dtype: Any = jnp.bfloat16
+
+    def replace(self, **kw):
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // max(self.n_kv_heads, 1)
+
+
+# ---------------------------------------------------------------- sharding
+@dataclass(frozen=True)
+class MeshRules:
+    """Logical-axis -> mesh-axis rules, resolved against axis sizes."""
+    data_axes: tuple = ("data",)      # ('pod','data') on the multi-pod mesh
+    model_axis: str = "model"
+    axis_sizes: dict | None = None    # name -> size (for divisibility checks)
+
+    def model(self, dim_size: int):
+        """Shard over the model axis if divisible, else replicate.
+
+        model_axis=None disables tensor parallelism entirely (small archs
+        fold the model axis into data parallelism instead — §Perf)."""
+        if self.model_axis is None:
+            return None
+        if self.axis_sizes is not None:
+            m = self.axis_sizes.get(self.model_axis, 1)
+            if dim_size % m != 0 or dim_size < m:
+                return None
+        return self.model_axis
+
+    @property
+    def data(self):
+        return self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
+
+    def data_if(self, dim_size: int):
+        """Shard over the data axes if divisible, else replicate."""
+        if self.axis_sizes is not None:
+            total = 1
+            for a in self.data_axes:
+                total *= self.axis_sizes.get(a, 1)
+            if dim_size % total != 0 or dim_size < total:
+                return None
+        return self.data
+
+
+def logical_to_spec(rules: MeshRules, *axes_and_sizes):
+    """Build a PartitionSpec from (logical_axis, dim_size) pairs.
+
+    Logical axes: 'model' (tensor-parallel), 'data' (batch), None (replicated).
+    """
+    parts = []
+    for logical, size in axes_and_sizes:
+        if logical == "model":
+            parts.append(rules.model(size))
+        elif logical == "data":
+            parts.append(rules.data)
+        else:
+            parts.append(None)
+    return P(*parts)
+
+
+def constrain(x, spec: P):
+    """with_sharding_constraint that is a no-op outside a mesh context."""
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x
+
+
+# ----------------------------------------------------------------- layers
+def rms_norm(x, gamma, eps: float):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + gamma.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions: (...,) int32 -> cos/sin (..., head_dim/2) in f32."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., seq, heads, head_dim); cos/sin: (..., seq, head_dim/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(jnp.float32)
+    s = sin[..., None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([x1f * c - x2f * s, x2f * c + x1f * s],
+                           axis=-1).astype(x.dtype)
+
+
+def softcap(x, cap: float | None):
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def glu_ffn(x, w_in, w_out, activation: str):
+    """SwiGLU/GeGLU: w_in (d, 2, ff) fused gate+up, w_out (ff, d)."""
+    h = jnp.einsum("...d,dcf->...cf", x, w_in)
+    gate, up = h[..., 0, :], h[..., 1, :]
+    act = jax.nn.silu if activation == "swiglu" else (
+        lambda g: jax.nn.gelu(g, approximate=True))
+    hidden = act(gate.astype(jnp.float32)).astype(x.dtype) * up
+    return jnp.einsum("...f,fd->...d", hidden, w_out)
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Token cross-entropy in f32; mask selects contributing positions."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# -------------------------------------------------------------------- init
+def dense_init(key, shape, dtype, in_axis: int = 0):
+    fan_in = shape[in_axis]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2, 2, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.truncated_normal(key, -2, 2, shape, jnp.float32)).astype(dtype)
+
+
+def split_tree(key, tree_def_dict):
+    """Split a PRNG key into a dict matching tree_def_dict's keys."""
+    keys = jax.random.split(key, len(tree_def_dict))
+    return dict(zip(tree_def_dict, keys))

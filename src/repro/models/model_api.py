@@ -1,0 +1,116 @@
+"""Uniform Model facade over the four family implementations.
+
+Every family exposes: init / loss_fn / param_specs, and (for decoder archs)
+init_cache / cache_specs / prefill / decode_step.  ``build_model(cfg)``
+dispatches on cfg.family so the trainer, server, dry-run and benchmarks are
+architecture-agnostic.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax.numpy as jnp
+
+from . import moe, rglru, ssm, transformer as tfm
+from .common import ArchConfig, MeshRules
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable[..., Any]            # (key) -> params
+    loss_fn: Callable[..., Any]         # (params, batch, rules=None) -> loss
+    param_specs: Callable[..., Any]     # (rules) -> PartitionSpec pytree
+    init_cache: Callable[..., Any] | None = None   # (batch, max_len) -> cache
+    cache_specs: Callable[..., Any] | None = None  # (rules) -> spec pytree
+    prefill: Callable[..., Any] | None = None      # (params, batch, cache, rules)
+    decode_step: Callable[..., Any] | None = None  # (params, cache, tok, pos, rules)
+
+    @property
+    def is_decoder(self) -> bool:
+        return self.decode_step is not None
+
+
+def _tfm_prefill(params, batch, cfg, cache, rules=None, q_chunk: int = 512):
+    if cfg.family == "vlm" and "patches" in batch:
+        return tfm.vlm_prefill(params, batch, cfg, cache, rules=rules,
+                               q_chunk=q_chunk)
+    return tfm.prefill(params, batch["tokens"], cfg, cache, rules=rules,
+                       q_chunk=q_chunk)
+
+
+def _moe_prefill(params, batch, cfg, cache, rules=None, q_chunk: int = 512):
+    return moe.prefill(params, batch["tokens"], cfg, cache, rules=rules,
+                       q_chunk=q_chunk)
+
+
+def _ssm_prefill(params, batch, cfg, cache, rules=None, q_chunk: int = 512):
+    return ssm.prefill(params, batch["tokens"], cfg, cache, rules=rules,
+                       q_chunk=q_chunk)
+
+
+def _rglru_prefill(params, batch, cfg, cache, rules=None, q_chunk: int = 512):
+    return rglru.prefill(params, batch["tokens"], cfg, cache, rules=rules,
+                         q_chunk=q_chunk)
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.family in ("dense", "encoder", "vlm"):
+        decoder = cfg.family != "encoder"
+        return Model(
+            cfg=cfg,
+            init=lambda key: tfm.init_params(cfg, key),
+            loss_fn=lambda p, b, rules=None, **kw: tfm.loss_fn(
+                p, b, cfg, rules=rules, **kw),
+            param_specs=lambda rules: tfm.param_specs(cfg, rules),
+            init_cache=(lambda b, s: tfm.init_cache(cfg, b, s)) if decoder else None,
+            cache_specs=(lambda rules: tfm.cache_specs(cfg, rules)) if decoder else None,
+            prefill=(lambda p, b, c, rules=None, **kw: _tfm_prefill(
+                p, b, cfg, c, rules=rules, **kw)) if decoder else None,
+            decode_step=(lambda p, c, t, pos, rules=None: tfm.decode_step(
+                p, c, t, pos, cfg, rules=rules)) if decoder else None,
+        )
+    if cfg.family == "moe":
+        return Model(
+            cfg=cfg,
+            init=lambda key: moe.init_params(cfg, key),
+            loss_fn=lambda p, b, rules=None, **kw: moe.loss_fn(
+                p, b, cfg, rules=rules, **kw),
+            param_specs=lambda rules: moe.param_specs(cfg, rules),
+            init_cache=lambda b, s: tfm.init_cache(cfg, b, s),
+            cache_specs=lambda rules: tfm.cache_specs(cfg, rules),
+            prefill=lambda p, b, c, rules=None, **kw: _moe_prefill(
+                p, b, cfg, c, rules=rules, **kw),
+            decode_step=lambda p, c, t, pos, rules=None: moe.decode_step(
+                p, c, t, pos, cfg, rules=rules),
+        )
+    if cfg.family == "ssm":
+        return Model(
+            cfg=cfg,
+            init=lambda key: ssm.init_params(cfg, key),
+            loss_fn=lambda p, b, rules=None, **kw: ssm.loss_fn(
+                p, b, cfg, rules=rules, **kw),
+            param_specs=lambda rules: ssm.param_specs(cfg, rules),
+            init_cache=lambda b, s: ssm.init_cache(cfg, b, s),
+            cache_specs=lambda rules: ssm.cache_specs(cfg, rules),
+            prefill=lambda p, b, c, rules=None, **kw: _ssm_prefill(
+                p, b, cfg, c, rules=rules, **kw),
+            decode_step=lambda p, c, t, pos, rules=None: ssm.decode_step(
+                p, c, t, pos, cfg, rules=rules),
+        )
+    if cfg.family == "hybrid":
+        return Model(
+            cfg=cfg,
+            init=lambda key: rglru.init_params(cfg, key),
+            loss_fn=lambda p, b, rules=None, **kw: rglru.loss_fn(
+                p, b, cfg, rules=rules, **kw),
+            param_specs=lambda rules: rglru.param_specs(cfg, rules),
+            init_cache=lambda b, s: rglru.init_cache(cfg, b, s),
+            cache_specs=lambda rules: rglru.cache_specs(cfg, rules),
+            prefill=lambda p, b, c, rules=None, **kw: _rglru_prefill(
+                p, b, cfg, c, rules=rules, **kw),
+            decode_step=lambda p, c, t, pos, rules=None: rglru.decode_step(
+                p, c, t, pos, cfg, rules=rules),
+        )
+    raise ValueError(f"unknown family: {cfg.family}")

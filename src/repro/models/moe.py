@@ -1,0 +1,278 @@
+"""Mixture-of-Experts family: granite-moe-3b-a800m (40e top-8... per the
+assignment card: 32->40 experts top-8) and qwen3-moe-30b-a3b (128e top-8).
+
+Dispatch is sort-based (MegaBlocks/MaxText style): token->expert assignments
+are sorted by expert id, ranked within expert, dropped beyond capacity, and
+gathered into an (E, C, d) buffer that feeds one batched einsum per FFN
+matrix.  Under pjit the buffer is sharding-constrained to the model axis
+(expert parallelism); XLA inserts the token all-to-alls.  A Switch-style
+load-balancing aux loss is returned alongside.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import transformer as tfm
+from .attention import attention, out_project, qkv_project, seq_update
+from .common import (ArchConfig, MeshRules, constrain, dense_init,
+                     logical_to_spec, rms_norm, mscan)
+
+
+def _padded_experts(cfg: ArchConfig) -> int:
+    return max(cfg.n_experts_padded, cfg.n_experts)
+
+
+def init_layer_params(cfg: ArchConfig, key) -> dict:
+    ks = jax.random.split(key, 8)
+    d, H, K, hd, ff = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                       cfg.head_dim, cfg.d_ff)
+    Ep = _padded_experts(cfg)       # expert weights padded (shardable)
+    dt = cfg.dtype
+    return {
+        "ln1": jnp.zeros((d,), dt),
+        "wq": dense_init(ks[0], (d, H, hd), dt),
+        "wk": dense_init(ks[1], (d, K, hd), dt),
+        "wv": dense_init(ks[2], (d, K, hd), dt),
+        "wo": dense_init(ks[3], (H, hd, d), dt),
+        "ln2": jnp.zeros((d,), dt),
+        "router": dense_init(ks[4], (d, cfg.n_experts), jnp.float32),
+        "w_gate": dense_init(ks[5], (Ep, d, ff), dt),
+        "w_up": dense_init(ks[6], (Ep, d, ff), dt),
+        "w_down": dense_init(ks[7], (Ep, ff, d), dt),
+    }
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    kE, kL, kU = jax.random.split(key, 3)
+    params = {
+        "embed": tfm.embed_init(kE, (cfg.vocab, cfg.d_model), cfg.dtype),
+        "layers": jax.vmap(lambda k: init_layer_params(cfg, k))(
+            jax.random.split(kL, cfg.n_layers)),
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(kU, (cfg.d_model, cfg.vocab), cfg.dtype)
+    return params
+
+
+def param_specs(cfg: ArchConfig, rules: MeshRules) -> dict:
+    base = tfm.param_specs(cfg.replace(family="dense"), rules)
+    d, ff, E, L = (cfg.d_model, cfg.d_ff, _padded_experts(cfg),
+                   cfg.n_layers)
+
+    def spec(*ax):
+        return logical_to_spec(rules, *ax)
+
+    moe = {
+        "router": P(None, None, None),
+        "w_gate": spec((None, L), ("model", E), (None, d), (None, ff)),
+        "w_up": spec((None, L), ("model", E), (None, d), (None, ff)),
+        "w_down": spec((None, L), ("model", E), (None, ff), (None, d)),
+    }
+    layers = dict(base["layers"])
+    for k in ("w_in", "w_out"):
+        layers.pop(k, None)
+    layers.update(moe)
+    base["layers"] = layers
+    return base
+
+
+# Dispatch/combine formulation: 'scatter' builds the (E, C, d) buffer with
+# scatter-writes and combines with scatter-add — GSPMD lowers both as
+# replicated-compute + all-reduce.  'gather' scatters only int32 slot maps
+# (tiny) and moves activations with gathers, which GSPMD reshards with
+# all-gather/all-to-all instead — the §Perf collective-term iteration.
+import contextlib
+
+# Production default is the measured-better 'gather' mode (EXPERIMENTS.md
+# §Perf cell 1: 10.2x less collective traffic, 7.7x less HBM traffic on
+# qwen3-moe train_4k); 'scatter' reproduces the paper-faithful baseline
+# records (launch/dryrun.py --moe-scatter).
+DISPATCH_MODE = "gather"
+
+
+@contextlib.contextmanager
+def dispatch_mode(mode: str):
+    global DISPATCH_MODE
+    old = DISPATCH_MODE
+    DISPATCH_MODE = mode
+    try:
+        yield
+    finally:
+        DISPATCH_MODE = old
+
+
+def moe_ffn(x, lp, cfg: ArchConfig, rules: MeshRules | None):
+    """x: (B, L, d) -> (y, aux_loss). Sort-based top-k dispatch."""
+    B, L, d = x.shape
+    T = B * L
+    E, k = cfg.n_experts, cfg.top_k
+    Ep = _padded_experts(cfg)       # buffer/einsum expert count (shardable)
+    xt = x.reshape(T, d)
+
+    logits = (xt.astype(jnp.float32) @ lp["router"])          # (T, E) f32
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)                      # (T, k)
+    topw = topw / jnp.sum(topw, axis=-1, keepdims=True)
+
+    # Switch aux loss: E * sum_e f_e * P_e
+    dispatch_frac = jnp.mean(
+        jax.nn.one_hot(topi[:, 0], E, dtype=jnp.float32), axis=0)
+    router_frac = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(dispatch_frac * router_frac)
+
+    C = int(max(8, -(-T * k // E) * cfg.capacity_factor))
+    C = min(C, T)  # no point exceeding token count
+    C = -(-C // 32) * 32   # keep the capacity axis shardable over data
+    eflat = topi.reshape(-1)                                  # (T*k,)
+    sort_idx = jnp.argsort(eflat, stable=True)
+    sorted_e = eflat[sort_idx]
+    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    rank = jnp.arange(T * k) - first
+    keep = rank < C
+    dest = jnp.where(keep, sorted_e * C + rank, Ep * C)       # drop slot Ep*C
+    token_of = sort_idx // k
+
+    if DISPATCH_MODE == "gather":
+        # scatter only the int32 inverse map; activation movement = gather
+        slot_token = jnp.full((Ep * C + 1,), T, jnp.int32).at[dest].set(
+            token_of.astype(jnp.int32), mode="drop")[:Ep * C]
+        xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), x.dtype)], axis=0)
+        buf = xt_pad[jnp.minimum(slot_token, T)]
+    else:
+        buf = jnp.zeros((Ep * C, d), x.dtype).at[dest].set(xt[token_of],
+                                                           mode="drop")
+    buf = buf.reshape(Ep, C, d)
+    if rules is not None:
+        # expert parallelism over `model` AND capacity over `data`: the
+        # token all-to-all moves rows from the (data-sharded tokens) layout
+        # into the (E/model, C/data) buffer; both mesh axes do expert FLOPs
+        buf = constrain(buf, P(rules.model(Ep), rules.data_if(C), None))
+
+    gate = jnp.einsum("ecd,edf->ecf", buf, lp["w_gate"])
+    up = jnp.einsum("ecd,edf->ecf", buf, lp["w_up"])
+    hidden = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    out = jnp.einsum("ecf,efd->ecd", hidden, lp["w_down"])
+    if rules is not None:
+        out = constrain(out, P(rules.model(Ep), rules.data_if(C), None))
+
+    out_flat = out.reshape(Ep * C, d)
+    if DISPATCH_MODE == "gather":
+        # per-token gather of its k expert outputs (no scatter-add): the
+        # inverse of sort_idx maps (token, choice) -> sorted position
+        inv_sort = jnp.argsort(sort_idx)                  # (T*k,)
+        dest_tc = dest[inv_sort].reshape(T, k)            # slot per choice
+        keep_tc = keep[inv_sort].reshape(T, k)
+        got = out_flat[jnp.minimum(dest_tc, Ep * C - 1)]  # (T, k, d)
+        got = jnp.where(keep_tc[..., None], got, 0)
+        y = jnp.einsum("tkd,tk->td", got.astype(jnp.float32),
+                       topw).astype(x.dtype)
+        return y.reshape(B, L, d), aux
+    gathered = jnp.where(keep[:, None],
+                         out_flat[jnp.minimum(dest, Ep * C - 1)], 0)
+    w_flat = topw.reshape(-1)[sort_idx]
+    contrib = gathered * w_flat[:, None].astype(x.dtype)
+    y = jnp.zeros((T, d), x.dtype).at[token_of].add(contrib)
+    return y.reshape(B, L, d), aux
+
+
+def _block(x, lp, cfg: ArchConfig, positions, rules, q_chunk=512):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q, kk, vv = qkv_project(h, lp["wq"], lp["wk"], lp["wv"], cfg, positions)
+    o = attention(q, kk, vv, positions, positions, cfg, causal=True,
+                  window=cfg.sliding_window, q_chunk=q_chunk)
+    x = x + out_project(o, lp["wo"])
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    y, aux = moe_ffn(h, lp, cfg, rules)
+    x = x + y
+    if rules is not None:
+        x = constrain(x, P(rules.data, None, None))
+    return x, aux
+
+
+def forward(params, x, cfg: ArchConfig, positions, rules=None, remat=True,
+            q_chunk: int = 512):
+    def body(carry, lp):
+        h, aux = carry
+        h, a = _block(h, lp, cfg, positions, rules, q_chunk)
+        return (h, aux + a), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), _ = mscan(body, (x, jnp.float32(0.0)), params["layers"])
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), aux
+
+
+def loss_fn(params, batch, cfg: ArchConfig, rules=None, aux_weight=0.01,
+            q_chunk: int = 512):
+    tokens = batch["tokens"]
+    x = tfm.embed_tokens(params, tokens, cfg)
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+    h, aux = forward(params, x, cfg, positions, rules, q_chunk=q_chunk)
+    labels, lmask = tfm.shifted_labels(tokens)
+    ce = tfm.chunked_ce_loss(params, h, labels, cfg, mask=lmask, rules=rules)
+    return ce + aux_weight * aux / cfg.n_layers
+
+
+def decode_step(params, cache, tokens, pos, cfg: ArchConfig, rules=None):
+    B = tokens.shape[0]
+    x = tfm.embed_tokens(params, tokens, cfg)
+    S = cache.k.shape[2]
+    q_pos = jnp.full((1,), pos, jnp.int32)
+    k_pos = jnp.arange(S, dtype=jnp.int32)
+    k_valid = k_pos <= pos
+
+    def body(h, layer):
+        lp, kc, vc = layer
+        hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+        q, k_new, v_new = qkv_project(hn, lp["wq"], lp["wk"], lp["wv"], cfg,
+                                      q_pos)
+        kc = seq_update(kc, k_new, pos)
+        vc = seq_update(vc, v_new, pos)
+        o = attention(q, kc, vc, q_pos, k_pos, cfg, causal=True,
+                      k_valid=jnp.broadcast_to(k_valid, (B, S)))
+        h = h + out_project(o, lp["wo"])
+        hn = rms_norm(h, lp["ln2"], cfg.norm_eps)
+        y, _ = moe_ffn(hn, lp, cfg, rules)
+        h = h + y
+        return h, (kc, vc)
+
+    h, (k_all, v_all) = mscan(body, x, (params["layers"], cache.k,
+                                               cache.v))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = tfm.logits_at(params, h[:, -1, :], cfg)
+    return logits, tfm.KVCache(k=k_all, v=v_all)
+
+
+def prefill(params, tokens, cfg: ArchConfig, cache, rules=None,
+            q_chunk: int = 512):
+    B, L = tokens.shape
+    x = tfm.embed_tokens(params, tokens, cfg)
+    positions = jnp.arange(L, dtype=jnp.int32)
+    S = cache.k.shape[2]
+
+    def body(h, layer):
+        lp, kc, vc = layer
+        hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+        q, k_new, v_new = qkv_project(hn, lp["wq"], lp["wk"], lp["wv"], cfg,
+                                      positions)
+        o = attention(q, k_new, v_new, positions, positions, cfg, causal=True,
+                      q_chunk=q_chunk)
+        h = h + out_project(o, lp["wo"])
+        hn = rms_norm(h, lp["ln2"], cfg.norm_eps)
+        y, _ = moe_ffn(hn, lp, cfg, rules)
+        h = h + y
+        kc = jax.lax.dynamic_update_slice(
+            kc, k_new[:, -S:, :, :].astype(kc.dtype), (0, 0, 0, 0))
+        vc = jax.lax.dynamic_update_slice(
+            vc, v_new[:, -S:, :, :].astype(vc.dtype), (0, 0, 0, 0))
+        return h, (kc, vc)
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    h, (k_all, v_all) = mscan(body, x, (params["layers"], cache.k,
+                                               cache.v))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = tfm.logits_at(params, h[:, -1, :], cfg)
+    return logits, tfm.KVCache(k=k_all, v=v_all)

@@ -1,0 +1,439 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local attention
+in a repeating (rec, rec, attn) pattern — the recurrentgemma-9b architecture.
+
+The RG-LRU recurrence  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+with  a_t = exp(-c * r_t * softplus(L)) is a diagonal linear recurrence, so
+training/prefill use jax.lax.associative_scan over time (O(log L) depth);
+decode is the O(1) step.  Gates are block-diagonal (n_heads blocks), as in
+Griffin.  Layers that do not divide the pattern length form an explicit
+recurrent tail (38 = 12 x (rec,rec,attn) + 2 rec).
+
+Each layer = temporal block + GeGLU MLP, both pre-norm residual.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import transformer as tfm
+from .attention import attention, out_project, qkv_project, seq_update
+from .common import (ArchConfig, MeshRules, constrain, dense_init, glu_ffn,
+                     logical_to_spec, rms_norm, mscan)
+
+_C = 8.0  # Griffin's fixed gate sharpness
+
+
+def _counts(cfg: ArchConfig):
+    n_super = cfg.n_layers // 3
+    n_tail = cfg.n_layers - 3 * n_super        # trailing rec layers
+    return n_super, n_tail
+
+
+# ------------------------------------------------------------------- params
+def _mlp_params(cfg: ArchConfig, key):
+    k1, k2 = jax.random.split(key)
+    return {"ln2": jnp.zeros((cfg.d_model,), cfg.dtype),
+            "w_in": dense_init(k1, (cfg.d_model, 2, cfg.d_ff), cfg.dtype),
+            "w_out": dense_init(k2, (cfg.d_ff, cfg.d_model), cfg.dtype)}
+
+
+def _rec_params(cfg: ArchConfig, key):
+    d, w, nb = cfg.d_model, cfg.rnn_width, cfg.n_heads
+    bs = w // nb
+    ks = jax.random.split(key, 8)
+    dt = cfg.dtype
+    # init Lambda so that a^c is in ~[0.9, 0.999] at r = 1
+    u = jax.random.uniform(ks[7], (w,), jnp.float32, 0.9 ** 2, 0.999 ** 2)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / (2.0 * _C)))
+    return {
+        "ln1": jnp.zeros((d,), dt),
+        "wg": dense_init(ks[0], (d, w), dt),
+        "wx": dense_init(ks[1], (d, w), dt),
+        "conv_w": dense_init(ks[2], (cfg.ssm_conv, w), dt),
+        "conv_b": jnp.zeros((w,), dt),
+        "wa": dense_init(ks[3], (nb, bs, bs), dt, in_axis=1),
+        "ba": jnp.zeros((w,), jnp.float32),
+        "wi": dense_init(ks[4], (nb, bs, bs), dt, in_axis=1),
+        "bi": jnp.zeros((w,), jnp.float32),
+        "lam": lam,
+        "wo": dense_init(ks[6], (w, d), dt),
+        **_mlp_params(cfg, ks[5]),
+    }
+
+
+def _attn_params(cfg: ArchConfig, key):
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 5)
+    dt = cfg.dtype
+    return {
+        "ln1": jnp.zeros((d,), dt),
+        "wq": dense_init(ks[0], (d, H, hd), dt),
+        "wk": dense_init(ks[1], (d, K, hd), dt),
+        "wv": dense_init(ks[2], (d, K, hd), dt),
+        "wo": dense_init(ks[3], (H, hd, d), dt, in_axis=0),
+        **_mlp_params(cfg, ks[4]),
+    }
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    n_super, n_tail = _counts(cfg)
+    kE, kS, kT = jax.random.split(key, 3)
+
+    def super_params(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"rec1": _rec_params(cfg, k1), "rec2": _rec_params(cfg, k2),
+                "attn": _attn_params(cfg, k3)}
+
+    params = {
+        "embed": tfm.embed_init(kE, (cfg.vocab, cfg.d_model), cfg.dtype),
+        "supers": jax.vmap(super_params)(jax.random.split(kS, n_super)),
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+    }
+    if n_tail:
+        params["tail"] = jax.vmap(lambda k: _rec_params(cfg, k))(
+            jax.random.split(kT, n_tail))
+    return params
+
+
+def _rec_specs(cfg: ArchConfig, rules: MeshRules, L: int):
+    d, w, nb, ff = cfg.d_model, cfg.rnn_width, cfg.n_heads, cfg.d_ff
+
+    def spec(*ax):
+        return logical_to_spec(rules, *ax)
+
+    return {
+        "ln1": P(None, None),
+        "wg": spec((None, L), (None, d), ("model", w)),
+        "wx": spec((None, L), (None, d), ("model", w)),
+        "conv_w": spec((None, L), (None, 0), ("model", w)),
+        "conv_b": spec((None, L), ("model", w)),
+        "wa": spec((None, L), ("model", nb), (None, 0), (None, 0)),
+        "ba": spec((None, L), ("model", w)),
+        "wi": spec((None, L), ("model", nb), (None, 0), (None, 0)),
+        "bi": spec((None, L), ("model", w)),
+        "lam": spec((None, L), ("model", w)),
+        "wo": spec((None, L), ("model", w), (None, d)),
+        "ln2": P(None, None),
+        "w_in": spec((None, L), (None, d), (None, 2), ("model", ff)),
+        "w_out": spec((None, L), ("model", ff), (None, d)),
+    }
+
+
+def _attn_specs(cfg: ArchConfig, rules: MeshRules, L: int):
+    d, H, K, hd, ff = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                       cfg.d_ff)
+
+    def spec(*ax):
+        return logical_to_spec(rules, *ax)
+
+    return {
+        "ln1": P(None, None),
+        "wq": spec((None, L), (None, d), ("model", H), (None, hd)),
+        "wk": spec((None, L), (None, d), ("model", K), (None, hd)),
+        "wv": spec((None, L), (None, d), ("model", K), (None, hd)),
+        "wo": spec((None, L), ("model", H), (None, hd), (None, d)),
+        "ln2": P(None, None),
+        "w_in": spec((None, L), (None, d), (None, 2), ("model", ff)),
+        "w_out": spec((None, L), ("model", ff), (None, d)),
+    }
+
+
+def param_specs(cfg: ArchConfig, rules: MeshRules) -> dict:
+    n_super, n_tail = _counts(cfg)
+    specs = {
+        "embed": logical_to_spec(rules, ("model", cfg.vocab),
+                                 (None, cfg.d_model)),
+        "supers": {"rec1": _rec_specs(cfg, rules, n_super),
+                   "rec2": _rec_specs(cfg, rules, n_super),
+                   "attn": _attn_specs(cfg, rules, n_super)},
+        "final_norm": P(None),
+    }
+    if n_tail:
+        specs["tail"] = _rec_specs(cfg, rules, n_tail)
+    return specs
+
+
+# ------------------------------------------------------------------ blocks
+def _blockdiag(x, w, b):
+    """x: (..., width) -> block-diagonal linear; w: (nb, bs, bs)."""
+    nb, bs, _ = w.shape
+    xh = x.reshape(x.shape[:-1] + (nb, bs))
+    y = jnp.einsum("...nb,nbc->...nc", xh, w)
+    return y.reshape(x.shape) + b.astype(x.dtype)
+
+
+def _rglru_scan(x, r, i, lam):
+    """x/r/i: (B, L, w); lam: (w,).  Full-sequence linear recurrence (f32)."""
+    log_a = -_C * r * jax.nn.softplus(lam.astype(jnp.float32))[None, None, :]
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * x)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h
+
+
+def _rec_block(x, lp, cfg: ArchConfig, rules):
+    """x: (B, L, d) -> temporal-mix output (B, L, d)."""
+    w = cfg.rnn_width
+    gate = jax.nn.gelu(jnp.einsum("bld,dw->blw", x, lp["wg"])
+                       .astype(jnp.float32))
+    u = jnp.einsum("bld,dw->blw", x, lp["wx"])
+    # causal temporal conv (width ssm_conv)
+    K = lp["conv_w"].shape[0]
+    up = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    conv = sum(up[:, k:k + u.shape[1], :] * lp["conv_w"][k][None, None, :]
+               for k in range(K)) + lp["conv_b"][None, None, :]
+    r = jax.nn.sigmoid(_blockdiag(conv, lp["wa"], lp["ba"])
+                       .astype(jnp.float32))
+    i = jax.nn.sigmoid(_blockdiag(conv, lp["wi"], lp["bi"])
+                       .astype(jnp.float32))
+    h = _rglru_scan(conv.astype(jnp.float32), r, i, lp["lam"])
+    y = (h * gate).astype(x.dtype)
+    if rules is not None:
+        y = constrain(y, P(rules.data, None, rules.model(w)))
+    return jnp.einsum("blw,wd->bld", y, lp["wo"])
+
+
+def _layer(x, lp, cfg: ArchConfig, kind: str, positions, rules,
+           q_chunk: int = 512):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if kind == "rec":
+        x = x + _rec_block(h, lp, cfg, rules)
+    else:
+        q, k, v = qkv_project(h, lp["wq"], lp["wk"], lp["wv"], cfg, positions)
+        o = attention(q, k, v, positions, positions, cfg, causal=True,
+                      window=cfg.local_window, q_chunk=q_chunk)
+        x = x + out_project(o, lp["wo"])
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    x = x + glu_ffn(h, lp["w_in"], lp["w_out"], cfg.activation)
+    if rules is not None:
+        x = constrain(x, P(rules.data, None, None))
+    return x
+
+
+# ----------------------------------------------------------------- forward
+def forward(params, x, cfg: ArchConfig, positions, rules=None,
+            remat: bool = True, q_chunk: int = 512):
+    def body(h, sp):
+        h = _layer(h, sp["rec1"], cfg, "rec", positions, rules, q_chunk)
+        h = _layer(h, sp["rec2"], cfg, "rec", positions, rules, q_chunk)
+        h = _layer(h, sp["attn"], cfg, "attn", positions, rules, q_chunk)
+        return h, None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = mscan(body, x, params["supers"])
+    if "tail" in params:
+        def tail_body(h, lp):
+            return _layer(h, lp, cfg, "rec", positions, rules, q_chunk), None
+        if remat:
+            tail_body = jax.checkpoint(tail_body, prevent_cse=False)
+        x, _ = mscan(tail_body, x, params["tail"])
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def loss_fn(params, batch, cfg: ArchConfig, rules=None, q_chunk: int = 512):
+    tokens = batch["tokens"]
+    x = tfm.embed_tokens(params, tokens, cfg)
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+    h = forward(params, x, cfg, positions, rules, q_chunk=q_chunk)
+    labels, lmask = tfm.shifted_labels(tokens)
+    if "mask" in batch:
+        lmask = lmask & batch["mask"]
+    return tfm.chunked_ce_loss(params, h, labels, cfg, mask=lmask,
+                               rules=rules)
+
+
+# ---------------------------------------------------------------- serving
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    n_super, n_tail = _counts(cfg)
+    w, K = cfg.rnn_width, cfg.ssm_conv
+    S = min(max_len, cfg.local_window)
+    cache = {
+        "conv1": jnp.zeros((n_super, batch, K - 1, w), cfg.dtype),
+        "h1": jnp.zeros((n_super, batch, w), jnp.float32),
+        "conv2": jnp.zeros((n_super, batch, K - 1, w), cfg.dtype),
+        "h2": jnp.zeros((n_super, batch, w), jnp.float32),
+        "k": jnp.zeros((n_super, batch, S, cfg.n_kv_heads, cfg.head_dim),
+                       cfg.dtype),
+        "v": jnp.zeros((n_super, batch, S, cfg.n_kv_heads, cfg.head_dim),
+                       cfg.dtype),
+    }
+    if n_tail:
+        cache["tconv"] = jnp.zeros((n_tail, batch, K - 1, w), cfg.dtype)
+        cache["th"] = jnp.zeros((n_tail, batch, w), jnp.float32)
+    return cache
+
+
+def cache_specs(cfg: ArchConfig, rules: MeshRules):
+    n_super, n_tail = _counts(cfg)
+    w = cfg.rnn_width
+
+    def spec(*ax):
+        return logical_to_spec(rules, *ax)
+
+    conv = spec((None, 0), ("data", 0), (None, 0), ("model", w))
+    hsp = spec((None, 0), ("data", 0), ("model", w))
+    kv = spec((None, 0), ("data", 0), (None, 0),
+              ("model", cfg.n_kv_heads), (None, 0))
+    out = {"conv1": conv, "h1": hsp, "conv2": conv, "h2": hsp,
+           "k": kv, "v": kv}
+    if n_tail:
+        out["tconv"] = conv
+        out["th"] = hsp
+    return out
+
+
+def _rec_step(x1, conv_st, h_st, lp, cfg: ArchConfig):
+    """One-token RG-LRU step. x1: (B, d)."""
+    gate = jax.nn.gelu((x1 @ lp["wg"]).astype(jnp.float32))
+    u = x1 @ lp["wx"]                                          # (B, w)
+    window = jnp.concatenate([conv_st, u[:, None, :]], axis=1)  # (B,K,w)
+    conv = jnp.einsum("bkw,kw->bw", window, lp["conv_w"]) + lp["conv_b"]
+    r = jax.nn.sigmoid(_blockdiag(conv, lp["wa"], lp["ba"])
+                       .astype(jnp.float32))
+    i = jax.nn.sigmoid(_blockdiag(conv, lp["wi"], lp["bi"])
+                       .astype(jnp.float32))
+    log_a = -_C * r * jax.nn.softplus(lp["lam"].astype(jnp.float32))[None, :]
+    a = jnp.exp(log_a)
+    h_st = a * h_st + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        i * conv.astype(jnp.float32))
+    y = (h_st * gate).astype(x1.dtype)
+    return y @ lp["wo"], window[:, 1:, :], h_st
+
+
+def _layer_step(h, lp, cfg, kind, state, pos, B):
+    hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+    if kind == "rec":
+        conv_st, h_st = state
+        y, conv_st, h_st = _rec_step(hn[:, 0, :], conv_st, h_st, lp, cfg)
+        h = h + y[:, None, :]
+        new_state = (conv_st, h_st)
+    else:
+        kc, vc = state
+        S = kc.shape[1]
+        slot = pos % S
+        q_pos = jnp.full((1,), pos, jnp.int32)
+        idx = jnp.arange(S, dtype=jnp.int32)
+        k_pos = jnp.where(idx <= slot, pos - slot + idx, pos - slot - S + idx)
+        k_valid = (k_pos >= 0) & (k_pos <= pos)
+        q, k_new, v_new = qkv_project(hn, lp["wq"], lp["wk"], lp["wv"], cfg,
+                                      q_pos)
+        kc = seq_update(kc, k_new, slot)
+        vc = seq_update(vc, v_new, slot)
+        o = attention(q, kc, vc, q_pos, k_pos, cfg, causal=True,
+                      window=cfg.local_window,
+                      k_valid=jnp.broadcast_to(k_valid, (B, S)))
+        h = h + out_project(o, lp["wo"])
+        new_state = (kc, vc)
+    hn = rms_norm(h, lp["ln2"], cfg.norm_eps)
+    h = h + glu_ffn(hn, lp["w_in"], lp["w_out"], cfg.activation)
+    return h, new_state
+
+
+def decode_step(params, cache, tokens, pos, cfg: ArchConfig, rules=None):
+    B = tokens.shape[0]
+    x = tfm.embed_tokens(params, tokens, cfg)                  # (B, 1, d)
+
+    def body(h, layer):
+        sp, c1, h1, c2, h2, kc, vc = layer
+        h, (c1, h1) = _layer_step(h, sp["rec1"], cfg, "rec", (c1, h1), pos, B)
+        h, (c2, h2) = _layer_step(h, sp["rec2"], cfg, "rec", (c2, h2), pos, B)
+        h, (kc, vc) = _layer_step(h, sp["attn"], cfg, "attn", (kc, vc), pos, B)
+        return h, (c1, h1, c2, h2, kc, vc)
+
+    h, (c1, h1, c2, h2, kc, vc) = mscan(
+        body, x, (params["supers"], cache["conv1"], cache["h1"],
+                  cache["conv2"], cache["h2"], cache["k"], cache["v"]))
+    new_cache = dict(cache, conv1=c1, h1=h1, conv2=c2, h2=h2, k=kc, v=vc)
+    if "tail" in params:
+        def tail_body(h, layer):
+            lp, ct, ht = layer
+            h, (ct, ht) = _layer_step(h, lp, cfg, "rec", (ct, ht), pos, B)
+            return h, (ct, ht)
+        h, (ct, ht) = mscan(tail_body, h,
+                                   (params["tail"], cache["tconv"],
+                                    cache["th"]))
+        new_cache["tconv"] = ct
+        new_cache["th"] = ht
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = tfm.logits_at(params, h[:, -1, :], cfg)
+    return logits, new_cache
+
+
+def prefill(params, tokens, cfg: ArchConfig, cache, rules=None,
+            q_chunk: int = 512):
+    """Prompt pass.  Recurrent states via associative scan; the attention
+    cache keeps the trailing local window.  Full hidden states are computed
+    by the training forward; states are then re-derived per layer (the extra
+    pass is the standard price of scan-stacked heterogeneous layers)."""
+    B, L = tokens.shape
+    x = tfm.embed_tokens(params, tokens, cfg)
+    positions = jnp.arange(L, dtype=jnp.int32)
+    S = cache["k"].shape[2]
+
+    def rec_with_state(h, lp):
+        hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+        w = cfg.rnn_width
+        gate = jax.nn.gelu(jnp.einsum("bld,dw->blw", hn, lp["wg"])
+                           .astype(jnp.float32))
+        u = jnp.einsum("bld,dw->blw", hn, lp["wx"])
+        K = lp["conv_w"].shape[0]
+        conv_tail = u[:, -(K - 1):, :].astype(cache["conv1"].dtype)
+        up = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+        conv = sum(up[:, k:k + L, :] * lp["conv_w"][k][None, None, :]
+                   for k in range(K)) + lp["conv_b"][None, None, :]
+        r = jax.nn.sigmoid(_blockdiag(conv, lp["wa"], lp["ba"])
+                           .astype(jnp.float32))
+        i = jax.nn.sigmoid(_blockdiag(conv, lp["wi"], lp["bi"])
+                           .astype(jnp.float32))
+        hs = _rglru_scan(conv.astype(jnp.float32), r, i, lp["lam"])
+        y = (hs * gate).astype(h.dtype)
+        h = h + jnp.einsum("blw,wd->bld", y, lp["wo"])
+        hn = rms_norm(h, lp["ln2"], cfg.norm_eps)
+        h = h + glu_ffn(hn, lp["w_in"], lp["w_out"], cfg.activation)
+        return h, conv_tail, hs[:, -1, :]
+
+    def attn_with_cache(h, lp):
+        hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+        q, k_new, v_new = qkv_project(hn, lp["wq"], lp["wk"], lp["wv"], cfg,
+                                      positions)
+        o = attention(q, k_new, v_new, positions, positions, cfg, causal=True,
+                      window=cfg.local_window, q_chunk=q_chunk)
+        h = h + out_project(o, lp["wo"])
+        hn = rms_norm(h, lp["ln2"], cfg.norm_eps)
+        h = h + glu_ffn(hn, lp["w_in"], lp["w_out"], cfg.activation)
+        # ring-buffer layout: slot of position p is p % S
+        tail_k = k_new[:, -S:, :, :]
+        tail_v = v_new[:, -S:, :, :]
+        shift = L % S
+        kc = jnp.roll(tail_k, shift, axis=1).astype(cache["k"].dtype)
+        vc = jnp.roll(tail_v, shift, axis=1).astype(cache["v"].dtype)
+        return h, kc, vc
+
+    def body(h, sp):
+        h, c1, h1 = rec_with_state(h, sp["rec1"])
+        h, c2, h2 = rec_with_state(h, sp["rec2"])
+        h, kc, vc = attn_with_cache(h, sp["attn"])
+        return h, (c1, h1, c2, h2, kc, vc)
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    h, (c1, h1, c2, h2, kc, vc) = mscan(body, x, params["supers"])
+    new_cache = dict(cache, conv1=c1, h1=h1, conv2=c2, h2=h2, k=kc, v=vc)
+    if "tail" in params:
+        def tail_body(h, lp):
+            h, ct, ht = rec_with_state(h, lp)
+            return h, (ct, ht)
+        tail_body = jax.checkpoint(tail_body, prevent_cse=False)
+        h, (ct, ht) = mscan(tail_body, h, params["tail"])
+        new_cache["tconv"] = ct
+        new_cache["th"] = ht
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = tfm.logits_at(params, h[:, -1, :], cfg)
+    return logits, new_cache

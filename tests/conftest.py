@@ -1,0 +1,7 @@
+import os
+
+# Smoke tests and benchmarks must see ONE device; only launch/dryrun.py sets
+# the 512-device override (and only in its own process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import repro  # noqa: E402  (enables x64 before any test builds arrays)

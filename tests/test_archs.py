@@ -1,0 +1,152 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward/
+train step on CPU, shape + finiteness checks, spec/param tree congruence.
+
+The FULL configs are exercised only by the dry-run (launch/dryrun.py).
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, input_specs, reduce_config, SHAPES
+from repro.models import build_model
+from repro.models.common import MeshRules
+
+ARCH_IDS = list(ARCHS)
+
+
+def tiny_batch(cfg, B=2, L=32, seed=0):
+    k = jax.random.PRNGKey(seed)
+    if cfg.family == "encoder":
+        return {
+            "features": jax.random.normal(k, (B, L, cfg.frontend_dim),
+                                          jnp.float32).astype(jnp.bfloat16),
+            "labels": jax.random.randint(k, (B, L), 0, cfg.vocab,
+                                         jnp.int32),
+        }
+    if cfg.family == "vlm":
+        return {
+            "patches": jax.random.normal(
+                k, (B, cfg.num_patches, cfg.frontend_dim),
+                jnp.float32).astype(jnp.bfloat16),
+            "tokens": jax.random.randint(k, (B, L - cfg.num_patches), 0,
+                                         cfg.vocab, jnp.int32),
+        }
+    return {"tokens": jax.random.randint(k, (B, L), 0, cfg.vocab, jnp.int32)}
+
+
+@pytest.fixture(scope="module")
+def built():
+    """Build each reduced model + params once per test session."""
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = reduce_config(ARCHS[arch])
+            model = build_model(cfg)
+            params = model.init(jax.random.PRNGKey(0))
+            cache[arch] = (cfg, model, params)
+        return cache[arch]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_loss_finite(arch, built):
+    cfg, model, params = built(arch)
+    batch = tiny_batch(cfg)
+    loss = jax.jit(lambda p, b: model.loss_fn(p, b))(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), f"{arch} loss not finite"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_reduces_loss(arch, built):
+    """A few SGD-ish steps on one repeated batch must reduce the loss."""
+    from repro.train import TrainStepConfig, make_train_step
+    cfg, model, params = built(arch)
+    from repro.train.optimizer import adamw_init
+    batch = tiny_batch(cfg)
+    step = jax.jit(make_train_step(
+        model.loss_fn, TrainStepConfig(peak_lr=3e-3, warmup_steps=1,
+                                       total_steps=100, microbatches=1)))
+    opt = adamw_init(params)
+    p = params
+    losses = []
+    for i in range(5):
+        p, opt, metrics = step(p, opt, batch, jnp.int32(i))
+        losses.append(float(metrics["loss"]))
+    assert all(np.isfinite(losses)), f"{arch}: {losses}"
+    assert losses[-1] < losses[0], f"{arch} loss did not drop: {losses}"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_family(arch, built):
+    cfg, model, params = built(arch)
+    if not model.is_decoder:
+        assert cfg.family == "encoder"
+        return
+    B, L = 2, 32
+    batch = tiny_batch(cfg, B=B, L=L)
+    cache = model.init_cache(B, L + 8)
+    logits, cache = jax.jit(
+        lambda p, b, c: model.prefill(p, b, c))(params, batch, cache)
+    assert logits.shape == (B, cfg.vocab)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    logits2, cache = jax.jit(
+        lambda p, c, t: model.decode_step(p, c, t, jnp.int32(L)))(
+        params, cache, tok)
+    assert logits2.shape == (B, cfg.vocab)
+    assert np.isfinite(np.asarray(logits2, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_congruent(arch, built):
+    """Spec tree must match the param tree structure with rank-matching
+    PartitionSpecs — this is what the 512-device dry-run relies on."""
+    cfg, model, params = built(arch)
+    rules = MeshRules(data_axes=("data",), model_axis="model",
+                      axis_sizes={"data": 16, "model": 16})
+    specs = model.param_specs(rules)
+    jax.tree.map(lambda *_: None, params, specs)   # raises on mismatch
+
+    flat_p = jax.tree_util.tree_leaves_with_path(params)
+    flat_s = jax.tree_util.tree_leaves_with_path(specs)
+    for (pp, leaf), (sp, spec) in zip(flat_p, flat_s):
+        assert len(spec) <= leaf.ndim, (
+            f"{arch} {jax.tree_util.keystr(pp)}: spec {spec} rank > "
+            f"leaf rank {leaf.shape}")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_input_specs(arch):
+    """Full-size input specs are well-formed for every non-skipped cell."""
+    from repro.configs import skip_reason
+    cfg = ARCHS[arch]
+    for shape_name, spec in SHAPES.items():
+        if skip_reason(arch, shape_name):
+            continue
+        tree = input_specs(cfg, spec)
+        for leaf in jax.tree.leaves(tree):
+            assert isinstance(leaf, jax.ShapeDtypeStruct)
+            assert all(d > 0 for d in leaf.shape)
+        if spec.kind != "decode" and cfg.family not in ("encoder",):
+            total = (tree["tokens"].shape[1] +
+                     (cfg.num_patches if cfg.family == "vlm" else 0))
+            assert total == spec.seq_len
+
+
+def test_sliding_window_cache_is_bounded():
+    cfg = reduce_config(ARCHS["h2o-danube-1.8b"])
+    model = build_model(cfg)
+    cache = model.init_cache(2, 10_000)
+    assert cache.k.shape[2] == cfg.sliding_window  # ring buffer, not 10k
+
+
+def test_ssm_cache_constant_in_seq_len():
+    cfg = reduce_config(ARCHS["mamba2-130m"])
+    model = build_model(cfg)
+    c1 = model.init_cache(2, 1000)
+    c2 = model.init_cache(2, 100_000)
+    assert all(a.shape == b.shape for a, b in
+               zip(jax.tree.leaves(c1), jax.tree.leaves(c2)))

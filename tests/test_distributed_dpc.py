@@ -1,0 +1,61 @@
+"""Distributed DPC (shard_map) equals the single-device exact algorithms.
+
+Multi-device CPU requires XLA_FLAGS set before jax initializes, so the
+actual comparison runs in a subprocess with 4 fake host devices.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import warnings, json
+warnings.filterwarnings("ignore")
+import numpy as np, jax, jax.numpy as jnp
+from repro.distributed import distributed_dpc, DistDPCConfig
+from repro.core.exdpc import run_exdpc
+from repro.core.scan import run_scan
+from repro.data.points import gaussian_mixture, with_noise
+
+out = {}
+for seed, d, k in ((0, 2, 6), (1, 3, 4)):
+    pts, labels = gaussian_mixture(1200, k=k, d=d, overlap=0.03, seed=seed)
+    pts, labels = with_noise(pts, labels, 0.05, seed=seed)
+    d_cut = 3000.0
+    mesh = jax.make_mesh((4,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    res_d = distributed_dpc(pts, DistDPCConfig(d_cut=d_cut), mesh)
+    res_e = run_exdpc(pts, d_cut)
+    res_s = run_scan(pts, d_cut)
+    key = f"{seed}_{d}"
+    out[key] = {
+        "rho_eq_ex": bool(jnp.all(res_d.rho == res_e.rho)),
+        "rho_eq_scan": bool(jnp.all(res_d.rho == res_s.rho)),
+        "delta_close": bool(jnp.allclose(res_d.delta, res_e.delta,
+                                         rtol=1e-5, atol=1e-4)),
+        "parent_eq": float((np.asarray(res_d.parent)
+                            == np.asarray(res_e.parent)).mean()),
+    }
+print("RESULT" + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_distributed_matches_exact():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("RESULT")][0]
+    out = json.loads(line[len("RESULT"):])
+    for key, r in out.items():
+        assert r["rho_eq_ex"], (key, r)
+        assert r["rho_eq_scan"], (key, r)
+        assert r["delta_close"], (key, r)
+        assert r["parent_eq"] == 1.0, (key, r)

@@ -1,0 +1,168 @@
+"""Correctness of the core DPC algorithms against the O(n^2) Scan oracle."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import DPCConfig, assign_labels, cluster, compute_dpc, rand_index
+from repro.core.approxdpc import run_approxdpc
+from repro.core.exdpc import run_exdpc
+from repro.core.sapproxdpc import run_sapproxdpc
+from repro.core.scan import run_scan
+from repro.data.points import gaussian_mixture, random_walk, with_noise
+
+
+def _dataset(n=1200, k=6, d=2, overlap=0.02, seed=0):
+    return gaussian_mixture(n, k=k, d=d, overlap=overlap, seed=seed)
+
+
+class TestExDPCExactness:
+    """Ex-DPC must be bit-identical to the straightforward algorithm."""
+
+    @pytest.mark.parametrize("d,seed", [(2, 0), (3, 1), (4, 2)])
+    def test_matches_scan(self, d, seed):
+        pts, _ = _dataset(n=900, k=5, d=d, seed=seed)
+        d_cut = 4000.0
+        sc = run_scan(jnp.asarray(pts), d_cut)
+        ex = run_exdpc(pts, d_cut)
+        assert bool(jnp.all(sc.rho == ex.rho))
+        both_inf = jnp.isinf(sc.delta) & jnp.isinf(ex.delta)
+        assert bool(jnp.all((sc.delta == ex.delta) | both_inf))
+        assert bool(jnp.all(sc.parent == ex.parent))
+
+    def test_global_peak_has_inf_delta(self):
+        pts, _ = _dataset(n=500, seed=3)
+        ex = run_exdpc(pts, 3000.0)
+        peak = int(jnp.argmax(ex.rho_key))
+        assert bool(jnp.isinf(ex.delta[peak]))
+        assert int(ex.parent[peak]) == -1
+        # exactly one point has no dependent
+        assert int(jnp.sum(ex.parent < 0)) == 1
+
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(0, 10_000), st.sampled_from([1500.0, 3000.0, 6000.0]),
+           st.integers(2, 3))
+    def test_property_exactness(self, seed, d_cut, d):
+        """Hypothesis sweep: exactness holds across seeds, radii, dims."""
+        pts, _ = _dataset(n=400, k=4, d=d, seed=seed)
+        sc = run_scan(jnp.asarray(pts), d_cut)
+        ex = run_exdpc(pts, d_cut)
+        assert bool(jnp.all(sc.rho == ex.rho))
+        both_inf = jnp.isinf(sc.delta) & jnp.isinf(ex.delta)
+        assert bool(jnp.all((sc.delta == ex.delta) | both_inf))
+
+
+class TestApproxDPC:
+    """Theorem 4: Approx-DPC yields identical cluster centers to Ex-DPC."""
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_exact_rho(self, seed):
+        pts, _ = _dataset(seed=seed)
+        sc = run_scan(jnp.asarray(pts), 3000.0)
+        ap = run_approxdpc(pts, 3000.0)
+        assert bool(jnp.all(sc.rho == ap.rho))
+
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(0, 10_000), st.sampled_from([2000.0, 4000.0]))
+    def test_center_guarantee(self, seed, d_cut):
+        pts, _ = _dataset(n=800, seed=seed)
+        ex = run_exdpc(pts, d_cut)
+        ap = run_approxdpc(pts, d_cut)
+        for delta_min in (1.5 * d_cut, 2.5 * d_cut):
+            le = assign_labels(ex, 5.0, delta_min)
+            la = assign_labels(ap, 5.0, delta_min)
+            assert bool(jnp.all(le.centers == la.centers))
+
+    def test_approx_delta_never_exceeds_dcut_unless_exact(self):
+        """Resolved points report d_cut; only stem roots exceed it (exactly)."""
+        pts, _ = _dataset(seed=4)
+        d_cut = 3000.0
+        ap = run_approxdpc(pts, d_cut)
+        ex = run_exdpc(pts, d_cut)
+        over = np.asarray(ap.delta) > d_cut
+        # every over-d_cut delta is the exact one
+        ex_d = np.asarray(ex.delta)
+        ap_d = np.asarray(ap.delta)
+        assert np.allclose(ap_d[over], ex_d[over], rtol=1e-6, atol=1e-6)
+
+    def test_high_accuracy_vs_exact(self):
+        pts, _ = _dataset(n=2000, k=8, seed=5)
+        d_cut = 2500.0
+        ex = run_exdpc(pts, d_cut)
+        ap = run_approxdpc(pts, d_cut)
+        le = assign_labels(ex, 5.0, 5000.0)
+        la = assign_labels(ap, 5.0, 5000.0)
+        assert rand_index(np.asarray(la.labels), np.asarray(le.labels)) > 0.95
+
+
+class TestSApproxDPC:
+    @pytest.mark.parametrize("eps", [0.2, 0.5, 1.0])
+    def test_reasonable_accuracy(self, eps):
+        pts, _ = _dataset(n=2000, k=8, seed=6)
+        d_cut = 2500.0
+        ex = run_exdpc(pts, d_cut)
+        sa = run_sapproxdpc(pts, d_cut, eps=eps)
+        le = assign_labels(ex, 5.0, 5000.0)
+        ls = assign_labels(sa, 5.0, 5000.0)
+        assert rand_index(np.asarray(ls.labels), np.asarray(le.labels)) > 0.9
+
+    def test_smaller_eps_more_accurate_or_equal(self):
+        pts, _ = _dataset(n=2000, k=8, seed=7)
+        d_cut = 2500.0
+        ex = run_exdpc(pts, d_cut)
+        le = assign_labels(ex, 5.0, 5000.0)
+        ris = []
+        for eps in (0.2, 1.0):
+            sa = run_sapproxdpc(pts, d_cut, eps=eps)
+            ls = assign_labels(sa, 5.0, 5000.0)
+            ris.append(rand_index(np.asarray(ls.labels), np.asarray(le.labels)))
+        assert ris[0] >= ris[1] - 0.02  # paper Table 5 trend (with slack)
+
+    def test_members_never_centers(self):
+        pts, _ = _dataset(n=1500, seed=8)
+        sa = run_sapproxdpc(pts, 2500.0, eps=1.0)
+        ls = assign_labels(sa, 5.0, 5000.0)
+        # centers must be representatives: their delta came from phases 1/2
+        centers = np.asarray(ls.centers)
+        deltas = np.asarray(sa.delta)
+        assert np.all(deltas[centers] >= 5000.0)
+
+
+class TestAPI:
+    def test_cluster_end_to_end(self):
+        pts, gt = _dataset(n=1500, k=6, seed=9)
+        cfg = DPCConfig(d_cut=2500.0, rho_min=5.0, delta_min=6000.0,
+                        algorithm="approxdpc")
+        out, res = cluster(pts, cfg)
+        assert out.labels.shape == (1500,)
+        assert int(out.num_clusters) >= 4
+        assert rand_index(np.asarray(out.labels), gt) > 0.9
+
+    def test_delta_min_validation(self):
+        with pytest.raises(ValueError):
+            DPCConfig(d_cut=100.0, delta_min=50.0).resolved_delta_min()
+
+    @pytest.mark.parametrize("algo", ["scan", "exdpc", "approxdpc",
+                                      "sapproxdpc", "lsh_ddp", "cfsfdp_a"])
+    def test_all_algorithms_run(self, algo):
+        pts, _ = _dataset(n=600, k=4, seed=10)
+        cfg = DPCConfig(d_cut=3000.0, algorithm=algo)
+        res = compute_dpc(pts, cfg)
+        assert res.rho.shape == (600,)
+        assert bool(jnp.all(res.rho >= 1))  # self-count
+        assert not bool(jnp.any(jnp.isnan(res.delta)))
+
+
+class TestNoiseRobustness:
+    """Table 2: accuracy stays high under increasing noise rate."""
+
+    def test_noise_sweep(self):
+        base, gt = _dataset(n=1500, k=6, overlap=0.012, seed=11)
+        for rate in (0.02, 0.08):
+            pts, labels = with_noise(base, gt, rate, seed=12)
+            d_cut = 2500.0
+            ex = run_exdpc(pts, d_cut)
+            ap = run_approxdpc(pts, d_cut)
+            le = assign_labels(ex, 10.0, 5000.0)
+            la = assign_labels(ap, 10.0, 5000.0)
+            assert rand_index(np.asarray(la.labels), np.asarray(le.labels)) > 0.93

@@ -1,0 +1,73 @@
+"""DPC-KV cache compression: shapes, mass preservation, and accuracy vs a
+random-eviction baseline on clustered keys (where density peaks matter)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.serve.dpc_kv import (DPCKVConfig, attend_compressed, compress_kv)
+
+
+def clustered_cache(B=2, S=512, K=2, hd=32, modes=6, seed=0):
+    """Keys drawn around a few attention modes + matching values."""
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(0, 1, (modes, hd)).astype(np.float32) * 3
+    assign = rng.integers(0, modes, (B, S, K))
+    k = centers[assign] + rng.normal(0, 0.15, (B, S, K, hd))
+    v = centers[assign] * 0.5 + rng.normal(0, 0.05, (B, S, K, hd))
+    return (jnp.asarray(k, jnp.float32), jnp.asarray(v, jnp.float32),
+            jnp.asarray(centers))
+
+
+def full_attention(q, k, v):
+    B, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, hd)
+    logits = jnp.einsum("bkgh,bskh->bkgs", qg, k) * hd ** -0.5
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", probs, v)
+    return out.reshape(B, H, hd)
+
+
+class TestCompressKV:
+    def test_shapes_and_counts(self):
+        k, v, _ = clustered_cache()
+        cfg = DPCKVConfig(budget=32)
+        kc, vc, counts = compress_kv(k, v, jnp.int32(512), cfg)
+        assert kc.shape == (2, 32, 2, 32)
+        assert vc.shape == (2, 32, 2, 32)
+        assert counts.shape == (2, 32, 2)
+        # every valid position lands in at most one cluster
+        assert float(counts.sum()) <= 2 * 512 * 2
+
+    def test_respects_valid_length(self):
+        k, v, _ = clustered_cache()
+        cfg = DPCKVConfig(budget=16)
+        _, _, c_full = compress_kv(k, v, jnp.int32(512), cfg)
+        _, _, c_half = compress_kv(k, v, jnp.int32(256), cfg)
+        assert float(c_half.sum()) <= float(c_full.sum())
+        assert float(c_half.sum()) <= 2 * 256 * 2
+
+    def test_better_than_random_eviction(self):
+        """On clustered keys, DPC-KV must beat random keeping at equal
+        budget for attention-output fidelity."""
+        k, v, _ = clustered_cache(seed=3)
+        B, S, K, hd = k.shape
+        q = jnp.asarray(np.random.default_rng(1).normal(0, 1, (B, 4, hd)),
+                        jnp.float32)
+        ref = full_attention(q, k, v)
+
+        cfg = DPCKVConfig(budget=48)
+        kc, vc, counts = compress_kv(k, v, jnp.int32(S), cfg)
+        got = attend_compressed(q, kc, vc, counts)
+        err_dpc = float(jnp.linalg.norm(got - ref) / jnp.linalg.norm(ref))
+
+        rng = np.random.default_rng(0)
+        keep = rng.choice(S, 48, replace=False)
+        kr, vr = k[:, keep], v[:, keep]
+        cnt_r = jnp.ones((B, 48, K))
+        got_r = attend_compressed(q, kr, vr, cnt_r)
+        err_rand = float(jnp.linalg.norm(got_r - ref) / jnp.linalg.norm(ref))
+        assert err_dpc < err_rand, (err_dpc, err_rand)
+        assert err_dpc < 0.25, err_dpc

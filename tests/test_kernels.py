@@ -1,0 +1,143 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU).
+
+Threshold contract: the kernels compute squared distances in the MXU expanded
+form (|x|^2+|y|^2-2xy) while the oracle uses the direct difference; pairs
+lying within f32 rounding of the d_cut boundary can be counted differently.
+Tests therefore draw data away from the boundary (``_safe_points``) for exact
+count equality, and use tolerances for distances.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import dependent_masked, dependent_prefix, local_density
+from repro.kernels.ref import (masked_min_dist_ref, prefix_min_dist_ref,
+                               range_count_ref)
+
+
+def _safe_points(n, d, d_cut, seed, dtype=np.float32):
+    """Points with no pairwise distance within 1e-3*d_cut of the threshold."""
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(0, 50 * d_cut, size=(n, d)).astype(dtype)
+    d2 = ((pts[:, None, :].astype(np.float64) - pts[None, :, :]) ** 2).sum(-1)
+    dist = np.sqrt(d2)
+    bad = np.abs(dist - d_cut) < 1e-3 * d_cut
+    np.fill_diagonal(bad, False)
+    keep = ~bad.any(1)
+    return pts[keep]
+
+
+class TestRangeCount:
+    @pytest.mark.parametrize("n,d", [(100, 2), (300, 3), (257, 4), (64, 8)])
+    def test_shapes(self, n, d):
+        d_cut = 1.0
+        pts = _safe_points(n, d, d_cut, seed=n + d)
+        got = local_density(jnp.asarray(pts), d_cut, block_n=64, block_m=128,
+                            interpret=True)
+        want = range_count_ref(jnp.asarray(pts), jnp.asarray(pts), d_cut)
+        assert got.shape == (len(pts),)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("dtype", [np.float32, np.float64])
+    def test_dtypes(self, dtype):
+        d_cut = 2.0
+        pts = _safe_points(120, 3, d_cut, seed=7, dtype=dtype)
+        got = local_density(jnp.asarray(pts), d_cut, block_n=64, block_m=64,
+                            interpret=True)
+        want = range_count_ref(jnp.asarray(pts, jnp.float32),
+                               jnp.asarray(pts, jnp.float32), d_cut)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @settings(max_examples=6, deadline=None)
+    @given(st.integers(16, 200), st.integers(2, 4), st.integers(0, 99))
+    def test_property_matches_oracle(self, n, d, seed):
+        d_cut = 1.5
+        pts = _safe_points(n, d, d_cut, seed=seed)
+        if len(pts) < 4:
+            return
+        got = local_density(jnp.asarray(pts), d_cut, block_n=32, block_m=64,
+                            interpret=True)
+        want = range_count_ref(jnp.asarray(pts), jnp.asarray(pts), d_cut)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_nonsquare_blocks_and_padding(self):
+        d_cut = 1.0
+        pts = _safe_points(190, 2, d_cut, seed=3)   # forces ragged padding
+        got = local_density(jnp.asarray(pts), d_cut, block_n=64, block_m=256,
+                            interpret=True)
+        want = range_count_ref(jnp.asarray(pts), jnp.asarray(pts), d_cut)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestPrefixMinDist:
+    @pytest.mark.parametrize("n,d,block", [(100, 2, 32), (256, 3, 64),
+                                           (500, 4, 128), (64, 8, 32)])
+    def test_matches_oracle(self, n, d, block):
+        rng = np.random.default_rng(n + d)
+        pts = rng.uniform(0, 100, size=(n, d)).astype(np.float32)
+        got_d, got_p = dependent_prefix(jnp.asarray(pts), block=block,
+                                        interpret=True)
+        want_d, want_p = prefix_min_dist_ref(jnp.asarray(pts))
+        np.testing.assert_allclose(np.asarray(got_d)[1:], np.asarray(want_d)[1:],
+                                   rtol=2e-4, atol=1e-4)
+        # argmins may differ only where distances tie within tolerance
+        diff = np.asarray(got_p) != np.asarray(want_p)
+        if diff.any():
+            gd = np.asarray(got_d)[diff]
+            wd = np.asarray(want_d)[diff]
+            np.testing.assert_allclose(gd, wd, rtol=2e-4, atol=1e-4)
+
+    def test_first_row_has_no_prefix(self):
+        pts = np.random.default_rng(0).uniform(0, 10, (64, 2)).astype(np.float32)
+        got_d, got_p = dependent_prefix(jnp.asarray(pts), block=32, interpret=True)
+        assert np.isinf(np.asarray(got_d)[0])
+        assert int(got_p[0]) == -1
+
+
+class TestMaskedMinDist:
+    @settings(max_examples=6, deadline=None)
+    @given(st.integers(8, 100), st.integers(50, 300), st.integers(0, 99))
+    def test_property_matches_oracle(self, m, n, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.uniform(0, 100, (m, 3)).astype(np.float32)
+        y = rng.uniform(0, 100, (n, 3)).astype(np.float32)
+        xk = rng.permutation(m).astype(np.float32)
+        yk = rng.uniform(0, m, n).astype(np.float32)
+        got_d, got_p = dependent_masked(jnp.asarray(x), jnp.asarray(xk),
+                                        jnp.asarray(y), jnp.asarray(yk),
+                                        block_n=32, block_m=64, interpret=True)
+        want_d, want_p = masked_min_dist_ref(jnp.asarray(x), jnp.asarray(xk),
+                                             jnp.asarray(y), jnp.asarray(yk))
+        fin = np.isfinite(np.asarray(want_d))
+        np.testing.assert_allclose(np.asarray(got_d)[fin], np.asarray(want_d)[fin],
+                                   rtol=2e-4, atol=1e-4)
+        np.testing.assert_array_equal(np.isfinite(np.asarray(got_d)), fin)
+
+
+class TestKernelStructure:
+    """The kernels must trace through pallas_call (the CPU backend can only
+    *interpret* Pallas, so TPU Mosaic lowering itself is exercised on real
+    hardware; here we pin the call structure and the static grid math)."""
+
+    def test_range_count_traces_as_pallas(self):
+        x = jax.ShapeDtypeStruct((512, 4), jnp.float32)
+        from repro.kernels.density import range_count
+        jaxpr = jax.make_jaxpr(
+            lambda a: range_count(a, a, 1.0, block_n=256, block_m=256,
+                                  interpret=True))(x)
+        assert "pallas_call" in str(jaxpr)
+
+    def test_prefix_traces_as_pallas(self):
+        from repro.kernels.dependent import prefix_min_dist
+        x = jax.ShapeDtypeStruct((512, 4), jnp.float32)
+        jaxpr = jax.make_jaxpr(
+            lambda a: prefix_min_dist(a, block=256, interpret=True))(x)
+        assert "pallas_call" in str(jaxpr)
+
+    def test_block_shape_divisibility_enforced(self):
+        from repro.kernels.density import range_count
+        x = jnp.zeros((100, 2), jnp.float32)   # not a multiple of block
+        with pytest.raises(AssertionError):
+            range_count(x, x, 1.0, block_n=64, block_m=64, interpret=True)

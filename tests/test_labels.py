@@ -1,0 +1,86 @@
+"""Label propagation (pointer jumping) vs a sequential DFS reference."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dpc_types import DPCResult
+from repro.core.labels import assign_labels, decision_graph
+from repro.core.exdpc import run_exdpc
+from repro.data.points import gaussian_mixture
+
+
+def _sequential_labels(parent, centers, noise):
+    """Reference: follow parents iteratively (the paper's DFS, inverted)."""
+    n = len(parent)
+    labels = np.full(n, -2)
+    center_ids = {}
+    for i in np.nonzero(centers)[0]:
+        center_ids[i] = len(center_ids)
+    for i in range(n):
+        if noise[i]:
+            labels[i] = -1
+            continue
+        j = i
+        seen = 0
+        while True:
+            if centers[j]:
+                labels[i] = center_ids[j]
+                break
+            nxt = parent[j]
+            if nxt < 0 or noise[j]:
+                labels[i] = -1
+                break
+            j = nxt
+            seen += 1
+            assert seen <= n, "cycle in dependency forest"
+        if labels[i] == -2:
+            labels[i] = -1
+    return labels
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 1000))
+def test_pointer_jumping_matches_dfs(seed):
+    pts, _ = gaussian_mixture(600, k=5, seed=seed)
+    res = run_exdpc(pts, 3000.0)
+    out = assign_labels(res, rho_min=5.0, delta_min=6500.0)
+    centers = np.asarray(out.centers)
+    noise = np.asarray(res.rho) < 5.0
+    ref = _sequential_labels(np.asarray(res.parent), centers, noise)
+    got = np.asarray(out.labels)
+    # label ids may differ by permutation; compare as partitions
+    from repro.core import rand_index
+    assert rand_index(got, ref) == 1.0
+
+
+def test_chains_ascend_density():
+    pts, _ = gaussian_mixture(800, k=5, seed=17)
+    res = run_exdpc(pts, 3000.0)
+    parent = np.asarray(res.parent)
+    rk = np.asarray(res.rho_key)
+    has = parent >= 0
+    assert np.all(rk[parent[has]] > rk[has])
+
+
+def test_decision_graph_shows_k_peaks():
+    """Fig. 1: the decision graph separates exactly k cluster centers."""
+    k = 8
+    pts, _ = gaussian_mixture(3000, k=k, overlap=0.012, seed=18)
+    res = run_exdpc(pts, 2000.0)
+    dg = np.asarray(decision_graph(res))
+    rho, delta = dg[:, 0], dg[:, 1]
+    candidates = (rho >= 10.0)
+    finite = np.where(np.isfinite(delta), delta, 1e9)
+    top = np.sort(finite[candidates])[::-1]
+    # gap between k-th and (k+1)-th dependent distance is large
+    assert top[k - 1] > 3.0 * top[k]
+
+
+def test_num_clusters_matches_centers():
+    pts, _ = gaussian_mixture(1000, k=6, seed=19)
+    res = run_exdpc(pts, 2500.0)
+    out = assign_labels(res, 5.0, 6000.0)
+    assert int(out.num_clusters) == int(np.asarray(out.centers).sum())
+    k = int(out.num_clusters)
+    labs = np.asarray(out.labels)
+    assert set(np.unique(labs)) <= set(range(-1, k))

@@ -1,0 +1,159 @@
+"""Training substrate: optimizer, schedule, microbatching, checkpointing."""
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.train import (AdamWConfig, TrainStepConfig, adamw_init,
+                         adamw_update, make_train_step, warmup_cosine)
+from repro.train import checkpoint as ckpt
+
+
+def toy_params(key=0):
+    k = jax.random.PRNGKey(key)
+    k1, k2 = jax.random.split(k)
+    return {"w": jax.random.normal(k1, (8, 4), jnp.float32),
+            "b": jnp.zeros((4,), jnp.bfloat16)}
+
+
+def toy_loss(params, batch, rules=None):
+    x, y = batch["x"], batch["y"]
+    pred = x @ params["w"] + params["b"].astype(jnp.float32)
+    return jnp.mean((pred - y) ** 2)
+
+
+def toy_batch(n=16, key=1):
+    k = jax.random.PRNGKey(key)
+    kx, ky = jax.random.split(k)
+    return {"x": jax.random.normal(kx, (n, 8), jnp.float32),
+            "y": jax.random.normal(ky, (n, 4), jnp.float32)}
+
+
+class TestOptimizer:
+    def test_masters_are_f32(self):
+        state = adamw_init(toy_params())
+        assert state["master"]["b"].dtype == jnp.float32
+
+    def test_update_descends(self):
+        params = toy_params()
+        state = adamw_init(params)
+        batch = toy_batch()
+        cfg = AdamWConfig(weight_decay=0.0)
+        for _ in range(20):
+            loss, grads = jax.value_and_grad(toy_loss)(params, batch)
+            params, state, gnorm = adamw_update(grads, state, params,
+                                                1e-2, cfg)
+        assert float(toy_loss(params, batch)) < float(
+            toy_loss(toy_params(), batch))
+
+    def test_grad_clip_bounds_update(self):
+        params = toy_params()
+        state = adamw_init(params)
+        huge = jax.tree.map(lambda p: jnp.full_like(p, 1e9), params)
+        cfg = AdamWConfig(grad_clip=1.0, weight_decay=0.0)
+        new, state, gnorm = adamw_update(huge, state, params, 1e-3, cfg)
+        assert float(gnorm) > 1e8
+        delta = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(
+            a.astype(jnp.float32) - b.astype(jnp.float32)))), new, params)
+        assert max(jax.tree.leaves(delta)) < 1.0   # lr-scale steps only
+
+    def test_param_dtype_preserved(self):
+        params = toy_params()
+        state = adamw_init(params)
+        loss, grads = jax.value_and_grad(toy_loss)(params, toy_batch())
+        new, _, _ = adamw_update(grads, state, params, 1e-3, AdamWConfig())
+        assert new["b"].dtype == jnp.bfloat16
+
+
+class TestSchedule:
+    def test_warmup_then_decay(self):
+        lr0 = float(warmup_cosine(0, peak_lr=1.0, warmup_steps=10,
+                                  total_steps=100))
+        lr_peak = float(warmup_cosine(10, peak_lr=1.0, warmup_steps=10,
+                                      total_steps=100))
+        lr_end = float(warmup_cosine(100, peak_lr=1.0, warmup_steps=10,
+                                     total_steps=100))
+        assert lr0 == 0.0
+        assert lr_peak == pytest.approx(1.0)
+        assert lr_end == pytest.approx(0.1, rel=1e-3)
+
+
+class TestMicrobatching:
+    def test_equivalent_to_full_batch(self):
+        """Grad accumulation must match the single-shot gradient."""
+        params = toy_params()
+        batch = toy_batch(n=16)
+        outs = {}
+        for mb in (1, 4):
+            step = make_train_step(toy_loss, TrainStepConfig(
+                peak_lr=1e-2, warmup_steps=0, total_steps=10,
+                microbatches=mb))
+            p, s, m = step(params, adamw_init(params), batch, jnp.int32(1))
+            outs[mb] = (jax.tree.leaves(p), float(m["loss"]))
+        for a, b in zip(outs[1][0], outs[4][0]):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=1e-5, atol=1e-6)
+        assert outs[1][1] == pytest.approx(outs[4][1], rel=1e-5)
+
+
+class TestCheckpoint:
+    def test_roundtrip_atomic(self, tmp_path):
+        tree = (toy_params(), adamw_init(toy_params()))
+        d = str(tmp_path / "ck")
+        ckpt.save(d, 3, tree, extras={"step": 3, "cursor": 17})
+        assert ckpt.latest_step(d) == 3
+        like = jax.eval_shape(lambda: tree)
+        restored, extras = ckpt.restore(d, 3, like)
+        assert extras["cursor"] == 17
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(
+                np.asarray(a, np.float32), np.asarray(b, np.float32))
+            assert a.dtype == b.dtype   # bf16 survives the npy round-trip
+
+    def test_tmp_dirs_ignored_and_gced(self, tmp_path):
+        d = str(tmp_path / "ck")
+        os.makedirs(os.path.join(d, "step_9.tmp"))
+        assert ckpt.latest_step(d) is None
+        ckpt.save(d, 1, {"w": jnp.ones((2,))})
+        assert not any(n.endswith(".tmp") for n in os.listdir(d))
+
+    def test_latest_of_many(self, tmp_path):
+        d = str(tmp_path / "ck")
+        for s in (1, 5, 3):
+            ckpt.save(d, s, {"w": jnp.ones((2,)) * s})
+        assert ckpt.latest_step(d) == 5
+
+    def test_restore_rejects_wrong_shape(self, tmp_path):
+        d = str(tmp_path / "ck")
+        ckpt.save(d, 0, {"w": jnp.ones((4,))})
+        with pytest.raises(AssertionError):
+            ckpt.restore(d, 0, {"w": jax.ShapeDtypeStruct((8,),
+                                                          jnp.float32)})
+
+
+class TestPipeline:
+    def test_deterministic_and_restorable(self):
+        from repro.configs import ARCHS, reduce_config
+        from repro.data.tokens import TokenPipeline
+        cfg = reduce_config(ARCHS["gemma-2b"])
+        p1 = TokenPipeline(cfg, batch=2, seq_len=32, seed=7)
+        b0 = next(p1)
+        b1 = next(p1)
+        p2 = TokenPipeline(cfg, batch=2, seq_len=32, seed=7)
+        p2.load_state_dict({"seed": 7, "cursor": 1})
+        b1_replay = next(p2)
+        np.testing.assert_array_equal(b1["tokens"], b1_replay["tokens"])
+        assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+    def test_fixed_shapes(self):
+        from repro.configs import ARCHS, reduce_config
+        from repro.data.tokens import TokenPipeline
+        for arch in ("hubert-xlarge", "paligemma-3b", "qwen3-moe-30b-a3b"):
+            cfg = reduce_config(ARCHS[arch])
+            p = TokenPipeline(cfg, batch=2, seq_len=32)
+            shapes = [jax.tree.map(lambda a: a.shape, next(p))
+                      for _ in range(3)]
+            assert shapes[0] == shapes[1] == shapes[2]
