@@ -1,0 +1,94 @@
+"""Per-primitive kernel-backend throughput: jnp vs pallas.
+
+The perf baseline for the backend layer (repro.kernels.backend): times the
+two DPC primitives (+ the triangular prefix variant) on each backend and
+writes a JSON record, so future kernel PRs diff against today's numbers.
+
+On CPU containers the pallas backend runs in *interpret* mode — a
+correctness path, orders of magnitude slower than both compiled paths —
+so each record carries an ``interpret`` flag and the jnp row is the
+meaningful CPU number.  On TPU the ``pallas`` rows are the headline.
+
+    PYTHONPATH=src python -m benchmarks.backend_compare [--n 8192]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.backend import get_backend
+
+from .util import CSV, timeit
+
+PRIMITIVES = ("range_count", "denser_nn", "prefix_nn")
+
+
+def default_backends() -> list[str]:
+    if jax.default_backend() == "tpu":
+        return ["jnp", "pallas"]
+    return ["jnp", "pallas-interpret"]
+
+
+def bench_backend(name: str, pts, rho_key, d_cut: float, repeats: int):
+    be = get_backend(name)
+    runs = {
+        "range_count": lambda: be.range_count(pts, pts, d_cut),
+        "denser_nn": lambda: be.denser_nn(pts, rho_key, pts, rho_key),
+        "prefix_nn": lambda: be.prefix_nn(pts),
+    }
+    out = {}
+    n = pts.shape[0]
+    for prim, fn in runs.items():
+        secs = timeit(fn, repeats=repeats)
+        out[prim] = {
+            "seconds": secs,
+            "pairs_per_s": float(n) * n / secs,
+            "interpret": name == "pallas-interpret",
+        }
+    return out
+
+
+def main(n: int = 4096, d: int = 3, repeats: int = 3,
+         backends: list[str] | None = None,
+         out: str = "experiments/backends"):
+    backends = backends or default_backends()
+    rng = np.random.default_rng(0)
+    d_cut = 900.0
+    pts = jnp.asarray(rng.uniform(0, 30 * d_cut, (n, d)), jnp.float32)
+    rho_key = jnp.asarray(rng.permutation(n).astype(np.float32))
+
+    csv = CSV("backend_compare")
+    csv.header(f"n={n} d={d}")
+    rec = {"n": n, "d": d, "d_cut": d_cut, "platform": jax.default_backend(),
+           "primitives": {p: {} for p in PRIMITIVES}}
+    for name in backends:
+        res = bench_backend(name, pts, rho_key, d_cut, repeats)
+        for prim, r in res.items():
+            rec["primitives"][prim][name] = r
+            csv.add(primitive=prim, backend=name, seconds=r["seconds"],
+                    pairs_per_s=r["pairs_per_s"])
+
+    os.makedirs(out, exist_ok=True)
+    path = os.path.join(out, "backend_compare.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2)
+    print(f"[backend_compare] wrote {path}", flush=True)
+    return rec
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=4096)
+    ap.add_argument("--d", type=int, default=3)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--backends", default=None,
+                    help="comma-separated (default: platform pair)")
+    ap.add_argument("--out", default="experiments/backends")
+    a = ap.parse_args()
+    main(n=a.n, d=a.d, repeats=a.repeats,
+         backends=a.backends.split(",") if a.backends else None, out=a.out)

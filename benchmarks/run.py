@@ -19,8 +19,8 @@ def main():
     args = ap.parse_args()
     big = args.full
 
-    from . import (accuracy, decomposed, dpc_kv_bench, eps_sweep, memory,
-                   scaling_dcut, scaling_n, scaling_shards)
+    from . import (accuracy, backend_compare, decomposed, dpc_kv_bench,
+                   eps_sweep, memory, scaling_dcut, scaling_n, scaling_shards)
 
     sections = {
         "table2_3_4_accuracy": lambda: accuracy.main(
@@ -35,6 +35,8 @@ def main():
         "fig9_shards": lambda: scaling_shards.main(
             n=32_000 if big else 10_000),
         "dpc_kv": lambda: dpc_kv_bench.main(S=2048 if big else 768),
+        "backend_compare": lambda: backend_compare.main(
+            n=8192 if big else 2048),
         "roofline": _roofline,
     }
     only = set(args.only.split(",")) if args.only else None

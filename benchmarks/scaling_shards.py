@@ -29,8 +29,7 @@ from benchmarks.util import pick_dcut
 n, shards, dataset = @N@, @SHARDS@, "@DATASET@"
 pts, _ = real_proxy(dataset, n, seed=8)
 d_cut = pick_dcut(pts, target_rho=min(30.0, n / 200))
-mesh = jax.make_mesh((shards,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = jax.make_mesh((shards,), ("data",))
 t0 = time.time()
 res = distributed_dpc(pts, DistDPCConfig(d_cut=d_cut), mesh)
 res.rho.block_until_ready()

@@ -14,11 +14,19 @@ rho is exact (joint per-cell range count), so Theorem 4 (identical cluster
 centers to Ex-DPC for the same rho_min/delta_min) carries over: every point
 resolved by rules 1-2 has true delta < d_cut < delta_min under Ex-DPC too, and
 every root gets its exact delta.  Property-tested in tests/test_dpc_core.py.
+
+With a pallas backend the grouping grid (rule 1) is unchanged but both hot
+primitives go dense: rho is the tiled all-pairs range count, and ONE global
+denser-NN kernel pass serves rules 2 and 3 at once — the NN is within d_cut
+iff rule 2 fires, and otherwise IS the rule-3 exact root distance.
 """
 from __future__ import annotations
 
+import numpy as np
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.backend import get_backend
 
 from .dpc_types import DPCResult, with_jitter
 from .exdpc import resolve_fallback
@@ -37,15 +45,19 @@ def _group_segments(grid: Grid):
 def run_approxdpc(points, d_cut: float, *, g: int | None = None,
                   cell_block: int = 32, block: int = 256,
                   fallback_block: int = 4096,
-                  grid: Grid | None = None) -> DPCResult:
+                  grid: Grid | None = None, backend=None) -> DPCResult:
+    be = get_backend(backend)
     points = jnp.asarray(points, jnp.float32)
     n = points.shape[0]
     if grid is None:
         grid = build_grid(points, d_cut, g=g)
 
-    # --- exact local density via joint per-cell range count (§4.2) ---
-    rho_sorted = density_per_cell(grid, block=cell_block)
-    rho = rho_sorted[grid.inv_order]
+    # --- exact local density: joint per-cell range count (§4.2) on the
+    #     reference backend, tiled all-pairs kernel on pallas ---
+    if be.mxu_dense:
+        rho = be.range_count(points, points, d_cut)
+    else:
+        rho = density_per_cell(grid, block=cell_block)[grid.inv_order]
     rho_key = with_jitter(rho)
     rk_sorted = rho_key[grid.order]
 
@@ -60,6 +72,29 @@ def run_approxdpc(points, d_cut: float, *, g: int | None = None,
                                        num_segments=num_seg)
     parent_s = cellmax_slot[seg]                 # rule-1 parent (sorted idx)
     delta_s = jnp.full((n,), grid.d_cut, jnp.float32)
+
+    if be.mxu_dense:
+        # --- rules 2+3 in one rectangular denser-NN kernel pass over the
+        #     cell maxima only (|maxima| = |G| << n, the paper's whole
+        #     point): NN within d_cut -> rule 2 (delta stamped d_cut);
+        #     NN beyond d_cut -> rule 3 exact root delta (inf at the peak).
+        is_cm = np.asarray(is_cellmax[grid.inv_order])
+        cm_rows = is_cm.nonzero()[0]
+        q_pts = points[cm_rows]
+        q_rk = rho_key[cm_rows]
+        nn_delta, nn_parent = be.denser_nn(q_pts, q_rk, points, rho_key,
+                                           block=fallback_block)
+        parent1 = jnp.where(parent_s >= 0, grid.order[parent_s], -1)
+        parent1 = parent1[grid.inv_order]
+        found2 = jnp.isfinite(nn_delta) & (nn_delta < d_cut)
+        cm_delta = jnp.where(found2, jnp.float32(d_cut),
+                             jnp.where(jnp.isfinite(nn_delta), nn_delta,
+                                       jnp.inf))
+        delta = jnp.full((n,), d_cut, jnp.float32).at[cm_rows].set(cm_delta)
+        parent = parent1.at[cm_rows].set(nn_parent).astype(jnp.int32)
+        return DPCResult(rho=rho, rho_key=rho_key, delta=delta,
+                         parent=parent)
+
     resolved_s = ~is_cellmax
 
     # --- rule 2: cell maxima consult the d_cut stencil ---
@@ -78,6 +113,6 @@ def run_approxdpc(points, d_cut: float, *, g: int | None = None,
 
     # --- rule 3: exact fallback for the stem roots ---
     delta, parent = resolve_fallback(points, rho_key, delta, parent, resolved,
-                                     block=fallback_block)
+                                     block=fallback_block, backend=be)
     return DPCResult(rho=rho, rho_key=rho_key, delta=delta,
                      parent=parent.astype(jnp.int32))

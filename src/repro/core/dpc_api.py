@@ -21,6 +21,22 @@ Algorithm = Literal["scan", "exdpc", "approxdpc", "sapproxdpc",
 
 @dataclass(frozen=True)
 class DPCConfig:
+    """One config for every DPC algorithm.
+
+    ``backend`` selects the kernel backend for the two hot primitives
+    (range count / denser-NN, see repro.kernels.backend):
+
+    * ``None`` (default) — platform auto-detection: the Pallas MXU kernels
+      on TPU, the pure-jnp stencil/scan reference elsewhere.
+    * ``"jnp"`` — force the blocked direct-difference reference.
+    * ``"pallas"`` — force the Mosaic TPU kernels (dense tiled formulation).
+    * ``"pallas-interpret"`` — the same kernels under the Pallas interpreter
+      (CPU CI; slow, correctness only).
+
+    Applies to ``scan``/``exdpc``/``approxdpc``/``sapproxdpc``; the LSH-DDP
+    and CFSFDP-A baselines always run their own reference math.
+    """
+
     d_cut: float
     rho_min: float = 10.0
     delta_min: float | None = None      # default 2 * d_cut (must be > d_cut)
@@ -28,6 +44,7 @@ class DPCConfig:
     eps: float = 0.8                    # S-Approx-DPC only
     grid_dims: int | None = None        # candidate-grid dims (default min(d,3))
     block: int = 256
+    backend: str | None = None          # kernel backend (see class docstring)
 
     def resolved_delta_min(self) -> float:
         dm = 2.0 * self.d_cut if self.delta_min is None else self.delta_min
@@ -37,11 +54,15 @@ class DPCConfig:
 
 
 _RUNNERS = {
-    "scan": lambda p, c: run_scan(p, c.d_cut, block=max(c.block, 256)),
-    "exdpc": lambda p, c: run_exdpc(p, c.d_cut, g=c.grid_dims, block=c.block),
-    "approxdpc": lambda p, c: run_approxdpc(p, c.d_cut, g=c.grid_dims, block=c.block),
+    "scan": lambda p, c: run_scan(p, c.d_cut, block=max(c.block, 256),
+                                  backend=c.backend),
+    "exdpc": lambda p, c: run_exdpc(p, c.d_cut, g=c.grid_dims, block=c.block,
+                                    backend=c.backend),
+    "approxdpc": lambda p, c: run_approxdpc(p, c.d_cut, g=c.grid_dims,
+                                            block=c.block, backend=c.backend),
     "sapproxdpc": lambda p, c: run_sapproxdpc(p, c.d_cut, eps=c.eps,
-                                              g=c.grid_dims, block=c.block),
+                                              g=c.grid_dims, block=c.block,
+                                              backend=c.backend),
     "lsh_ddp": lambda p, c: run_lsh_ddp(p, c.d_cut),
     "cfsfdp_a": lambda p, c: run_cfsfdp_a(p, c.d_cut),
 }

@@ -2,21 +2,31 @@
 
 Paper mechanism: kd-tree range search for rho; incrementally-rebuilt kd-tree
 over density-sorted points for delta (which the paper proves cannot be
-parallelized).  TPU adaptation (DESIGN.md §2): grid-stencil range count for
-rho; for delta, the invariant "the tree contains exactly the denser points"
-becomes a *static masked search* — first the d_cut stencil (exact whenever a
-denser point exists within d_cut, i.e. the paper's Lemma-2 alpha fraction),
-then a global masked-NN fallback for the few stencil-unresolved points.
-Output is exact — bit-equal to the O(n^2) Scan oracle (tested).
+parallelized).  Two exact realizations, selected by the kernel backend:
+
+* ``jnp`` (reference): grid-stencil range count for rho; for delta, the
+  invariant "the tree contains exactly the denser points" becomes a *static
+  masked search* — first the d_cut stencil (exact whenever a denser point
+  exists within d_cut, i.e. the paper's Lemma-2 alpha fraction), then a
+  global masked-NN fallback for the few stencil-unresolved points.
+* ``pallas`` / ``pallas-interpret`` (dense MXU): rho is the tiled all-pairs
+  range-count kernel; delta sorts points by descending density key and runs
+  the triangular prefix-NN kernel — the incremental-tree invariant as a
+  static lower-triangular tile sweep (kernels/dependent.py).
+
+Output is exact either way — bit-equal to the O(n^2) Scan oracle (tested;
+the pallas form up to f32 threshold rounding, see kernels/backend.py).
 """
 from __future__ import annotations
 
 import numpy as np
 import jax.numpy as jnp
 
+from repro.kernels.backend import get_backend
+
 from .dpc_types import DPCResult, with_jitter
 from .grid import build_grid, Grid
-from .stencil import density_per_point, dependent_stencil, masked_nn_rows
+from .stencil import density_per_point, dependent_stencil
 
 
 def _pow2_pad(m: int) -> int:
@@ -26,8 +36,10 @@ def _pow2_pad(m: int) -> int:
     return p
 
 
-def resolve_fallback(points, rho_key, delta, parent, resolved, block=4096):
-    """Global masked-NN for stencil-unresolved rows (host-orchestrated)."""
+def resolve_fallback(points, rho_key, delta, parent, resolved, block=4096,
+                     backend=None):
+    """Global denser-NN for stencil-unresolved rows (host-orchestrated)."""
+    be = get_backend(backend)
     unresolved = np.asarray(~resolved).nonzero()[0]
     if unresolved.size == 0:
         return delta, parent
@@ -35,7 +47,7 @@ def resolve_fallback(points, rho_key, delta, parent, resolved, block=4096):
     rows = np.pad(unresolved, (0, m - unresolved.size))
     q_pts = points[rows]
     q_rk = jnp.asarray(rho_key)[rows]
-    fdelta, fparent = masked_nn_rows(q_pts, q_rk, points, rho_key, block=block)
+    fdelta, fparent = be.denser_nn(q_pts, q_rk, points, rho_key, block=block)
     fdelta = np.asarray(fdelta)[: unresolved.size]
     fparent = np.asarray(fparent)[: unresolved.size]
     delta = np.asarray(delta).copy()
@@ -46,10 +58,27 @@ def resolve_fallback(points, rho_key, delta, parent, resolved, block=4096):
     return jnp.asarray(delta), jnp.asarray(parent)
 
 
+def _run_exdpc_dense(points, d_cut: float, be, block: int) -> DPCResult:
+    """Dense kernel path: all-pairs rho tile sweep + triangular prefix NN."""
+    rho = be.range_count(points, points, d_cut)
+    rho_key = with_jitter(rho)
+    order = jnp.argsort(-rho_key)           # descending: prefix == denser
+    inv = jnp.argsort(order)
+    delta_s, parent_s = be.prefix_nn(points[order], block=block)
+    parent_orig = jnp.where(parent_s >= 0,
+                            order[jnp.maximum(parent_s, 0)], -1)
+    return DPCResult(rho=rho, rho_key=rho_key, delta=delta_s[inv],
+                     parent=parent_orig[inv].astype(jnp.int32))
+
+
 def run_exdpc(points, d_cut: float, *, g: int | None = None,
               block: int = 256, fallback_block: int = 4096,
-              grid: Grid | None = None) -> DPCResult:
+              grid: Grid | None = None, backend=None) -> DPCResult:
+    be = get_backend(backend)
     points = jnp.asarray(points, jnp.float32)
+    if be.mxu_dense:
+        return _run_exdpc_dense(points, d_cut, be, block)
+
     if grid is None:
         grid = build_grid(points, d_cut, g=g)
 
@@ -66,6 +95,6 @@ def run_exdpc(points, d_cut: float, *, g: int | None = None,
     resolved = resolved_s[grid.inv_order]
 
     delta, parent = resolve_fallback(points, rho_key, delta, parent, resolved,
-                                     block=fallback_block)
+                                     block=fallback_block, backend=be)
     return DPCResult(rho=rho, rho_key=rho_key, delta=delta,
                      parent=parent.astype(jnp.int32))

@@ -25,10 +25,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.backend import get_backend
+
 from .dpc_types import DPCResult, with_jitter
 from .exdpc import _pow2_pad
 from .grid import build_grid, Grid
-from .stencil import density_for_slots, dependent_stencil_slots, masked_nn_rows
+from .stencil import density_for_slots, dependent_stencil_slots
 
 
 def coarse_cell_key(points: jnp.ndarray, d_cut: float, eps: float) -> jnp.ndarray:
@@ -44,7 +46,8 @@ def coarse_cell_key(points: jnp.ndarray, d_cut: float, eps: float) -> jnp.ndarra
 def run_sapproxdpc(points, d_cut: float, eps: float = 0.8, *,
                    g: int | None = None, block: int = 256,
                    fallback_block: int = 4096,
-                   grid: Grid | None = None) -> DPCResult:
+                   grid: Grid | None = None, backend=None) -> DPCResult:
+    be = get_backend(backend)
     points = jnp.asarray(points, jnp.float32)
     n = points.shape[0]
     if grid is None:
@@ -66,7 +69,11 @@ def run_sapproxdpc(points, d_cut: float, eps: float = 0.8, *,
                                      constant_values=n))
 
     # --- exact rho for representatives only ---
-    rep_rho = density_for_slots(grid, rep_slots_p, block=block)[:num_reps]
+    if be.mxu_dense:    # dense rectangular range-count kernel: reps x all
+        rep_rho = be.range_count(grid.points[jnp.asarray(rep_slots)],
+                                 grid.points, d_cut)
+    else:
+        rep_rho = density_for_slots(grid, rep_slots_p, block=block)[:num_reps]
 
     # rho per point: members inherit their representative's rho
     rho_sorted = jnp.zeros((n,), jnp.float32)
@@ -78,34 +85,51 @@ def run_sapproxdpc(points, d_cut: float, eps: float = 0.8, *,
     rho_key = with_jitter(rho)
     rk_sorted = rho_key[grid.order]
 
-    # --- phase 1: stencil among representatives (d_cut ⊂ (1+eps)d_cut bound) --
     rep_mask_sorted = jnp.zeros((n,), bool).at[jnp.minimum(rep_slots_p, n - 1)].set(
         rep_slots_p < n)
-    rk_reps_only = jnp.where(rep_mask_sorted, rk_sorted, -jnp.inf)
-    p1_delta, p1_parent, p1_found = dependent_stencil_slots(
-        grid, rk_reps_only, rep_slots_p, block=block)
-    # The paper's phase-1 search radius is (1+eps)*d_cut and stamps that bound
-    # as the delta.  Our stencil only resolves within d_cut, so d_cut is the
-    # valid *and tighter* bound — resolved reps can never become spurious
-    # centers at large eps (beyond-paper improvement, DESIGN.md §9).
-    p1_delta = jnp.where(p1_found, jnp.float32(d_cut), jnp.inf)
-
-    # --- phase 2: exact NN among representatives for unresolved reps ---
-    found_np = np.asarray(p1_found[:num_reps])
-    unresolved = np.nonzero(~found_np)[0]
     rep_pts = grid.points[jnp.asarray(rep_slots)]
     rep_rk = rk_sorted[jnp.asarray(rep_slots)]
-    p2_delta = np.asarray(p1_delta[:num_reps]).copy()
-    p2_parent = np.asarray(p1_parent[:num_reps]).copy()   # grid-sorted slots
-    if unresolved.size:
-        mq = _pow2_pad(unresolved.size)
-        qs = np.pad(unresolved, (0, mq - unresolved.size))
-        fd, fp = masked_nn_rows(rep_pts[qs], rep_rk[qs], rep_pts, rep_rk,
-                                block=fallback_block)
-        fd = np.asarray(fd)[: unresolved.size]
-        fp = np.asarray(fp)[: unresolved.size]            # rep-index space
-        p2_delta[unresolved] = np.where(np.isfinite(fd), fd, np.inf)
-        p2_parent[unresolved] = np.where(fp >= 0, rep_slots[np.maximum(fp, 0)], -1)
+    if be.mxu_dense:
+        # --- phases 1+2 in one dense denser-NN kernel pass over the reps:
+        #     NN within d_cut -> phase-1 resolution (delta stamped d_cut,
+        #     the tighter-than-paper bound below); otherwise the NN already
+        #     IS the phase-2 exact answer.
+        nn_d, nn_p = be.denser_nn(rep_pts, rep_rk, rep_pts, rep_rk,
+                                  block=fallback_block)
+        nn_d = np.asarray(nn_d)
+        nn_p = np.asarray(nn_p)                           # rep-index space
+        found = np.isfinite(nn_d) & (nn_d < d_cut)
+        p2_delta = np.where(found, np.float32(d_cut),
+                            np.where(np.isfinite(nn_d), nn_d, np.inf))
+        p2_parent = np.where(nn_p >= 0, rep_slots[np.maximum(nn_p, 0)], -1)
+    else:
+        # --- phase 1: stencil among representatives (d_cut ⊂ (1+eps)d_cut
+        #     bound) ---
+        rk_reps_only = jnp.where(rep_mask_sorted, rk_sorted, -jnp.inf)
+        p1_delta, p1_parent, p1_found = dependent_stencil_slots(
+            grid, rk_reps_only, rep_slots_p, block=block)
+        # The paper's phase-1 search radius is (1+eps)*d_cut and stamps that
+        # bound as the delta.  Our stencil only resolves within d_cut, so
+        # d_cut is the valid *and tighter* bound — resolved reps can never
+        # become spurious centers at large eps (beyond-paper improvement,
+        # DESIGN.md §9).
+        p1_delta = jnp.where(p1_found, jnp.float32(d_cut), jnp.inf)
+
+        # --- phase 2: exact NN among representatives for unresolved reps ---
+        found_np = np.asarray(p1_found[:num_reps])
+        unresolved = np.nonzero(~found_np)[0]
+        p2_delta = np.asarray(p1_delta[:num_reps]).copy()
+        p2_parent = np.asarray(p1_parent[:num_reps]).copy()  # sorted slots
+        if unresolved.size:
+            mq = _pow2_pad(unresolved.size)
+            qs = np.pad(unresolved, (0, mq - unresolved.size))
+            fd, fp = be.denser_nn(rep_pts[qs], rep_rk[qs], rep_pts, rep_rk,
+                                  block=fallback_block)
+            fd = np.asarray(fd)[: unresolved.size]
+            fp = np.asarray(fp)[: unresolved.size]        # rep-index space
+            p2_delta[unresolved] = np.where(np.isfinite(fd), fd, np.inf)
+            p2_parent[unresolved] = np.where(
+                fp >= 0, rep_slots[np.maximum(fp, 0)], -1)
 
     # --- assemble per-point delta/parent in sorted space ---
     rep_parent_per_seg = jnp.full((n,), -1, jnp.int32).at[

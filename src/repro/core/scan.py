@@ -1,81 +1,48 @@
 """Scan: the paper's straightforward O(n^2) DPC (§2.1). Correctness oracle.
 
-Row x column blocked so memory stays O(block^2).  Uses the direct
-difference form of squared distance — bit-identical to the grid/stencil path,
-so exact algorithms can be compared with equality, not tolerances.  (The
-Pallas kernels use the MXU expanded form; their tests use threshold-safe
-tolerances instead — see tests/test_kernels.py.)
+Row x column blocked so memory stays O(block^2).  The default (``jnp``)
+backend uses the direct difference form of squared distance — bit-identical
+to the grid/stencil path, so exact algorithms can be compared with equality,
+not tolerances.  With a pallas backend the same two primitives run as MXU
+expanded-form tiles (threshold-safe tolerances apply — see
+tests/test_kernels.py); ``run_scan`` is then the dense-hardware DPC rather
+than the oracle.
 """
 from __future__ import annotations
 
-from functools import partial
-
-import jax
 import jax.numpy as jnp
+
+from repro.kernels.backend import get_backend
 
 from .dpc_types import DPCResult, with_jitter
 
 
-@partial(jax.jit, static_argnames=("block",))
-def local_density_scan(points: jnp.ndarray, d_cut: float, block: int = 512) -> jnp.ndarray:
-    """rho_i = |{j : dist(i,j) < d_cut}| by blocked full scan (self included)."""
-    n, d = points.shape
-    nb = -(-n // block)
-    npad = nb * block
-    pts = jnp.pad(points, ((0, npad - n), (0, 0)), constant_values=jnp.inf)
-    d2cut = jnp.float32(d_cut) ** 2
+def local_density_scan(points: jnp.ndarray, d_cut: float,
+                       block: int = 512) -> jnp.ndarray:
+    """rho_i = |{j : dist(i,j) < d_cut}| by blocked full scan (self included).
 
-    def row_block(i0):
-        rows = jax.lax.dynamic_slice_in_dim(pts, i0, block, 0)
-
-        def col_block(j, acc):
-            cols = jax.lax.dynamic_slice_in_dim(pts, j * block, block, 0)
-            d2 = jnp.sum((rows[:, None, :] - cols[None, :, :]) ** 2, -1)
-            return acc + jnp.sum(d2 < d2cut, axis=1).astype(jnp.int32)
-
-        return jax.lax.fori_loop(0, nb, col_block, jnp.zeros((block,), jnp.int32))
-
-    cnt = jax.lax.map(row_block, jnp.arange(nb) * block).reshape(-1)[:n]
-    return cnt.astype(jnp.float32)
+    Thin alias of the jnp backend's range-count primitive — one point of
+    truth for the direct-difference math the oracle contract relies on.
+    """
+    return get_backend("jnp").range_count(points, points, d_cut, block=block)
 
 
-@partial(jax.jit, static_argnames=("block",))
-def dependent_scan(points: jnp.ndarray, rho_key: jnp.ndarray, block: int = 512):
-    """Exact dependent point/distance by blocked full scan with a rho mask."""
-    n, d = points.shape
-    nb = -(-n // block)
-    npad = nb * block
-    pts = jnp.pad(points, ((0, npad - n), (0, 0)), constant_values=jnp.inf)
-    rk = jnp.pad(rho_key, (0, npad - n), constant_values=-jnp.inf)
-
-    def row_block(i0):
-        rows = jax.lax.dynamic_slice_in_dim(pts, i0, block, 0)
-        rrk = jax.lax.dynamic_slice_in_dim(rk, i0, block, 0)
-
-        def col_block(j, carry):
-            best, arg = carry
-            cols = jax.lax.dynamic_slice_in_dim(pts, j * block, block, 0)
-            crk = jax.lax.dynamic_slice_in_dim(rk, j * block, block, 0)
-            d2 = jnp.sum((rows[:, None, :] - cols[None, :, :]) ** 2, -1)
-            d2 = jnp.where(crk[None, :] > rrk[:, None], d2, jnp.inf)
-            jj = jnp.argmin(d2, axis=1)
-            cand = d2[jnp.arange(block), jj]
-            better = cand < best
-            return (jnp.where(better, cand, best),
-                    jnp.where(better, j * block + jj, arg))
-
-        best, arg = jax.lax.fori_loop(
-            0, nb, col_block,
-            (jnp.full((block,), jnp.inf), jnp.full((block,), -1, jnp.int64)))
-        return jnp.sqrt(best), jnp.where(jnp.isfinite(best), arg, -1)
-
-    delta, parent = jax.lax.map(row_block, jnp.arange(nb) * block)
-    return delta.reshape(-1)[:n], parent.reshape(-1)[:n].astype(jnp.int32)
+def dependent_scan(points: jnp.ndarray, rho_key: jnp.ndarray,
+                   block: int = 512):
+    """Exact dependent point/distance by blocked full scan with a rho mask
+    (alias of the jnp backend's denser-NN primitive, see above)."""
+    return get_backend("jnp").denser_nn(points, rho_key, points, rho_key,
+                                        block=block)
 
 
-def run_scan(points, d_cut: float, block: int = 512) -> DPCResult:
+def run_scan(points, d_cut: float, block: int = 512,
+             backend=None) -> DPCResult:
+    """O(n^2) DPC through the kernel backend (``None`` -> platform default;
+    the ``jnp`` default on CPU is the bit-exact oracle)."""
+    be = get_backend(backend)
     points = jnp.asarray(points, jnp.float32)
-    rho = local_density_scan(points, d_cut, block=block)
+    rho = be.range_count(points, points, d_cut, block=block)
     rho_key = with_jitter(rho)
-    delta, parent = dependent_scan(points, rho_key, block=block)
+    delta, parent = be.denser_nn(points, rho_key, points, rho_key,
+                                 block=block)
     return DPCResult(rho=rho, rho_key=rho_key, delta=delta, parent=parent)

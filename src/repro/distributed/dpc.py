@@ -41,6 +41,7 @@ from jax.experimental.shard_map import shard_map
 
 from repro.core.dpc_types import DPCResult, with_jitter
 from repro.core.grid import build_grid, point_span_bounds
+from repro.kernels.backend import get_backend
 
 
 @dataclass(frozen=True)
@@ -54,6 +55,12 @@ class DistDPCConfig:
     #   intersect each shard's stencil window (traffic = (W+m)*d — the
     #   space-sorted layout makes candidate windows narrow; §Perf).
     strategy: str = "gather"
+    # Kernel backend for the per-shard tiles (repro.kernels.backend).  With
+    # a pallas backend + 'gather', the rho/delta phases run the dense MXU
+    # kernels per shard (my rows x gathered table) and the delta phase is
+    # already globally exact, so the fallback phase is skipped.  The 'halo'
+    # strategy is stencil-shaped and always uses the jnp reference tiles.
+    backend: str | None = None
 
 
 def _pad_rows(x, m, value):
@@ -247,39 +254,43 @@ def _make_delta(axis, d_cut, block, span_w):
     return delta
 
 
-def _make_fallback(axis, block):
+def _make_fallback(axis, block, be):
     def fallback(q_pts, q_rk, tbl_my, rk_my):
-        """Dense masked NN for unresolved rows (padded, rk=+inf rows inert)."""
+        """Dense denser-NN for unresolved rows (padded, rk=+inf rows inert):
+        the backend's Def.-2 primitive over my queries x gathered table."""
         tbl = jax.lax.all_gather(tbl_my, axis, axis=0, tiled=True)
         rk_all = jax.lax.all_gather(rk_my, axis, axis=0, tiled=True)
-        n = tbl.shape[0]
-        m = q_pts.shape[0]
-        nb = _blocked(n, block)
-        npad = nb * block
-        tbl_p = _pad_rows(tbl, npad, 0.0)
-        rk_p = _pad_rows(rk_all, npad, -jnp.inf)
-
-        def col(j0):
-            cols = jax.lax.dynamic_slice_in_dim(tbl_p, j0, block, 0)
-            crk = jax.lax.dynamic_slice_in_dim(rk_p, j0, block, 0)
-            d2 = jnp.sum((q_pts[:, None, :] - cols[None, :, :]) ** 2, -1)
-            d2 = jnp.where(crk[None, :] > q_rk[:, None], d2, jnp.inf)
-            j = jnp.argmin(d2, axis=1)
-            return d2[jnp.arange(m), j], (j0 + j).astype(jnp.int32)
-
-        d2s, js = jax.lax.map(col, jnp.arange(nb) * block)
-        kk = jnp.argmin(d2s, axis=0)
-        best = d2s[kk, jnp.arange(m)]
-        parent = jnp.where(jnp.isfinite(best), js[kk, jnp.arange(m)], -1)
-        return jnp.sqrt(best), parent.astype(jnp.int32)
+        return be.denser_nn(q_pts, q_rk, tbl, rk_all, block=block)
 
     return fallback
+
+
+def _make_rho_dense(axis, d_cut, block, be):
+    def rho(my_pts, tbl_my):
+        """Dense MXU tiles: my rows x gathered table (kernel range count)."""
+        tbl = jax.lax.all_gather(tbl_my, axis, axis=0, tiled=True)
+        return be.range_count(my_pts, tbl, d_cut, block=block)
+
+    return rho
+
+
+def _make_delta_dense(axis, block, be):
+    def delta(my_pts, my_rk, tbl_my, rk_my):
+        """Dense denser-NN kernel: globally exact, no fallback needed."""
+        tbl = jax.lax.all_gather(tbl_my, axis, axis=0, tiled=True)
+        rk_all = jax.lax.all_gather(rk_my, axis, axis=0, tiled=True)
+        dd, pp = be.denser_nn(my_pts, my_rk, tbl, rk_all, block=block)
+        # the only infinite delta is the global peak (already final)
+        return dd, pp, jnp.ones(dd.shape, bool)
+
+    return delta
 
 
 def distributed_dpc(points, cfg: DistDPCConfig, mesh: Mesh) -> DPCResult:
     """Exact DPC (Ex-DPC semantics) on a device mesh.  Host-orchestrated
     phases, each an SPMD shard_map over cfg.data_axis."""
     points = jnp.asarray(points, jnp.float32)
+    be = get_backend(cfg.backend)
     n_orig, d = points.shape
     S_data = math.prod(mesh.devices.shape)  # shard over ALL mesh axes' product
     axis = cfg.data_axis
@@ -291,15 +302,17 @@ def distributed_dpc(points, cfg: DistDPCConfig, mesh: Mesh) -> DPCResult:
 
     grid = build_grid(points, cfg.d_cut)
     n = grid.points.shape[0]
-    starts, ends = point_span_bounds(grid)          # (n, S_spans)
-    span_w = grid.span_cap
     # pad rows to a multiple of the shard count; padded rows are inert
     m = -(-n // S_data) * S_data
     pts_s = _pad_rows(grid.points, m, 1e9)
-    starts_p = _pad_rows(starts, m, 0).astype(jnp.int32)
-    ends_p = _pad_rows(ends, m, 0).astype(jnp.int32)
 
     halo = cfg.strategy == "halo"
+    dense = be.mxu_dense and not halo   # halo windows are stencil-shaped
+    if halo or not dense:   # the dense kernel tiles never read the spans
+        starts, ends = point_span_bounds(grid)      # (n, S_spans)
+        span_w = grid.span_cap
+        starts_p = _pad_rows(starts, m, 0).astype(jnp.int32)
+        ends_p = _pad_rows(ends, m, 0).astype(jnp.int32)
     if halo:
         # per-shard window bounds from the span table (host: data statistic)
         rows_per = m // S_data
@@ -328,6 +341,12 @@ def distributed_dpc(points, cfg: DistDPCConfig, mesh: Mesh) -> DPCResult:
                            in_specs=(P(axis),) * 5, out_specs=P(axis))
         rho_sorted = jax.jit(sm_rho)(pts_s, starts_p, ends_p, pts_s,
                                      lo_arr)[:n]
+    elif dense:
+        rho_fn = _make_rho_dense(axis, cfg.d_cut, cfg.block, be)
+        sm_rho = shard_map(rho_fn, mesh=flat_mesh,
+                           in_specs=(P(axis), P(axis)), out_specs=P(axis),
+                           check_rep=False)   # pallas_call lacks a rep rule
+        rho_sorted = jax.jit(sm_rho)(pts_s, pts_s)[:n]
     else:
         rho_fn = _make_rho(axis, cfg.d_cut, cfg.block, span_w)
         sm_rho = shard_map(rho_fn, mesh=flat_mesh,
@@ -349,6 +368,14 @@ def distributed_dpc(points, cfg: DistDPCConfig, mesh: Mesh) -> DPCResult:
         dlt_s, par_s, ok_s = jax.jit(sm_delta)(
             pts_s, rk_query, starts_p, ends_p, pts_s, rk_sorted_full,
             lo_arr)
+    elif dense:
+        delta_fn = _make_delta_dense(axis, cfg.block, be)
+        sm_delta = shard_map(delta_fn, mesh=flat_mesh,
+                             in_specs=(P(axis),) * 4,
+                             out_specs=(P(axis), P(axis), P(axis)),
+                             check_rep=False)  # pallas_call lacks a rep rule
+        dlt_s, par_s, ok_s = jax.jit(sm_delta)(
+            pts_s, rk_query, pts_s, rk_sorted_full)
     else:
         delta_fn = _make_delta(axis, cfg.d_cut, cfg.block, span_w)
         sm_delta = shard_map(delta_fn, mesh=flat_mesh,
@@ -368,10 +395,14 @@ def distributed_dpc(points, cfg: DistDPCConfig, mesh: Mesh) -> DPCResult:
         q_rk = jnp.asarray(np.where(
             np.arange(cap) < unresolved.size,
             np.asarray(rho_key[grid.order])[q_idx], np.inf))
-        fb_fn = _make_fallback(axis, max(cfg.block, 1024))
+        # halo results are direct-difference throughout, so its fallback
+        # stays on the jnp reference even when cfg.backend is pallas
+        fb_be = get_backend("jnp") if halo else be
+        fb_fn = _make_fallback(axis, max(cfg.block, 1024), fb_be)
         sm_fb = shard_map(fb_fn, mesh=flat_mesh,
                           in_specs=(P(axis), P(axis), P(axis), P(axis)),
-                          out_specs=(P(axis), P(axis)))
+                          out_specs=(P(axis), P(axis)),
+                          check_rep=not fb_be.mxu_dense)
         fd, fp = jax.jit(sm_fb)(q_pts, q_rk, pts_s, rk_sorted_full)
         fd = np.asarray(fd)[: unresolved.size]
         fp = np.asarray(fp)[: unresolved.size]

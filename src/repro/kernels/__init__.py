@@ -1,4 +1,10 @@
-"""Pallas TPU kernels for DPC's two compute hot spots (+ jnp oracles)."""
-from .ops import dependent_masked, dependent_prefix, local_density
+"""Pallas TPU kernels for DPC's two compute hot spots (+ jnp oracles), and
+the pluggable backend registry that routes every DPC hot path onto them."""
+from .backend import (KernelBackend, available_backends,
+                      default_backend_name, get_backend, register_backend)
+from .ops import (dependent_masked, dependent_prefix, local_density,
+                  local_density_xy)
 
-__all__ = ["local_density", "dependent_prefix", "dependent_masked"]
+__all__ = ["local_density", "local_density_xy", "dependent_prefix",
+           "dependent_masked", "KernelBackend", "get_backend",
+           "register_backend", "available_backends", "default_backend_name"]

@@ -1,0 +1,208 @@
+"""Pluggable kernel backend for DPC's two primitives.
+
+The paper's entire contribution is making two primitives fast on parallel
+hardware: the range count behind local density (Def. 1) and the
+nearest-strictly-denser-neighbor search behind the dependent point (Def. 2).
+This module is the seam that lets every algorithm (core, distributed, serve)
+pick where those primitives run:
+
+* ``jnp``              — blocked pure-jnp direct-difference forms: the
+                         reference implementation and the CPU default.  Bit-
+                         identical to the historical ``core.scan`` oracle.
+* ``pallas``           — the Mosaic TPU kernels in ``kernels/density.py`` /
+                         ``kernels/dependent.py`` (MXU expanded-form tiles).
+* ``pallas-interpret`` — the same kernels under the Pallas interpreter, so CI
+                         containers without a TPU exercise the kernel code
+                         paths (slow; correctness only).
+
+``get_backend(None)`` auto-detects: ``pallas`` on TPU, ``jnp`` elsewhere.
+Numerical contract: the pallas backends compute squared distances in the MXU
+expanded form |x|^2+|y|^2-2xy (then re-evaluate the winner direct-diff, see
+dependent._refine_winner_d2), so pairs within f32 rounding of a threshold can
+be classified differently from ``jnp``.  Equality tests draw data away from
+thresholds; production consumers treat the backends as interchangeable.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import ops
+
+__all__ = ["KernelBackend", "available_backends", "default_backend_name",
+           "get_backend", "register_backend"]
+
+
+# --------------------------------------------------------------- interface
+class KernelBackend:
+    """The two DPC primitives (+ the triangular prefix variant of Def. 2).
+
+    ``mxu_dense`` tells algorithm drivers this backend wants the dense tiled
+    formulation (all-pairs MXU tiles) rather than the grid-stencil gathers;
+    the stencil IS the jnp reference, so only the pallas backends set it.
+    """
+
+    name: str = "abstract"
+    mxu_dense: bool = False
+
+    def range_count(self, x, y, d_cut, *, block: int | None = None):
+        """(n,) f32: |{j : ||x_i - y_j|| < d_cut}| per row of x (Def. 1)."""
+        raise NotImplementedError
+
+    def denser_nn(self, x, x_key, y, y_key, *, block: int | None = None):
+        """(delta, parent): NN among y rows with y_key strictly greater
+        (Def. 2).  delta = +inf, parent = -1 where no such row exists."""
+        raise NotImplementedError
+
+    def prefix_nn(self, pts_sorted_desc, *, block: int | None = None):
+        """(delta, parent): NN among strict-prefix rows, input pre-sorted by
+        descending density key — Def. 2 as a triangular sweep (Ex-DPC)."""
+        raise NotImplementedError
+
+
+# ------------------------------------------------------------ jnp reference
+@partial(jax.jit, static_argnames=("block",))
+def _range_count_jnp(x, y, d_cut, block: int = 512):
+    """Blocked direct-difference range count (row blocks x column loop)."""
+    n, d = x.shape
+    m = y.shape[0]
+    nbr, nbc = -(-n // block), -(-m // block)
+    xp = jnp.pad(x, ((0, nbr * block - n), (0, 0)), constant_values=jnp.inf)
+    yp = jnp.pad(y, ((0, nbc * block - m), (0, 0)), constant_values=jnp.inf)
+    d2cut = jnp.asarray(d_cut, jnp.float32) ** 2
+
+    def row_block(i0):
+        rows = jax.lax.dynamic_slice_in_dim(xp, i0, block, 0)
+
+        def col_block(j, acc):
+            cols = jax.lax.dynamic_slice_in_dim(yp, j * block, block, 0)
+            d2 = jnp.sum((rows[:, None, :] - cols[None, :, :]) ** 2, -1)
+            return acc + jnp.sum(d2 < d2cut, axis=1).astype(jnp.int32)
+
+        return jax.lax.fori_loop(0, nbc, col_block,
+                                 jnp.zeros((block,), jnp.int32))
+
+    cnt = jax.lax.map(row_block, jnp.arange(nbr) * block).reshape(-1)[:n]
+    return cnt.astype(jnp.float32)
+
+
+@partial(jax.jit, static_argnames=("block",))
+def _denser_nn_jnp(x, x_key, y, y_key, block: int = 512):
+    """Blocked direct-difference masked NN with a running (min, argmin)."""
+    n, d = x.shape
+    m = y.shape[0]
+    nbr, nbc = -(-n // block), -(-m // block)
+    xp = jnp.pad(x, ((0, nbr * block - n), (0, 0)), constant_values=jnp.inf)
+    xk = jnp.pad(x_key, (0, nbr * block - n), constant_values=jnp.inf)
+    yp = jnp.pad(y, ((0, nbc * block - m), (0, 0)), constant_values=jnp.inf)
+    yk = jnp.pad(y_key, (0, nbc * block - m), constant_values=-jnp.inf)
+
+    def row_block(i0):
+        rows = jax.lax.dynamic_slice_in_dim(xp, i0, block, 0)
+        rrk = jax.lax.dynamic_slice_in_dim(xk, i0, block, 0)
+
+        def col_block(j, carry):
+            best, arg = carry
+            cols = jax.lax.dynamic_slice_in_dim(yp, j * block, block, 0)
+            crk = jax.lax.dynamic_slice_in_dim(yk, j * block, block, 0)
+            d2 = jnp.sum((rows[:, None, :] - cols[None, :, :]) ** 2, -1)
+            d2 = jnp.where(crk[None, :] > rrk[:, None], d2, jnp.inf)
+            jj = jnp.argmin(d2, axis=1)
+            cand = d2[jnp.arange(block), jj]
+            better = cand < best
+            return (jnp.where(better, cand, best),
+                    jnp.where(better, j * block + jj, arg))
+
+        best, arg = jax.lax.fori_loop(
+            0, nbc, col_block,
+            (jnp.full((block,), jnp.inf), jnp.full((block,), -1, jnp.int64)))
+        return jnp.sqrt(best), jnp.where(jnp.isfinite(best), arg, -1)
+
+    delta, parent = jax.lax.map(row_block, jnp.arange(nbr) * block)
+    return delta.reshape(-1)[:n], parent.reshape(-1)[:n].astype(jnp.int32)
+
+
+class JnpBackend(KernelBackend):
+    """Reference backend: the direct-difference math of the Scan oracle."""
+
+    name = "jnp"
+    mxu_dense = False
+
+    def range_count(self, x, y, d_cut, *, block=None):
+        return _range_count_jnp(x, y, d_cut, block=block or 512)
+
+    def denser_nn(self, x, x_key, y, y_key, *, block=None):
+        return _denser_nn_jnp(x, x_key, y, y_key, block=block or 512)
+
+    def prefix_nn(self, pts_sorted_desc, *, block=None):
+        # strict prefix == strictly greater key when keyed by -row_index
+        n = pts_sorted_desc.shape[0]
+        kdt = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+        key = -jnp.arange(n, dtype=kdt)
+        return _denser_nn_jnp(pts_sorted_desc, key, pts_sorted_desc, key,
+                              block=block or 512)
+
+
+# --------------------------------------------------------------- pallas
+class PallasBackend(KernelBackend):
+    """MXU tiled kernels; ``interpret=True`` is the CPU-CI variant."""
+
+    mxu_dense = True
+
+    def __init__(self, interpret: bool):
+        self.interpret = interpret
+        self.name = "pallas-interpret" if interpret else "pallas"
+
+    def range_count(self, x, y, d_cut, *, block=None):
+        return ops.local_density_xy(x, y, d_cut,
+                                    block_n=block or ops.DENSITY_BLOCK_N,
+                                    interpret=self.interpret)
+
+    def denser_nn(self, x, x_key, y, y_key, *, block=None):
+        return ops.dependent_masked(x, x_key, y, y_key,
+                                    block_n=min(block or 128, 1024),
+                                    interpret=self.interpret)
+
+    def prefix_nn(self, pts_sorted_desc, *, block=None):
+        return ops.dependent_prefix(pts_sorted_desc, block=block or 256,
+                                    interpret=self.interpret)
+
+
+# --------------------------------------------------------------- registry
+_REGISTRY: dict = {}
+_INSTANCES: dict = {}
+
+
+def register_backend(name: str, factory) -> None:
+    """Register a backend factory under ``name`` (instantiated lazily)."""
+    _REGISTRY[name] = factory
+    _INSTANCES.pop(name, None)
+
+
+def available_backends() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def default_backend_name() -> str:
+    """Platform auto-detection: kernels on TPU, reference elsewhere."""
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def get_backend(backend: str | KernelBackend | None = None) -> KernelBackend:
+    """Resolve a backend name (or None/'auto' for platform default)."""
+    if isinstance(backend, KernelBackend):
+        return backend
+    name = backend if backend not in (None, "auto") else default_backend_name()
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown kernel backend {name!r}; "
+                         f"available: {available_backends()}")
+    if name not in _INSTANCES:
+        _INSTANCES[name] = _REGISTRY[name]()
+    return _INSTANCES[name]
+
+
+register_backend("jnp", JnpBackend)
+register_backend("pallas", lambda: PallasBackend(interpret=False))
+register_backend("pallas-interpret", lambda: PallasBackend(interpret=True))

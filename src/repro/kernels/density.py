@@ -6,6 +6,10 @@ expanded form |x|^2 + |y|^2 - 2 x.y so the inner product feeds the MXU
 (a (BLOCK_N, d) @ (d, BLOCK_M) matmul per tile).  Counts accumulate in the
 output ref across the column grid dimension.
 
+The threshold d_cut^2 rides in SMEM as a runtime scalar (not baked into the
+kernel), so jit-traced callers — DPC-KV estimates d_cut per head *inside*
+jit — hit one compiled kernel for every threshold.
+
 Padding contract: callers pad x/y rows with coordinates >= PAD_COORD, which
 puts padded pairs far outside any realistic d_cut without overflowing f32
 (see ops.pad_points).  Padded *rows* produce garbage counts that callers
@@ -18,6 +22,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 PAD_COORD = 1e9  # >> any data domain; 3*PAD^2 ~ 3e18 << f32 max
 
@@ -25,8 +30,9 @@ DEFAULT_BLOCK_N = 256
 DEFAULT_BLOCK_M = 512
 
 
-def _density_kernel(x_ref, y_ref, o_ref, *, d2cut: float):
+def _density_kernel(d2_ref, x_ref, y_ref, o_ref):
     j = pl.program_id(1)
+    d2cut = d2_ref[0]                                # SMEM scalar
     x = x_ref[...]                                   # (bn, d)
     y = y_ref[...]                                   # (bm, d)
     x2 = jnp.sum(x * x, axis=-1, keepdims=True)      # (bn, 1)
@@ -46,27 +52,30 @@ def _density_kernel(x_ref, y_ref, o_ref, *, d2cut: float):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("d_cut", "block_n", "block_m", "interpret"))
-def range_count(x: jnp.ndarray, y: jnp.ndarray, d_cut: float,
+                   static_argnames=("block_n", "block_m", "interpret"))
+def range_count(x: jnp.ndarray, y: jnp.ndarray, d_cut,
                 block_n: int = DEFAULT_BLOCK_N, block_m: int = DEFAULT_BLOCK_M,
                 interpret: bool = False) -> jnp.ndarray:
     """For each row of x (n, d): |{j : ||x_i - y_j|| < d_cut}| over y (m, d).
 
     x and y must already be padded to multiples of block_n/block_m with
-    PAD_COORD rows (ops.pad_points does this).
+    PAD_COORD rows (ops.pad_points does this).  ``d_cut`` may be a python
+    float or a traced f32 scalar.
     """
     n, d = x.shape
     m, _ = y.shape
     assert n % block_n == 0 and m % block_m == 0
     grid = (n // block_n, m // block_m)
+    d2cut = (jnp.asarray(d_cut, jnp.float32) ** 2).reshape((1,))
     return pl.pallas_call(
-        functools.partial(_density_kernel, d2cut=float(d_cut) ** 2),
+        _density_kernel,
         grid=grid,
         in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (0,), memory_space=pltpu.SMEM),
             pl.BlockSpec((block_n, d), lambda i, j: (i, 0)),
             pl.BlockSpec((block_m, d), lambda i, j: (j, 0)),
         ],
         out_specs=pl.BlockSpec((block_n,), lambda i, j: (i,)),
         out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
         interpret=interpret,
-    )(x, y)
+    )(d2cut, x, y)

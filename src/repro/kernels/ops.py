@@ -30,18 +30,33 @@ def pad_vec(x: jnp.ndarray, multiple: int, value) -> jnp.ndarray:
     return jnp.pad(x, (0, npad - n), constant_values=value)
 
 
-def local_density(points: jnp.ndarray, d_cut: float, *,
-                  block_n: int = 256, block_m: int = 512,
-                  interpret: bool | None = None) -> jnp.ndarray:
-    """Kernel-backed all-pairs local density (Scan's rho on TPU)."""
+DENSITY_BLOCK_N = 256
+DENSITY_BLOCK_M = 512
+
+
+def local_density_xy(x: jnp.ndarray, y: jnp.ndarray, d_cut, *,
+                     block_n: int = DENSITY_BLOCK_N,
+                     block_m: int = DENSITY_BLOCK_M,
+                     interpret: bool | None = None) -> jnp.ndarray:
+    """Kernel-backed rectangular range count: per x-row count of y within
+    d_cut (the backend-layer form of Def. 1; query != candidate set)."""
     if interpret is None:
         interpret = _on_cpu()
-    n = points.shape[0]
-    x = pad_points(points.astype(jnp.float32), block_n)
-    y = pad_points(points.astype(jnp.float32), block_m)
-    cnt = range_count(x, y, d_cut, block_n=block_n, block_m=block_m,
+    n = x.shape[0]
+    xp = pad_points(x.astype(jnp.float32), block_n)
+    yp = pad_points(y.astype(jnp.float32), block_m)
+    cnt = range_count(xp, yp, d_cut, block_n=block_n, block_m=block_m,
                       interpret=interpret)
     return cnt[:n].astype(jnp.float32)
+
+
+def local_density(points: jnp.ndarray, d_cut, *,
+                  block_n: int = DENSITY_BLOCK_N,
+                  block_m: int = DENSITY_BLOCK_M,
+                  interpret: bool | None = None) -> jnp.ndarray:
+    """Kernel-backed all-pairs local density (Scan's rho on TPU)."""
+    return local_density_xy(points, points, d_cut, block_n=block_n,
+                            block_m=block_m, interpret=interpret)
 
 
 def dependent_prefix(points_sorted_desc: jnp.ndarray, *, block: int = 256,

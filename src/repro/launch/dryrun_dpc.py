@@ -34,7 +34,8 @@ def run(n: int, d: int, span_w: int, window_blocks: int, multi_pod: bool,
     mesh = make_production_mesh(multi_pod=multi_pod)
     S = mesh.devices.size
     flat_mesh = Mesh(mesh.devices.reshape(-1), ("data",))
-    jax.set_mesh(flat_mesh)
+    if hasattr(jax, "set_mesh"):   # jax >= 0.6; shard_map gets mesh= below
+        jax.set_mesh(flat_mesh)
     m = n // S                       # rows per shard
     n_spans = 9                      # 3^(g-1), g=3 leading grid dims
     f32 = jnp.float32

@@ -27,8 +27,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.scan import dependent_scan, local_density_scan
 from repro.core.dpc_types import with_jitter
+from repro.kernels.backend import get_backend
 
 
 @dataclass(frozen=True)
@@ -37,6 +37,10 @@ class DPCKVConfig:
     d_cut_quantile: float = 0.05   # d_cut = this quantile of pair distances
     proj_dim: int = 4
     block: int = 512
+    # Kernel backend for the rho / denser-NN primitives (None = platform
+    # default: pallas on TPU, jnp reference elsewhere).  The per-head d_cut
+    # is a traced scalar, which the kernels accept (SMEM threshold).
+    backend: str | None = None
 
 
 def _project(keys, proj_dim: int, seed: int = 0):
@@ -71,11 +75,13 @@ def _compress_head(k_head, v_head, valid, cfg: DPCKVConfig):
     pts = jnp.where(valid[:, None], pts, 1e9 + jnp.arange(S)[:, None] * 1e3)
     d_cut = _dcut_estimate(jnp.where(valid[:, None], pts, 0.0),
                            cfg.d_cut_quantile)
-    rho = local_density_scan(pts, d_cut, block=min(cfg.block, S))
+    be = get_backend(cfg.backend)
+    rho = be.range_count(pts, pts, d_cut, block=min(cfg.block, S))
     rho = jnp.where(valid, rho, 0.0)
     rho_key = with_jitter(rho)
     rho_key = jnp.where(valid, rho_key, -jnp.inf)
-    delta, parent = dependent_scan(pts, rho_key, block=min(cfg.block, S))
+    delta, parent = be.denser_nn(pts, rho_key, pts, rho_key,
+                                 block=min(cfg.block, S))
     # global peak: delta = inf -> cap at the domain diameter for gamma
     delta = jnp.where(jnp.isfinite(delta), delta, 2.0 * d_cut * 10.0)
     gamma = jnp.where(valid, rho * delta, -jnp.inf)

@@ -16,6 +16,7 @@ import numpy as np
 
 from repro.models import Model
 from repro.models.common import ArchConfig
+from repro.serve.dpc_kv import DPCKVConfig, compress_kv
 
 
 @dataclass(frozen=True)
@@ -25,6 +26,10 @@ class ServeConfig:
     max_new_tokens: int = 64
     temperature: float = 0.0      # 0 = greedy
     seed: int = 0
+    # Optional DPC-KV compression of the prompt cache (dense-attention archs
+    # only; SSM/hybrid caches are already O(1)).  The DPC primitives inside
+    # run on dpc_kv.backend — the kernel backend threading for serving.
+    dpc_kv: DPCKVConfig | None = None
 
 
 class ServeEngine:
@@ -50,6 +55,32 @@ class ServeEngine:
             toks[i, Lp - len(p):] = p      # left-pad: all rows end at Lp
             lens[i] = len(p)
         return jnp.asarray(toks), jnp.asarray(lens)
+
+    def compress_prompt_cache(self):
+        """DPC-KV compression of the prefilled prompt KV cache.
+
+        Requires cfg.dpc_kv and a dense-attention cache (the transformer
+        KVCache layout (L, B, S, K, hd)); call after ``generate``/prefill.
+        Returns per-layer compressed caches stacked over layers:
+        (k_c, v_c, counts) with shapes (L, B, M, K, hd) x2 and (L, B, M, K).
+        Every prompt slot participates (prompts are left-padded, so slots
+        [0, max_prompt) all hold prefill-computed keys).
+        """
+        kv_cfg = self.cfg.dpc_kv
+        assert kv_cfg is not None, "ServeConfig.dpc_kv not set"
+        k = getattr(self.cache, "k", None)
+        v = getattr(self.cache, "v", None)
+        assert k is not None and k.ndim == 5, \
+            f"{self.model.cfg.name}: cache is not a dense-attention KVCache"
+        L, B, S, K, hd = k.shape
+        length = min(self.cfg.max_prompt, S)
+        # fold layers into the batch axis: one compiled program, not L
+        k_c, v_c, counts = compress_kv(k.reshape(L * B, S, K, hd),
+                                       v.reshape(L * B, S, K, hd),
+                                       jnp.int32(length), kv_cfg)
+        M = kv_cfg.budget
+        return (k_c.reshape(L, B, M, K, hd), v_c.reshape(L, B, M, K, hd),
+                counts.reshape(L, B, M, K))
 
     def generate(self, prompts: list[list[int]]) -> np.ndarray:
         """Greedy/temperature generation; returns (B, max_new_tokens)."""

@@ -5,3 +5,8 @@ import os
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import repro  # noqa: E402  (enables x64 before any test builds arrays)
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: multi-process / large-n tests (minutes, not ms)")

@@ -1,0 +1,149 @@
+"""Kernel-backend parity: the pallas kernels (interpret mode on CPU) must
+reproduce the jnp reference through every algorithm driver.
+
+Threshold contract (kernels/backend.py): the pallas backends compute d2 in
+the MXU expanded form, so data is drawn away from the d_cut boundary and
+with NN distances comparable to the domain scale (uniform), where the
+expanded form is exact to the same f32 ulps as the direct difference —
+equality is then *bit*-equality, not a tolerance.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import DPCConfig, cluster, compute_dpc
+from repro.core.scan import run_scan
+from repro.kernels import available_backends, get_backend
+from repro.kernels.backend import JnpBackend, KernelBackend, PallasBackend
+from repro.kernels.ref import masked_min_dist_ref, range_count_ref
+
+D_CUT = 900.0
+
+
+def _safe_points(n, d, d_cut, seed):
+    """Uniform points with no pairwise distance near the d_cut threshold."""
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(0, 50 * d_cut, size=(n, d)).astype(np.float32)
+    d2 = ((pts[:, None, :].astype(np.float64) - pts[None, :, :]) ** 2).sum(-1)
+    bad = np.abs(np.sqrt(d2) - d_cut) < 1e-3 * d_cut
+    np.fill_diagonal(bad, False)
+    return pts[~bad.any(1)]
+
+
+def _assert_equal_results(a, b):
+    assert bool(jnp.all(a.rho == b.rho)), "rho mismatch"
+    assert bool(jnp.all(a.parent == b.parent)), "parent mismatch"
+    both_inf = jnp.isinf(a.delta) & jnp.isinf(b.delta)
+    assert bool(jnp.all((a.delta == b.delta) | both_inf)), "delta mismatch"
+
+
+class TestRegistry:
+    def test_all_backends_registered(self):
+        assert {"jnp", "pallas", "pallas-interpret"} <= set(
+            available_backends())
+
+    def test_cpu_default_is_jnp(self):
+        # conftest pins JAX_PLATFORMS=cpu, so auto-detection must pick the
+        # reference (interpret mode is a CI opt-in, not a default)
+        assert isinstance(get_backend(None), JnpBackend)
+        assert get_backend("auto").name == get_backend(None).name
+
+    def test_instance_passthrough_and_flags(self):
+        be = get_backend("pallas-interpret")
+        assert get_backend(be) is be
+        assert isinstance(be, PallasBackend) and be.mxu_dense
+        assert not get_backend("jnp").mxu_dense
+
+    def test_unknown_backend_raises(self):
+        with pytest.raises(ValueError, match="unknown kernel backend"):
+            get_backend("cuda")
+
+    def test_custom_registration(self):
+        from repro.kernels.backend import register_backend, _REGISTRY
+
+        class _Probe(KernelBackend):
+            name = "probe"
+
+        register_backend("probe", _Probe)
+        try:
+            assert isinstance(get_backend("probe"), _Probe)
+        finally:
+            _REGISTRY.pop("probe", None)
+
+
+class TestPrimitiveParity:
+    """Both backends against the dense jnp oracles, rectangular shapes."""
+
+    @pytest.mark.parametrize("name", ["jnp", "pallas-interpret"])
+    def test_range_count(self, name):
+        be = get_backend(name)
+        x = jnp.asarray(_safe_points(300, 3, D_CUT, 0))
+        y = jnp.asarray(_safe_points(500, 3, D_CUT, 1))
+        got = be.range_count(x, y, D_CUT)
+        ref = range_count_ref(x, y, D_CUT).astype(jnp.float32)
+        assert bool(jnp.all(got == ref))
+
+    @pytest.mark.parametrize("name", ["jnp", "pallas-interpret"])
+    def test_denser_nn(self, name):
+        be = get_backend(name)
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(_safe_points(300, 3, D_CUT, 3))
+        y = jnp.asarray(_safe_points(500, 3, D_CUT, 4))
+        xk = jnp.asarray(rng.uniform(0, 10, x.shape[0]), jnp.float32)
+        yk = jnp.asarray(rng.uniform(0, 10, y.shape[0]), jnp.float32)
+        dd, pp = be.denser_nn(x, xk, y, yk)
+        rd, rp = masked_min_dist_ref(x, xk, y, yk)
+        assert bool(jnp.all(pp == rp))
+        both_inf = jnp.isinf(dd) & jnp.isinf(rd)
+        assert bool(jnp.allclose(jnp.where(both_inf, 0, dd),
+                                 jnp.where(both_inf, 0, rd),
+                                 rtol=1e-6, atol=1e-4))
+
+    def test_prefix_nn_matches_denser_nn_semantics(self):
+        # prefix NN == denser NN keyed by descending position
+        pts = jnp.asarray(_safe_points(300, 2, D_CUT, 5))
+        for name in ("jnp", "pallas-interpret"):
+            be = get_backend(name)
+            dd, pp = be.prefix_nn(pts)
+            n = pts.shape[0]
+            key = -jnp.arange(n, dtype=jnp.float32)
+            rd, rp = masked_min_dist_ref(pts, key, pts, key)
+            assert bool(jnp.all(pp == rp)), name
+            assert bool(jnp.all(jnp.isinf(dd) == jnp.isinf(rd))), name
+
+
+class TestAlgorithmParity:
+    """Acceptance: compute_dpc(..., backend="pallas-interpret") equals the
+    jnp backend (and, for the exact algorithms, the run_scan oracle)."""
+
+    @pytest.fixture(scope="class")
+    def pts(self):
+        return _safe_points(800, 3, D_CUT, 0)
+
+    @pytest.mark.parametrize("alg", ["scan", "exdpc", "approxdpc",
+                                     "sapproxdpc"])
+    def test_matches_jnp_backend(self, pts, alg):
+        rj = compute_dpc(pts, DPCConfig(d_cut=D_CUT, algorithm=alg,
+                                        backend="jnp"))
+        rp = compute_dpc(pts, DPCConfig(d_cut=D_CUT, algorithm=alg,
+                                        backend="pallas-interpret"))
+        _assert_equal_results(rj, rp)
+
+    @pytest.mark.parametrize("alg", ["scan", "exdpc"])
+    def test_exact_algorithms_match_scan_oracle(self, pts, alg):
+        oracle = run_scan(jnp.asarray(pts), D_CUT)   # jnp reference oracle
+        rp = compute_dpc(pts, DPCConfig(d_cut=D_CUT, algorithm=alg,
+                                        backend="pallas-interpret"))
+        _assert_equal_results(oracle, rp)
+
+    def test_approxdpc_centers_equal(self, pts):
+        cfg = dict(d_cut=D_CUT, algorithm="approxdpc", rho_min=3.0)
+        cj, _ = cluster(pts, DPCConfig(backend="jnp", **cfg))
+        cp, _ = cluster(pts, DPCConfig(backend="pallas-interpret", **cfg))
+        assert bool(jnp.all(cj.centers == cp.centers))
+        assert bool(jnp.all(cj.labels == cp.labels))
+
+    def test_dense_path_engages(self, pts):
+        # the pallas run must actually take the dense branch (guard against
+        # silently falling back to the stencil)
+        assert get_backend("pallas-interpret").mxu_dense

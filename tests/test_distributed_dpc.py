@@ -24,8 +24,9 @@ for seed, d, k in ((0, 2, 6), (1, 3, 4)):
     pts, labels = gaussian_mixture(1200, k=k, d=d, overlap=0.03, seed=seed)
     pts, labels = with_noise(pts, labels, 0.05, seed=seed)
     d_cut = 3000.0
-    mesh = jax.make_mesh((4,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    # jax 0.4.x has no sharding.AxisType / axis_types kwarg; the default
+    # (auto) axis behavior is what shard_map needs anyway.
+    mesh = jax.make_mesh((4,), ("data",))
     res_d = distributed_dpc(pts, DistDPCConfig(d_cut=d_cut), mesh)
     res_e = run_exdpc(pts, d_cut)
     res_s = run_scan(pts, d_cut)
@@ -38,6 +39,25 @@ for seed, d, k in ((0, 2, 6), (1, 3, 4)):
         "parent_eq": float((np.asarray(res_d.parent)
                             == np.asarray(res_e.parent)).mean()),
     }
+
+# pallas backend parity: the per-shard dense MXU phases (interpret mode on
+# CPU) must reproduce the single-device exact result.  Uniform data keeps
+# the expanded-form d2 well conditioned, so equality is exact.
+rng = np.random.default_rng(5)
+d_cut = 900.0
+pts = rng.uniform(0, 30 * d_cut, size=(1200, 3)).astype(np.float32)
+res_p = distributed_dpc(pts, DistDPCConfig(d_cut=d_cut,
+                                           backend="pallas-interpret"), mesh)
+res_r = run_exdpc(pts, d_cut)
+res_o = run_scan(jnp.asarray(pts), d_cut)
+both_inf = jnp.isinf(res_p.delta) & jnp.isinf(res_r.delta)
+out["pallas"] = {
+    "rho_eq_ex": bool(jnp.all(res_p.rho == res_r.rho)),
+    "rho_eq_scan": bool(jnp.all(res_p.rho == res_o.rho)),
+    "delta_close": bool(jnp.all((res_p.delta == res_r.delta) | both_inf)),
+    "parent_eq": float((np.asarray(res_p.parent)
+                        == np.asarray(res_r.parent)).mean()),
+}
 print("RESULT" + json.dumps(out))
 """
 

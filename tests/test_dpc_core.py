@@ -2,7 +2,9 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import DPCConfig, assign_labels, cluster, compute_dpc, rand_index
 from repro.core.approxdpc import run_approxdpc

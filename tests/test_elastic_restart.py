@@ -24,9 +24,9 @@ from repro.train import checkpoint as ckpt
 
 cfg = reduce_config(ARCHS["gemma-2b"])
 model = build_model(cfg)
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
-jax.set_mesh(mesh)
+mesh = jax.make_mesh((2, 2), ("data", "model"))
+if hasattr(jax, "set_mesh"):       # jax >= 0.6; shardings below are explicit
+    jax.set_mesh(mesh)
 rules = MeshRules(data_axes=("data",), model_axis="model",
                   axis_sizes={"data": 2, "model": 2})
 psh = jax.tree.map(lambda s: NamedSharding(mesh, s),
@@ -56,9 +56,9 @@ params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
 opt_shape = jax.eval_shape(adamw_init, params_shape)
 shardings = None
 if n > 1:
-    mesh = jax.make_mesh((n, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    jax.set_mesh(mesh)
+    mesh = jax.make_mesh((n, 1), ("data", "model"))
+    if hasattr(jax, "set_mesh"):
+        jax.set_mesh(mesh)
     rules = MeshRules(data_axes=("data",), model_axis="model",
                       axis_sizes={"data": n, "model": 1})
     psh = jax.tree.map(lambda s: NamedSharding(mesh, s),

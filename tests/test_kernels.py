@@ -10,7 +10,9 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.kernels import dependent_masked, dependent_prefix, local_density
 from repro.kernels.ref import (masked_min_dist_ref, prefix_min_dist_ref,

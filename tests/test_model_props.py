@@ -2,7 +2,10 @@
 import numpy as np
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs import ARCHS, reduce_config
 from repro.models.attention import attn_mask

@@ -5,6 +5,7 @@ import jax
 from repro.configs import ARCHS, reduce_config
 from repro.models import build_model
 from repro.serve import ServeConfig, ServeEngine
+from repro.serve.dpc_kv import DPCKVConfig
 
 
 def _engine(arch="gemma-2b", **kw):
@@ -30,6 +31,23 @@ class TestServeEngine:
         prompts = [[1, 2, 3], list(range(30)), [5]]   # short / too-long / tiny
         out = eng.generate(prompts)
         assert out.shape == (3, 4)
+
+    def test_compress_prompt_cache(self):
+        """DPC-KV compresses the prefilled prompt cache through the kernel
+        backend: fixed output shapes, mass <= prompt positions."""
+        kv = DPCKVConfig(budget=8, backend="jnp")
+        eng, cfg = _engine(batch=2, max_prompt=32, max_new_tokens=4,
+                           dpc_kv=kv)
+        rng = np.random.default_rng(2)
+        eng.generate([list(rng.integers(0, cfg.vocab, 20)) for _ in range(2)])
+        k_c, v_c, counts = eng.compress_prompt_cache()
+        L = eng.cache.k.shape[0]
+        K, hd = eng.cache.k.shape[3], eng.cache.k.shape[4]
+        assert k_c.shape == (L, 2, 8, K, hd)
+        assert v_c.shape == (L, 2, 8, K, hd)
+        assert counts.shape == (L, 2, 8, K)
+        assert float(np.asarray(counts).max()) <= 32  # <= prompt positions
+        assert float(np.asarray(counts).sum()) > 0
 
     def test_ssm_engine_decodes(self):
         eng, cfg = _engine("mamba2-130m", batch=2, max_prompt=32,
