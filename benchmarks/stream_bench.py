@@ -1,0 +1,113 @@
+"""Streaming DPC throughput: incremental ingest vs full recompute.
+
+The bench behind ``BENCH_stream.json``: loads an n-point sliding window,
+then times (a) steady-state incremental ingest of batch_cap-point
+micro-batches (``StreamDPC.ingest``: rho repair + maxima-only dependent
+updates + labels) against (b) a from-scratch ``run_approxdpc`` +
+``assign_labels`` of the same window.  Parity between the two is asserted
+before timing — the speedup is for the *identical* answer.
+
+Acceptance (ISSUE 2): B=256 into n=64k must beat full recompute by >= 5x
+on CPU with the jnp backend.
+
+    PYTHONPATH=src python -m benchmarks.stream_bench [--n 65536 --batch 256]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.approxdpc import run_approxdpc
+from repro.core.labels import assign_labels
+from repro.data.points import gaussian_mixture
+from repro.stream import StreamDPC, StreamDPCConfig
+
+from .util import CSV
+
+
+def _block(x):
+    jax.block_until_ready(x)
+    return x
+
+
+def main(n: int = 65536, batch: int = 256, d: int = 2, d_cut: float = 2000.0,
+         ticks: int = 4, rho_min: float = 20.0, backend: str = "jnp",
+         out: str = "experiments/stream"):
+    csv = CSV("stream_bench")
+    csv.header(f"n={n} batch={batch} backend={backend}")
+    pts, _ = gaussian_mixture(n + (ticks + 1) * batch, k=15, d=d, seed=0)
+    cfg = StreamDPCConfig(d_cut=d_cut, capacity=n, batch_cap=batch,
+                          rho_min=rho_min, backend=backend)
+    s = StreamDPC(cfg)
+
+    t0 = time.perf_counter()
+    s.initialize(pts[:n])
+    init_s = time.perf_counter() - t0
+    csv.add(phase="initialize", seconds=init_s)
+
+    # warm the incremental path (compiles the repair/segment/NN programs)
+    s.ingest(pts[n: n + batch])
+
+    tick_s = []
+    for t in range(1, ticks + 1):
+        t0 = time.perf_counter()
+        _block(s.ingest(pts[n + t * batch: n + (t + 1) * batch]).labels)
+        tick_s.append(time.perf_counter() - t0)
+        csv.add(phase="ingest", tick=t, seconds=tick_s[-1])
+    inc_s = float(np.mean(tick_s))
+
+    # full-recompute reference on the same window (warm timing)
+    w = jnp.asarray(s.window_points())
+
+    def full():
+        res = run_approxdpc(w, d_cut, backend=backend)
+        return assign_labels(res, rho_min, cfg.resolved_delta_min())
+
+    fresh = _block(full())
+    assert bool(jnp.all(fresh.labels == s.clustering.labels)), \
+        "bench aborted: stream diverged from the from-scratch reference"
+    t0 = time.perf_counter()
+    _block(full())
+    full_s = time.perf_counter() - t0
+    csv.add(phase="full_recompute", seconds=full_s)
+
+    speedup = full_s / inc_s
+    csv.add(phase="summary", incremental_s=inc_s, full_s=full_s,
+            speedup=speedup)
+    rec = {
+        "n": n, "batch": batch, "d": d, "d_cut": d_cut, "ticks": ticks,
+        "backend": backend, "platform": jax.default_backend(),
+        "initialize_seconds": init_s,
+        "incremental_seconds_per_tick": inc_s,
+        "incremental_points_per_s": batch / inc_s,
+        "full_recompute_seconds": full_s,
+        "speedup": speedup,
+        "parity_checked": True,
+        "stats": s.stats(),
+    }
+    os.makedirs(out, exist_ok=True)
+    path = os.path.join(out, "stream_bench.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2)
+    print(f"[stream_bench] wrote {path} (speedup {speedup:.1f}x)", flush=True)
+    return rec
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=65536)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--d", type=int, default=2)
+    ap.add_argument("--d-cut", type=float, default=2000.0)
+    ap.add_argument("--ticks", type=int, default=4)
+    ap.add_argument("--backend", default="jnp")
+    ap.add_argument("--out", default="experiments/stream")
+    a = ap.parse_args()
+    main(n=a.n, batch=a.batch, d=a.d, d_cut=a.d_cut, ticks=a.ticks,
+         backend=a.backend, out=a.out)

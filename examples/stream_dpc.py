@@ -1,0 +1,52 @@
+"""Streaming DPC under drift: sliding-window clustering with stable ids.
+
+A ``drifting_batches`` stream (random-walk cluster centers that keep moving
+each tick) feeds ``StreamDPC``: the window fills, steady-state incremental
+ingest takes over, and the per-tick output shows cluster *continuity* —
+stable center ids surviving drift, fresh ids for clusters that wander into
+the window, and the full-rebuild fallback firing when the walk leaves the
+indexed box.
+
+    PYTHONPATH=src python examples/stream_dpc.py
+"""
+import numpy as np
+
+from repro.data.points import drifting_batches
+from repro.stream import StreamDPC, StreamDPCConfig
+
+
+def main():
+    cap, batch, k = 4096, 256, 6
+    cfg = StreamDPCConfig(d_cut=3500.0, capacity=cap, batch_cap=batch,
+                          rho_min=8.0, extent_margin=2)
+    s = StreamDPC(cfg)
+    stream = drifting_batches(batch=batch, ticks=cap // batch + 24, k=k,
+                              d=2, seed=1, sigma=0.012, drift=0.03)
+
+    prev_ids: set[int] = set()
+    print(f"window={cap} batch={batch} d_cut={cfg.d_cut:.0f} "
+          f"(drifting {k}-cluster walk)")
+    for t, (pts, _, centers) in enumerate(stream):
+        tick = s.ingest(pts)
+        if not s.window.full:
+            continue
+        ids = set(int(x) for x in tick.stable_ids)
+        born, died = sorted(ids - prev_ids), sorted(prev_ids - ids)
+        prev_ids = ids
+        noise = int((tick.labels < 0).sum())
+        flags = "".join(["R" if tick.rebuilt else "",
+                         "F" if tick.full_recompute else ""])
+        print(f"tick {t:3d}  clusters={tick.num_clusters:2d} "
+              f"ids={sorted(ids)} born={born or '-'} died={died or '-'} "
+              f"noise={noise:4d} {flags}")
+    st = s.stats()
+    print(f"\n{st['ticks']} ticks, {st['rebuilds']} grid rebuilds, "
+          f"{st['full_recomputes']} full recomputes, "
+          f"{st['live_cells']} live cells "
+          f"(budget {st['maxima_cap']})")
+    print("stable ids persisted across drift; fresh ids only when a "
+          "cluster entered/left the window")
+
+
+if __name__ == "__main__":
+    main()

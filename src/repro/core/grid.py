@@ -20,6 +20,13 @@ every algorithm in ``repro.core``:
 All arrays are fixed-shape; capacities (max span length, max members per cell)
 are measured at build time on the host, which is the standard JAX cell-list
 pattern (capacities are data statistics, not traced values).
+
+Cell boundaries are *canonical*: coordinates quantize as ``floor(p / side)``
+against the absolute origin, not against the data minimum.  Two point sets
+that share points therefore agree on which points share a cell — the property
+``repro.stream`` relies on to keep an incrementally-maintained partition
+bit-identical to a from-scratch ``build_grid`` of the same window contents
+(a data-min origin shifts every boundary whenever the minimum point expires).
 """
 from __future__ import annotations
 
@@ -77,18 +84,33 @@ def prefix_offsets(g: int) -> np.ndarray:
     return np.stack([a.ravel() for a in grids], axis=-1).astype(np.int64)
 
 
+def group_side(d_cut: float, d: int) -> float:
+    """Side of the grouping grid G: d_cut/sqrt(d) (in-cell diameter < d_cut)."""
+    return d_cut / math.sqrt(d)
+
+
+def canonical_group_coords(points: jnp.ndarray, d_cut: float) -> jnp.ndarray:
+    """Canonical (absolute-origin) grouping-cell coordinates, (n, d) int64.
+
+    The single quantization rule shared by ``build_grid`` and the streaming
+    incremental grid: same float math -> bit-identical partitions.
+    """
+    side = group_side(d_cut, points.shape[-1])
+    return jnp.floor(points.astype(jnp.float32) / side).astype(jnp.int64)
+
+
 def build_grid(points: jnp.ndarray, d_cut: float, g: int | None = None) -> Grid:
     """Build the two-level sorted cell list.  Host-level (measures capacities)."""
     points = jnp.asarray(points, jnp.float32)
     n, d = points.shape
     if g is None:
         g = min(d, 3)
-    side_group = d_cut / math.sqrt(d)            # paper's G side (Def. §4.1)
     q = max(int(math.ceil(math.sqrt(d))), 1)     # coarsening factor
-    side_cand = q * side_group                   # >= d_cut -> stencil reach 1
 
-    lo = jnp.min(points, axis=0)
-    gcoords = jnp.floor((points - lo) / side_group).astype(jnp.int64)  # (n, d)
+    # canonical quantization, then shift to non-negative for key packing (an
+    # integer shift: the partition itself stays origin-independent)
+    gcoords = canonical_group_coords(points, d_cut)                    # (n, d)
+    gcoords = gcoords - jnp.min(gcoords, axis=0)
     ccoords = gcoords[:, :g] // q                                      # (n, g)
 
     # mixed-radix encode; extents from data (dynamic values, static shapes)

@@ -67,6 +67,30 @@ def with_noise(points: np.ndarray, labels: np.ndarray, rate: float,
     return x[p], y[p]
 
 
+def drifting_batches(batch: int, ticks: int, k: int = 13, d: int = 2,
+                     seed: int = 0, domain: float = DOMAIN,
+                     step: float = 0.18, sigma: float = 0.025,
+                     drift: float = 0.01):
+    """Streaming variant of ``random_walk``: yields one micro-batch per tick
+    while the cluster centers keep random-walking (``drift`` * domain per
+    tick).  Yields ``(points (batch, d), labels (batch,), centers (k, d))``
+    — the workload for sliding-window cluster-continuity demos/tests.
+    """
+    rng = np.random.default_rng(seed)
+    centers = [rng.uniform(0.2 * domain, 0.8 * domain, size=d)]
+    for _ in range(k - 1):
+        nxt = centers[-1] + rng.normal(0, step * domain, size=d)
+        centers.append(np.clip(nxt, 0.1 * domain, 0.9 * domain))
+    centers = np.stack(centers)
+    for _ in range(ticks):
+        centers = np.clip(centers + rng.normal(0, drift * domain, centers.shape),
+                          0.05 * domain, 0.95 * domain)
+        idx = rng.integers(0, k, size=batch)
+        pts = centers[idx] + rng.normal(0, sigma * domain, size=(batch, d))
+        yield (np.clip(pts, 0, domain).astype(np.float32),
+               idx.astype(np.int32), centers.copy())
+
+
 _REAL_PROXIES = {
     # name: (d, skew, n_clusters) — domains per §6 of the paper
     "airline": (3, 2.5, 24),

@@ -29,7 +29,6 @@ Everything is exact: output equals core.run_exdpc / run_scan (tested).
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 from functools import partial
 
@@ -42,6 +41,7 @@ from jax.experimental.shard_map import shard_map
 from repro.core.dpc_types import DPCResult, with_jitter
 from repro.core.grid import build_grid, point_span_bounds
 from repro.kernels.backend import get_backend
+from repro.launch.mesh import flatten_mesh
 
 
 @dataclass(frozen=True)
@@ -292,12 +292,10 @@ def distributed_dpc(points, cfg: DistDPCConfig, mesh: Mesh) -> DPCResult:
     points = jnp.asarray(points, jnp.float32)
     be = get_backend(cfg.backend)
     n_orig, d = points.shape
-    S_data = math.prod(mesh.devices.shape)  # shard over ALL mesh axes' product
     axis = cfg.data_axis
-    # flatten every mesh axis into the data dimension for DPC: the paper's
-    # algorithm is data-parallel only (the model axis is reused as more
-    # workers).  A dedicated 1-axis view keeps specs simple.
-    flat_mesh = Mesh(mesh.devices.reshape(-1), (axis,))
+    # flatten every mesh axis into the data dimension for DPC: a dedicated
+    # 1-axis view keeps specs simple (launch.mesh.flatten_mesh).
+    flat_mesh = flatten_mesh(mesh, axis)
     S_data = flat_mesh.devices.size
 
     grid = build_grid(points, cfg.d_cut)

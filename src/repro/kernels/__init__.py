@@ -3,8 +3,9 @@ the pluggable backend registry that routes every DPC hot path onto them."""
 from .backend import (KernelBackend, available_backends,
                       default_backend_name, get_backend, register_backend)
 from .ops import (dependent_masked, dependent_prefix, local_density,
-                  local_density_xy)
+                  local_density_delta, local_density_xy)
 
-__all__ = ["local_density", "local_density_xy", "dependent_prefix",
-           "dependent_masked", "KernelBackend", "get_backend",
-           "register_backend", "available_backends", "default_backend_name"]
+__all__ = ["local_density", "local_density_xy", "local_density_delta",
+           "dependent_prefix", "dependent_masked", "KernelBackend",
+           "get_backend", "register_backend", "available_backends",
+           "default_backend_name"]

@@ -15,12 +15,19 @@ pick where those primitives run:
                          containers without a TPU exercise the kernel code
                          paths (slow; correctness only).
 
+Beyond the two static primitives (+ the triangular prefix variant), every
+backend carries the two *streaming* batched primitives used by
+``repro.stream``: ``range_count_delta`` (signed range count over an
+insert/evict delta batch — the sliding-window rho repair) and
+``denser_nn_update`` (Def. 2 re-queried for a row subset — the delta repair
+for points whose dependent may have changed).
+
 ``get_backend(None)`` auto-detects: ``pallas`` on TPU, ``jnp`` elsewhere.
 Numerical contract: the pallas backends compute squared distances in the MXU
-expanded form |x|^2+|y|^2-2xy (then re-evaluate the winner direct-diff, see
-dependent._refine_winner_d2), so pairs within f32 rounding of a threshold can
-be classified differently from ``jnp``.  Equality tests draw data away from
-thresholds; production consumers treat the backends as interchangeable.
+expanded form |x|^2+|y|^2-2xy (then re-rank the top-k candidates direct-diff,
+see dependent._refine_topk_d2), so pairs within f32 rounding of a threshold
+can be classified differently from ``jnp``.  Equality tests draw data away
+from thresholds; production consumers treat the backends as interchangeable.
 """
 from __future__ import annotations
 
@@ -60,6 +67,33 @@ class KernelBackend:
         """(delta, parent): NN among strict-prefix rows, input pre-sorted by
         descending density key — Def. 2 as a triangular sweep (Ex-DPC)."""
         raise NotImplementedError
+
+    # ---- streaming (repro.stream) batched primitives ----
+
+    def range_count_delta(self, x, batch, signs, d_cut, *,
+                          block: int | None = None):
+        """(n,) f32 signed count: sum_b signs[b] * [||x_i - batch_b|| < d_cut].
+
+        The sliding-window rho repair (each surviving point's density changes
+        by +1 per inserted / -1 per evicted neighbor): signs are +1 for
+        inserted rows, -1 for evicted rows, 0 for padding."""
+        raise NotImplementedError
+
+    def denser_nn_update(self, points, rho_key, q_slots, *,
+                         block: int | None = None):
+        """Def. 2 recomputed for the row subset ``q_slots`` of ``points``.
+
+        The streaming delta repair: only rows whose dependent point may have
+        changed (cell maxima / dirty rows) are re-queried against the full
+        window.  ``q_slots`` entries >= len(points) are padding and return
+        (inf, -1).  Rides each backend's denser-NN kernel; backends may
+        override with a fused gather kernel."""
+        n = points.shape[0]
+        slot_c = jnp.clip(q_slots, 0, n - 1)
+        valid = q_slots < n
+        q = points[slot_c]
+        qk = jnp.where(valid, rho_key[slot_c], jnp.inf)  # +inf key: inert row
+        return self.denser_nn(q, qk, points, rho_key, block=block)
 
 
 # ------------------------------------------------------------ jnp reference
@@ -124,6 +158,39 @@ def _denser_nn_jnp(x, x_key, y, y_key, block: int = 512):
     return delta.reshape(-1)[:n], parent.reshape(-1)[:n].astype(jnp.int32)
 
 
+@partial(jax.jit, static_argnames=("block",))
+def _range_count_delta_jnp(x, batch, signs, d_cut, block: int = 512):
+    """Blocked direct-difference *signed* range count (streaming rho repair).
+
+    One fused pass over the delta batch: each batch column contributes its
+    sign (+1 inserted / -1 evicted / 0 pad) to every x-row within d_cut."""
+    n, d = x.shape
+    m = batch.shape[0]
+    nbr, nbc = -(-n // block), -(-m // block)
+    xp = jnp.pad(x, ((0, nbr * block - n), (0, 0)), constant_values=jnp.inf)
+    bp = jnp.pad(batch, ((0, nbc * block - m), (0, 0)),
+                 constant_values=jnp.inf)
+    sp = jnp.pad(signs.astype(jnp.float32), (0, nbc * block - m),
+                 constant_values=0.0)
+    d2cut = jnp.asarray(d_cut, jnp.float32) ** 2
+
+    def row_block(i0):
+        rows = jax.lax.dynamic_slice_in_dim(xp, i0, block, 0)
+
+        def col_block(j, acc):
+            cols = jax.lax.dynamic_slice_in_dim(bp, j * block, block, 0)
+            s = jax.lax.dynamic_slice_in_dim(sp, j * block, block, 0)
+            d2 = jnp.sum((rows[:, None, :] - cols[None, :, :]) ** 2, -1)
+            return acc + jnp.sum(jnp.where(d2 < d2cut, s[None, :], 0.0),
+                                 axis=1)
+
+        return jax.lax.fori_loop(0, nbc, col_block,
+                                 jnp.zeros((block,), jnp.float32))
+
+    cnt = jax.lax.map(row_block, jnp.arange(nbr) * block).reshape(-1)[:n]
+    return cnt
+
+
 class JnpBackend(KernelBackend):
     """Reference backend: the direct-difference math of the Scan oracle."""
 
@@ -132,6 +199,10 @@ class JnpBackend(KernelBackend):
 
     def range_count(self, x, y, d_cut, *, block=None):
         return _range_count_jnp(x, y, d_cut, block=block or 512)
+
+    def range_count_delta(self, x, batch, signs, d_cut, *, block=None):
+        return _range_count_delta_jnp(x, batch, signs, d_cut,
+                                      block=block or 512)
 
     def denser_nn(self, x, x_key, y, y_key, *, block=None):
         return _denser_nn_jnp(x, x_key, y, y_key, block=block or 512)
@@ -159,6 +230,11 @@ class PallasBackend(KernelBackend):
         return ops.local_density_xy(x, y, d_cut,
                                     block_n=block or ops.DENSITY_BLOCK_N,
                                     interpret=self.interpret)
+
+    def range_count_delta(self, x, batch, signs, d_cut, *, block=None):
+        return ops.local_density_delta(x, batch, signs, d_cut,
+                                       block_n=block or ops.DENSITY_BLOCK_N,
+                                       interpret=self.interpret)
 
     def denser_nn(self, x, x_key, y, y_key, *, block=None):
         return ops.dependent_masked(x, x_key, y, y_key,

@@ -79,3 +79,63 @@ def range_count(x: jnp.ndarray, y: jnp.ndarray, d_cut,
         out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
         interpret=interpret,
     )(d2cut, x, y)
+
+
+def _signed_density_kernel(d2_ref, x_ref, y_ref, s_ref, o_ref):
+    """Signed range count: one tile sweep accumulates sum_j s_j * [d2 < d2cut].
+
+    The streaming rho-repair kernel — every surviving point's density changes
+    by +1 per inserted / -1 per evicted neighbor, so one fused pass over the
+    (insert + evict) delta batch with a per-column sign replaces two
+    range-count sweeps.
+    """
+    j = pl.program_id(1)
+    d2cut = d2_ref[0]                                # SMEM scalar
+    x = x_ref[...]                                   # (bn, d)
+    y = y_ref[...]                                   # (bm, d)
+    s = s_ref[...]                                   # (bm,) f32 in {-1, 0, +1}
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)
+    y2 = jnp.sum(y * y, axis=-1, keepdims=True).T
+    xy = jax.lax.dot_general(x, y, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    d2 = x2 + y2 - 2.0 * xy
+    cnt = jnp.sum(jnp.where(d2 < d2cut, s[None, :], 0.0), axis=1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = cnt
+
+    @pl.when(j != 0)
+    def _acc():
+        o_ref[...] += cnt
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_n", "block_m", "interpret"))
+def range_count_signed(x: jnp.ndarray, y: jnp.ndarray, signs: jnp.ndarray,
+                       d_cut, block_n: int = DEFAULT_BLOCK_N,
+                       block_m: int = DEFAULT_BLOCK_M,
+                       interpret: bool = False) -> jnp.ndarray:
+    """For each row of x: sum_j signs[j] * [||x_i - y_j|| < d_cut], f32.
+
+    Same padding contract as ``range_count``; padded y rows must carry
+    sign 0 (and PAD_COORD coordinates keep them outside any d_cut anyway).
+    """
+    n, d = x.shape
+    m, _ = y.shape
+    assert n % block_n == 0 and m % block_m == 0
+    grid = (n // block_n, m // block_m)
+    d2cut = (jnp.asarray(d_cut, jnp.float32) ** 2).reshape((1,))
+    return pl.pallas_call(
+        _signed_density_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (0,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((block_n, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_m, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_m,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(d2cut, x, y, signs.astype(jnp.float32))

@@ -11,6 +11,11 @@ the column grid dimension.
 Also provides ``masked_min_dist``: NN among rows with strictly greater key —
 the global fallback used for stencil-unresolved points and the S-Approx
 phase-2 representative search.
+
+Both kernels compute tile distances in the MXU expanded form and re-rank the
+top-k candidates per row in direct-difference form (``_refine_topk_d2``), so
+near-tie argmins survive ill-conditioned data (NN distances << domain scale)
+and the consumed delta value is direct-diff exact.
 """
 from __future__ import annotations
 
@@ -22,6 +27,11 @@ from jax.experimental import pallas as pl
 
 DEFAULT_BLOCK = 256
 
+# How many expanded-form candidates are re-ranked in direct-difference form
+# per row tile.  1 restores the historical refine-the-winner-only behavior
+# (value exact, winner potentially flipped by expanded-form rounding).
+REFINE_TOPK = 4
+
 
 def _mxu_d2(x, y):
     x2 = jnp.sum(x * x, axis=-1, keepdims=True)
@@ -31,24 +41,41 @@ def _mxu_d2(x, y):
     return x2 + y2 - 2.0 * xy
 
 
-def _refine_winner_d2(x, y, loc, cand):
-    """Recompute the per-row argmin candidate's d2 in direct-difference form.
+def _refine_topk_d2(x, y, d2, k: int):
+    """Re-rank the k smallest expanded-form candidates in direct-diff form.
 
-    The expanded form above has absolute error ~eps*(|x|^2+|y|^2), which is a
-    large *relative* error for small distances.  Re-evaluating only the winner
-    via one-hot matmul (MXU-friendly, no gather) restores direct-diff f32
-    accuracy for the value that the algorithm actually consumes (delta).
+    The expanded form has absolute error ~eps*(|x|^2+|y|^2) — a large
+    *relative* error for small distances, big enough to flip near-tie argmins
+    when NN distances are far below the domain scale.  k rounds of extract-
+    argmin / re-evaluate-direct-diff (one-hot matmul: MXU-friendly, no
+    gather) / retire make both the winner *and* its value direct-diff exact
+    whenever the true NN sits within the top-k expanded candidates.
+
+    Masked candidates carry d2 = inf and stay inert.  Returns
+    (best_d2_direct, local_argmin); (inf, -1) where no finite candidate.
     """
-    bm = y.shape[0]
-    onehot = (loc[:, None] == jax.lax.broadcasted_iota(jnp.int32, (loc.shape[0], bm), 1)
-              ).astype(jnp.float32)
-    y_sel = jax.lax.dot_general(onehot, y, (((1,), (0,)), ((), ())),
-                                preferred_element_type=jnp.float32)
-    d2w = jnp.sum((x - y_sel) ** 2, axis=-1)
-    return jnp.where(jnp.isfinite(cand), d2w, cand)
+    bn, bm = d2.shape
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bn, bm), 1)
+    best = jnp.full((bn,), jnp.inf, jnp.float32)
+    arg = jnp.full((bn,), -1, jnp.int32)
+    work = d2
+    for _ in range(max(k, 1)):
+        loc = jnp.argmin(work, axis=1).astype(jnp.int32)
+        cand = jnp.min(work, axis=1)
+        onehot = (loc[:, None] == cols).astype(jnp.float32)
+        y_sel = jax.lax.dot_general(onehot, y, (((1,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+        d2d = jnp.sum((x - y_sel) ** 2, axis=-1)
+        d2d = jnp.where(jnp.isfinite(cand), d2d, jnp.inf)     # keep masked inert
+        better = d2d < best
+        best = jnp.where(better, d2d, best)
+        arg = jnp.where(better, loc, arg)
+        work = jnp.where(cols == loc[:, None], jnp.inf, work)  # retire winner
+    return best, arg
 
 
-def _prefix_kernel(x_ref, y_ref, best_ref, arg_ref, *, block: int):
+def _prefix_kernel(x_ref, y_ref, best_ref, arg_ref, *, block: int,
+                   refine_k: int):
     i = pl.program_id(0)
     j = pl.program_id(1)
 
@@ -63,17 +90,15 @@ def _prefix_kernel(x_ref, y_ref, best_ref, arg_ref, *, block: int):
         row = i * block + jax.lax.broadcasted_iota(jnp.int32, (block, block), 0)
         col = j * block + jax.lax.broadcasted_iota(jnp.int32, (block, block), 1)
         d2 = jnp.where(col < row, d2, jnp.inf)                # strict prefix
-        loc = jnp.argmin(d2, axis=1).astype(jnp.int32)
-        cand = jnp.min(d2, axis=1)
-        cand = _refine_winner_d2(x_ref[...], y_ref[...], loc, cand)
+        cand, loc = _refine_topk_d2(x_ref[...], y_ref[...], d2, refine_k)
         better = cand < best_ref[...]
         best_ref[...] = jnp.where(better, cand, best_ref[...])
         arg_ref[...] = jnp.where(better, j * block + loc, arg_ref[...])
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block", "interpret", "refine_k"))
 def prefix_min_dist(pts: jnp.ndarray, block: int = DEFAULT_BLOCK,
-                    interpret: bool = False):
+                    interpret: bool = False, refine_k: int = REFINE_TOPK):
     """min_{j<i} ||p_i - p_j|| and argmin, rows sorted by descending key.
 
     pts must be padded to a multiple of block with PAD_COORD rows.
@@ -83,7 +108,7 @@ def prefix_min_dist(pts: jnp.ndarray, block: int = DEFAULT_BLOCK,
     assert n % block == 0
     nb = n // block
     best, arg = pl.pallas_call(
-        functools.partial(_prefix_kernel, block=block),
+        functools.partial(_prefix_kernel, block=block, refine_k=refine_k),
         grid=(nb, nb),
         in_specs=[
             pl.BlockSpec((block, d), lambda i, j: (i, 0)),
@@ -102,7 +127,8 @@ def prefix_min_dist(pts: jnp.ndarray, block: int = DEFAULT_BLOCK,
     return jnp.sqrt(best), arg
 
 
-def _masked_kernel(x_ref, xk_ref, y_ref, yk_ref, best_ref, arg_ref, *, block_m: int):
+def _masked_kernel(x_ref, xk_ref, y_ref, yk_ref, best_ref, arg_ref, *,
+                   block_m: int, refine_k: int):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -112,23 +138,24 @@ def _masked_kernel(x_ref, xk_ref, y_ref, yk_ref, best_ref, arg_ref, *, block_m: 
 
     d2 = _mxu_d2(x_ref[...], y_ref[...])
     d2 = jnp.where(yk_ref[...][None, :] > xk_ref[...][:, None], d2, jnp.inf)
-    loc = jnp.argmin(d2, axis=1).astype(jnp.int32)
-    cand = jnp.min(d2, axis=1)
-    cand = _refine_winner_d2(x_ref[...], y_ref[...], loc, cand)
+    cand, loc = _refine_topk_d2(x_ref[...], y_ref[...], d2, refine_k)
     better = cand < best_ref[...]
     best_ref[...] = jnp.where(better, cand, best_ref[...])
     arg_ref[...] = jnp.where(better, j * block_m + loc, arg_ref[...])
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "block_m", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("block_n", "block_m", "interpret",
+                                    "refine_k"))
 def masked_min_dist(x, x_key, y, y_key, block_n: int = 128,
-                    block_m: int = DEFAULT_BLOCK, interpret: bool = False):
+                    block_m: int = DEFAULT_BLOCK, interpret: bool = False,
+                    refine_k: int = REFINE_TOPK):
     """NN among y-rows with y_key > x_key, per x-row (global fallback)."""
     n, d = x.shape
     m, _ = y.shape
     assert n % block_n == 0 and m % block_m == 0
     best, arg = pl.pallas_call(
-        functools.partial(_masked_kernel, block_m=block_m),
+        functools.partial(_masked_kernel, block_m=block_m, refine_k=refine_k),
         grid=(n // block_n, m // block_m),
         in_specs=[
             pl.BlockSpec((block_n, d), lambda i, j: (i, 0)),

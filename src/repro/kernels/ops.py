@@ -10,7 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .density import PAD_COORD, range_count
+from .density import PAD_COORD, range_count, range_count_signed
 from .dependent import masked_min_dist, prefix_min_dist
 
 
@@ -57,6 +57,24 @@ def local_density(points: jnp.ndarray, d_cut, *,
     """Kernel-backed all-pairs local density (Scan's rho on TPU)."""
     return local_density_xy(points, points, d_cut, block_n=block_n,
                             block_m=block_m, interpret=interpret)
+
+
+def local_density_delta(x: jnp.ndarray, batch: jnp.ndarray,
+                        signs: jnp.ndarray, d_cut, *,
+                        block_n: int = DENSITY_BLOCK_N,
+                        interpret: bool | None = None) -> jnp.ndarray:
+    """Kernel-backed signed range count over a delta batch (streaming rho
+    repair): per x-row, (+1 per inserted / -1 per evicted) batch neighbor
+    within d_cut, fused in a single tile sweep."""
+    if interpret is None:
+        interpret = _on_cpu()
+    n = x.shape[0]
+    xp = pad_points(x.astype(jnp.float32), block_n)
+    bp = pad_points(batch.astype(jnp.float32), DENSITY_BLOCK_M)
+    sp = pad_vec(signs.astype(jnp.float32), DENSITY_BLOCK_M, 0.0)
+    cnt = range_count_signed(xp, bp, sp, d_cut, block_n=block_n,
+                             block_m=DENSITY_BLOCK_M, interpret=interpret)
+    return cnt[:n]
 
 
 def dependent_prefix(points_sorted_desc: jnp.ndarray, *, block: int = 256,

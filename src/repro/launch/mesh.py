@@ -39,6 +39,18 @@ def specs_to_shardings(mesh, spec_tree):
         spec_tree, is_leaf=lambda x: isinstance(x, P))
 
 
+def flatten_mesh(mesh, axis_name: str = "data"):
+    """Collapse every mesh axis into one ``axis_name`` axis.
+
+    DPC is data-parallel only (the paper's algorithm has no model axis), so
+    both the batch path (``distributed.dpc``) and the streaming window
+    (``repro.stream``) shard over the flattened device list: the model axis
+    is reused as more data workers."""
+    from jax.sharding import Mesh
+
+    return Mesh(mesh.devices.reshape(-1), (axis_name,))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

@@ -1,5 +1,8 @@
-"""Serving layer: batched engine (prefill + decode) and DPC-KV compression."""
+"""Serving layer: batched engine (prefill + decode), DPC-KV compression,
+and the online-clustering endpoint (re-exported from ``repro.stream``)."""
 from .engine import ServeConfig, ServeEngine
 from .dpc_kv import DPCKVConfig, compress_kv
+from repro.stream.service import StreamServeConfig, StreamService
 
-__all__ = ["ServeConfig", "ServeEngine", "DPCKVConfig", "compress_kv"]
+__all__ = ["ServeConfig", "ServeEngine", "DPCKVConfig", "compress_kv",
+           "StreamService", "StreamServeConfig"]

@@ -1,0 +1,16 @@
+"""Streaming DPC: incremental sliding-window clustering.
+
+``StreamDPC`` maintains Approx-DPC state over a fixed-capacity sliding
+window with micro-batch ``ingest`` (incremental rho repair + maxima-only
+dependent updates, full-rebuild fallback on capacity overflow, stable
+cluster ids across ticks).  ``StreamService`` wraps it with the serve
+layer's fixed-shape padding discipline.
+"""
+from .incremental import CellOverflow, IncrementalGrid, repair_rho
+from .service import StreamServeConfig, StreamService
+from .stream_dpc import StreamDPC, StreamDPCConfig, StreamTick
+from .window import SlidingWindow
+
+__all__ = ["StreamDPC", "StreamDPCConfig", "StreamTick", "SlidingWindow",
+           "IncrementalGrid", "CellOverflow", "repair_rho",
+           "StreamService", "StreamServeConfig"]

@@ -1,0 +1,104 @@
+"""Streaming clustering endpoint with the serve layer's shape discipline.
+
+Mirrors ``serve.engine.ServeEngine``'s production rules for the online-
+clustering workload: fixed micro-batch shapes (requests accumulate into a
+static ``micro_batch`` and pad, never reshape/recompile), deterministic
+behavior, and read-only queries answered from maintained state.
+
+* ``submit`` buffers arriving points and fires a ``StreamDPC.ingest`` tick
+  for every full micro-batch (zero or more ticks per call).
+* ``flush`` drains the partial remainder as one padded tick.
+* ``query`` labels arbitrary points *without mutating the window*: each
+  query point adopts the stable cluster id of its nearest window point
+  within d_cut (noise / out-of-coverage -> -1).  The NN runs through the
+  backend's ``denser_nn`` with a -inf query key — every window row is
+  "denser", so the masked NN degenerates to a plain NN on the same kernels
+  the write path uses.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.kernels.density import PAD_COORD
+
+from .stream_dpc import StreamDPC, StreamDPCConfig, StreamTick
+
+
+@dataclass(frozen=True)
+class StreamServeConfig:
+    """Endpoint config: ``stream`` is the clustering config; ``micro_batch``
+    (= the stream's ``batch_cap``) is the fixed request-accumulation shape."""
+
+    stream: StreamDPCConfig
+    micro_batch: int = field(default=0)  # 0 -> stream.batch_cap
+
+    def resolved_micro_batch(self) -> int:
+        return self.micro_batch or self.stream.batch_cap
+
+
+class StreamService:
+    def __init__(self, cfg: StreamServeConfig, mesh=None):
+        self.cfg = cfg
+        self.engine = StreamDPC(cfg.stream, mesh=mesh)
+        self._buffer: list[np.ndarray] = []
+        self._buffered = 0
+        self._submitted = 0
+
+    # ------------------------------------------------------------- writes
+    def submit(self, points: np.ndarray) -> list[StreamTick]:
+        """Buffer points; run one ingest tick per full micro-batch."""
+        points = np.atleast_2d(np.asarray(points, np.float32))
+        self._buffer.append(points)
+        self._buffered += len(points)
+        self._submitted += len(points)
+        B = self.cfg.resolved_micro_batch()
+        if self._buffered < B:
+            return []
+        # one concatenation per submit, then slice out full micro-batches
+        flat = np.concatenate(self._buffer)
+        ticks = [self.engine.ingest(flat[i: i + B])
+                 for i in range(0, len(flat) - B + 1, B)]
+        rest = flat[len(ticks) * B:]
+        self._buffer = [rest] if len(rest) else []
+        self._buffered = len(rest)
+        return ticks
+
+    def flush(self) -> StreamTick | None:
+        """Ingest the partial remainder (padded to the fixed shape inside)."""
+        if self._buffered == 0:
+            return None
+        flat = np.concatenate(self._buffer)
+        self._buffer, self._buffered = [], 0
+        return self.engine.ingest(flat)
+
+    # ------------------------------------------------------------ queries
+    def query(self, points: np.ndarray) -> np.ndarray:
+        """Stable cluster id per query point (read-only; -1 = noise/far)."""
+        last = self.engine._last
+        assert last is not None, "query before any ingest tick"
+        points = np.atleast_2d(np.asarray(points, np.float32))
+        m = len(points)
+        B = self.cfg.resolved_micro_batch()
+        mp = -(-m // B) * B                       # fixed-shape request pad
+        q = np.full((mp, points.shape[1]), PAD_COORD, np.float32)
+        q[:m] = points
+        qk = np.full(mp, np.inf, np.float32)      # +inf key: padding inert
+        qk[:m] = -np.inf                          # -inf key: plain NN
+        w = self.engine.window
+        wkey = jnp.zeros((self.cfg.stream.capacity,), jnp.float32)
+        dist, parent = self.engine.be.denser_nn(
+            jnp.asarray(q), jnp.asarray(qk), w.device, wkey)
+        dist = np.asarray(dist)[:m]
+        parent = np.asarray(parent)[:m]
+        labels = np.full(m, -1, np.int64)
+        ok = (np.isfinite(dist) & (dist < self.cfg.stream.d_cut)
+              & (parent >= 0) & (parent < len(last.labels)))
+        labels[ok] = last.labels[parent[ok]]
+        return labels
+
+    def stats(self) -> dict:
+        return {**self.engine.stats(), "buffered": self._buffered,
+                "submitted": self._submitted}

@@ -1,0 +1,346 @@
+"""StreamDPC: incremental sliding-window density-peaks clustering.
+
+The static pipeline answers "cluster this point set"; production traffic asks
+"keep the clustering current while points arrive and expire".  StreamDPC
+maintains Approx-DPC state over a fixed-capacity sliding window with
+micro-batch ``ingest``:
+
+* **rho** repairs incrementally (``incremental.repair_rho``): one signed
+  range count over the insert/evict delta batch instead of a full density
+  pass — the window's grid index is the asset, not the per-tick output.
+* **delta / dependent points** re-derive from the repaired densities using
+  the maintained grouping partition: rule 1 is O(n) segment ops (no distance
+  search — every non-maximum depends on its cell maximum), and only the cell
+  maxima — the points whose dependent can actually have changed (their
+  current NN evicted, or the rho ordering around them flipped) — are
+  re-queried with one ``denser_nn_update`` pass.  Found within d_cut ->
+  rule 2; otherwise the query IS the rule-3 exact root answer, exactly as in
+  the dense Approx-DPC branch.
+* **full-rebuild fallback**: when a batch overflows the measured cell
+  capacities (density collapse or drift out of the indexed box) the grid
+  bookkeeping rebuilds from the window; rho is partition-independent and
+  survives, so a rebuild costs O(n) host work, not a recluster.
+* **label continuity**: cluster centers carry *stable ids* across ticks,
+  matched by nearest-center between consecutive windows, so downstream
+  consumers see "cluster 7 drifted" rather than arbitrary relabels.
+
+Parity contract (tested per backend, incl. ``pallas-interpret``): after any
+sequence of ingest/evict batches, rho/delta/parent and the derived
+centers/labels are identical to a from-scratch ``run_approxdpc`` +
+``assign_labels`` on the current window contents.  The deterministic density
+jitter is slot-indexed and the window extracts in slot order, so the
+tie-break key stream matches the static path bit-for-bit.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.approxdpc import run_approxdpc
+from repro.core.dpc_types import DPCResult, density_jitter
+from repro.core.labels import Clustering, assign_labels
+from repro.kernels.backend import get_backend
+from repro.kernels.density import PAD_COORD
+
+from .incremental import CellOverflow, IncrementalGrid, make_sharded_repair, \
+    repair_rho
+from .window import SlidingWindow
+
+
+@dataclass(frozen=True)
+class StreamDPCConfig:
+    """Streaming DPC configuration (mirrors ``DPCConfig`` where shared).
+
+    ``capacity`` is the sliding-window size (fixed shapes; steady state
+    keeps it full), ``batch_cap`` the static micro-batch pad.  ``backend``
+    selects the kernel backend exactly as in ``DPCConfig``; streaming rides
+    the same registry/auto-detection via the two batched primitives
+    (``range_count_delta`` / ``denser_nn_update``).
+    """
+
+    d_cut: float
+    capacity: int = 4096
+    batch_cap: int = 256
+    rho_min: float = 10.0
+    delta_min: float | None = None      # default 2 * d_cut (must be > d_cut)
+    backend: str | None = None
+    cell_slack: float = 2.0             # live-cell budget over measured count
+    extent_margin: int = 4              # indexed-box margin, in cells
+    continuity_radius: float | None = None  # center matching (default 2*d_cut)
+    data_axis: str = "data"             # sharded-ingest mesh axis name
+
+    def __post_init__(self):
+        if self.batch_cap > self.capacity:
+            raise ValueError("batch_cap cannot exceed the window capacity")
+
+    def resolved_delta_min(self) -> float:
+        dm = 2.0 * self.d_cut if self.delta_min is None else self.delta_min
+        if dm <= self.d_cut:
+            raise ValueError("delta_min must exceed d_cut (Def. 5)")
+        return dm
+
+    def resolved_radius(self) -> float:
+        return (2.0 * self.d_cut if self.continuity_radius is None
+                else self.continuity_radius)
+
+
+class StreamTick(NamedTuple):
+    labels: np.ndarray        # (count,) stable cluster ids, -1 noise
+    centers: np.ndarray       # (count,) bool center mask
+    stable_ids: np.ndarray    # (k,) stable id of tick-local cluster 0..k-1
+    num_clusters: int
+    rebuilt: bool             # grid bookkeeping was rebuilt this tick
+    full_recompute: bool      # warm-up path (window below capacity)
+    tick: int
+
+
+@partial(jax.jit, static_argnames=("num_segments",))
+def _rule1(rho_key, seg_ids, num_segments: int):
+    """Approx-DPC rule 1 over maintained segments: per-cell argmax of the
+    all-distinct density key; every point's provisional parent is its cell
+    maximum (the maximum points at itself until rules 2/3 overwrite it)."""
+    slot = jnp.arange(rho_key.shape[0], dtype=jnp.int32)
+    seg_max = jax.ops.segment_max(rho_key, seg_ids, num_segments=num_segments)
+    is_max = rho_key == seg_max[seg_ids]
+    max_slot = jax.ops.segment_max(jnp.where(is_max, slot, -1), seg_ids,
+                                   num_segments=num_segments)
+    return is_max, max_slot[seg_ids]
+
+
+@jax.jit
+def _assemble(parent1, q_slots, nn_delta, nn_parent, d_cut):
+    """Merge rule 1 with the maxima NN pass — the dense Approx-DPC stamping:
+    NN within d_cut -> rule 2 (delta stamped d_cut); NN beyond -> rule 3
+    exact root delta (inf at the global peak)."""
+    n = parent1.shape[0]
+    d_cut = jnp.asarray(d_cut, jnp.float32)
+    found2 = jnp.isfinite(nn_delta) & (nn_delta < d_cut)
+    q_delta = jnp.where(found2, d_cut,
+                        jnp.where(jnp.isfinite(nn_delta), nn_delta, jnp.inf))
+    delta = jnp.full((n,), d_cut, jnp.float32)
+    delta = delta.at[q_slots].set(q_delta, mode="drop")
+    parent = parent1.at[q_slots].set(nn_parent, mode="drop").astype(jnp.int32)
+    return delta, parent
+
+
+class StreamDPC:
+    """Micro-batch streaming driver over a sliding window.
+
+    ``mesh``: optional jax Mesh — the window shards over every device for
+    the rho repair (``incremental.make_sharded_repair``), mirroring how
+    ``DistDPCConfig`` shards the batch path; requires
+    ``capacity % device_count == 0``.
+    """
+
+    def __init__(self, cfg: StreamDPCConfig, mesh=None):
+        self.cfg = cfg
+        self.be = get_backend(cfg.backend)
+        self.mesh = mesh
+        self.window: SlidingWindow | None = None
+        self.grid: IncrementalGrid | None = None
+        self._rho = None
+        self._jitter = density_jitter(cfg.capacity)
+        self._sharded = None
+        self._result: DPCResult | None = None
+        self._clustering: Clustering | None = None
+        self._registry: list[tuple[int, np.ndarray]] = []  # (stable_id, pos)
+        self._next_stable = 0
+        self._ticks = 0
+        self._full_recomputes = 0
+        self._last: StreamTick | None = None
+
+    # ------------------------------------------------------------- public
+    def initialize(self, points: np.ndarray) -> StreamTick:
+        """Bulk-load up to ``capacity`` points (one full recompute)."""
+        points = np.asarray(points, np.float32)
+        assert len(points) <= self.cfg.capacity, "initialize overfills window"
+        self._ensure_window(points.shape[1])
+        w = self.window
+        w.host[: len(points)] = points
+        w.device = w.device.at[: len(points)].set(jnp.asarray(points))
+        w.count = len(points)
+        w.cursor = w.count % self.cfg.capacity
+        return self._full_tick()
+
+    def ingest(self, batch: np.ndarray) -> StreamTick:
+        """Micro-batch ingest; batches larger than ``batch_cap`` chunk."""
+        batch = np.atleast_2d(np.asarray(batch, np.float32))
+        self._ensure_window(batch.shape[1])
+        tick = self._last
+        while len(batch):
+            chunk, batch = batch[: self.cfg.batch_cap], \
+                batch[self.cfg.batch_cap:]
+            if not self.window.full:
+                tick = self._warmup(chunk)
+            else:
+                tick = self._steady(chunk)
+        return tick
+
+    def window_points(self) -> np.ndarray:
+        """Window contents in slot order — run_approxdpc on this array is
+        the from-scratch reference the stream is parity-tested against."""
+        return self.window.contents()
+
+    @property
+    def result(self) -> DPCResult:
+        return self._result
+
+    @property
+    def clustering(self) -> Clustering:
+        return self._clustering
+
+    def stats(self) -> dict:
+        return {
+            "ticks": self._ticks,
+            "count": 0 if self.window is None else self.window.count,
+            "capacity": self.cfg.capacity,
+            "full_recomputes": self._full_recomputes,
+            "rebuilds": 0 if self.grid is None else self.grid.rebuilds,
+            "live_cells": 0 if self.grid is None else self.grid.live_cells,
+            "maxima_cap": 0 if self.grid is None else self.grid.maxima_cap,
+            "clusters": 0 if self._last is None else self._last.num_clusters,
+        }
+
+    # ------------------------------------------------------------ phases
+    def _ensure_window(self, dim: int):
+        if self.window is None:
+            self.window = SlidingWindow(self.cfg.capacity, dim)
+            self.grid = IncrementalGrid(
+                self.cfg.d_cut, self.cfg.capacity, dim,
+                cell_slack=self.cfg.cell_slack,
+                extent_margin=self.cfg.extent_margin)
+            if self.mesh is not None:
+                self._sharded = make_sharded_repair(
+                    self.mesh, self.cfg.data_axis, self.be, self.cfg.d_cut)
+
+    def _warmup(self, chunk: np.ndarray) -> StreamTick:
+        """Below capacity: append and recompute from scratch (the density
+        jitter is n-indexed, so every fill step reshuffles tie-breaks —
+        incremental repair only pays once shapes freeze at capacity)."""
+        w = self.window
+        room = self.cfg.capacity - w.count
+        take = chunk[:room]
+        B = self.cfg.batch_cap
+        padded = np.full((B, w.dim), PAD_COORD, np.float32)
+        padded[: len(take)] = take
+        w.push(padded, len(take))
+        tick = self._full_tick()
+        rest = chunk[room:]
+        return self._steady(rest) if len(rest) else tick
+
+    def _full_tick(self) -> StreamTick:
+        """Full recompute of the current window (warm-up / bulk load)."""
+        w = self.window
+        res = run_approxdpc(jnp.asarray(w.contents()), self.cfg.d_cut,
+                            backend=self.be)
+        self._full_recomputes += 1
+        if w.full:
+            # steady state starts: freeze rho at full window shape and
+            # derive the incremental bookkeeping
+            self._rho = res.rho
+            self.grid.rebuild(w.host, w.count)
+        return self._finish(res, rebuilt=False, full=True)
+
+    def _steady(self, chunk: np.ndarray) -> StreamTick:
+        cfg = self.cfg
+        w = self.window
+        r = len(chunk)
+        if r == 0:
+            return self._last
+        B = cfg.batch_cap
+        padded = np.full((B, w.dim), PAD_COORD, np.float32)
+        padded[:r] = chunk
+        slots, evicted, ev_valid = w.push(padded, r)
+        rebuilt = False
+        try:
+            self.grid.apply(slots, padded, evicted, r)
+        except CellOverflow:
+            self.grid.rebuild(w.host, w.count)
+            rebuilt = True
+        # rho repair: +1 per inserted, -1 per evicted neighbor (fused)
+        delta_batch = jnp.asarray(np.concatenate([padded, np.where(
+            ev_valid[:, None], evicted, PAD_COORD)]))
+        signs = np.zeros(2 * B, np.float32)
+        signs[:r] = 1.0
+        signs[B:][ev_valid] = -1.0
+        repair = self._sharded if self._sharded is not None else partial(
+            repair_rho, self.be, cfg.d_cut)
+        self._rho = repair(w.device, self._rho, delta_batch,
+                           jnp.asarray(signs), jnp.asarray(padded),
+                           jnp.asarray(slots))
+        return self._finish(self._incremental_result(), rebuilt=rebuilt,
+                            full=False)
+
+    def _incremental_result(self) -> DPCResult:
+        """Rules 1-3 from maintained state: segment ops for every point, one
+        denser-NN pass for the cell maxima only."""
+        cfg = self.cfg
+        cap = cfg.capacity
+        rho_key = self._rho + self._jitter
+        is_max, parent1 = _rule1(rho_key, self.grid.seg_dev, cap)
+        q = np.nonzero(np.asarray(is_max))[0]
+        assert len(q) <= self.grid.maxima_cap   # apply() enforces the budget
+        q_slots = np.full(self.grid.maxima_cap, cap, np.int64)
+        q_slots[: len(q)] = q
+        q_slots = jnp.asarray(q_slots)
+        nn_delta, nn_parent = self.be.denser_nn_update(
+            self.window.device, rho_key, q_slots)
+        delta, parent = _assemble(parent1, q_slots, nn_delta, nn_parent,
+                                  cfg.d_cut)
+        return DPCResult(rho=self._rho, rho_key=rho_key, delta=delta,
+                         parent=parent)
+
+    # ------------------------------------------------- labels + continuity
+    def _finish(self, res: DPCResult, *, rebuilt: bool,
+                full: bool) -> StreamTick:
+        cfg = self.cfg
+        cl = assign_labels(res, cfg.rho_min, cfg.resolved_delta_min())
+        self._result, self._clustering = res, cl
+        labels = np.asarray(cl.labels)
+        centers = np.asarray(cl.centers)
+        c_slots = np.nonzero(centers)[0]
+        stable = self._match_centers(self.window.host[c_slots])
+        k = int(cl.num_clusters)
+        by_label = np.full(max(k, 1), -1, np.int64)
+        by_label[labels[c_slots]] = stable
+        out = np.where(labels >= 0, by_label[np.maximum(labels, 0)], -1)
+        self._registry = [(int(s), self.window.host[c].copy())
+                          for s, c in zip(stable, c_slots)]
+        self._ticks += 1
+        self._last = StreamTick(labels=out, centers=centers,
+                                stable_ids=stable, num_clusters=k,
+                                rebuilt=rebuilt, full_recompute=full,
+                                tick=self._ticks)
+        return self._last
+
+    def _match_centers(self, positions: np.ndarray) -> np.ndarray:
+        """Greedy nearest matching of new centers to the previous tick's,
+        within ``continuity_radius``; unmatched centers get fresh ids."""
+        m = len(positions)
+        stable = np.full(m, -1, np.int64)
+        if self._registry and m:
+            prev_pos = np.stack([p for _, p in self._registry])
+            prev_ids = np.array([s for s, _ in self._registry])
+            dist = np.sqrt(((positions[:, None, :].astype(np.float64)
+                             - prev_pos[None]) ** 2).sum(-1))
+            radius = self.cfg.resolved_radius()
+            used_new = np.zeros(m, bool)
+            used_old = np.zeros(len(prev_ids), bool)
+            for flat in np.argsort(dist, axis=None):
+                i, j = divmod(int(flat), len(prev_ids))
+                if dist[i, j] > radius:
+                    break
+                if used_new[i] or used_old[j]:
+                    continue
+                stable[i] = prev_ids[j]
+                used_new[i] = used_old[j] = True
+        for i in range(m):
+            if stable[i] < 0:
+                stable[i] = self._next_stable
+                self._next_stable += 1
+        return stable

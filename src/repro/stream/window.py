@@ -1,0 +1,76 @@
+"""Fixed-capacity sliding-window point store (ring buffer, slot-stable).
+
+The streaming analogue of the static point table: ``capacity`` slots whose
+*identity is stable* — a point keeps its slot for its whole lifetime, so every
+per-point quantity (rho, cell id, the deterministic density jitter) is slot-
+indexed and survives ticks without reindexing.  Arrival order is the ring
+order: the oldest point always sits at the cursor, so eviction is simply
+overwriting the next ``r`` slots.
+
+Shapes are donate-friendly fixed: ``push`` takes a batch padded to a static
+``batch_cap`` plus a valid count, and the device table is updated with one
+fixed-shape scatter (invalid rows scatter to slot ``capacity`` and drop).
+During warm-up the occupied slots are exactly the prefix ``[0, count)`` —
+the property the full-recompute path relies on to extract window contents in
+slot order.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.kernels.density import PAD_COORD
+
+
+class SlidingWindow:
+    """Ring buffer of points with a host mirror and a device table."""
+
+    def __init__(self, capacity: int, dim: int):
+        self.capacity = int(capacity)
+        self.dim = int(dim)
+        # empty slots sit at the kernels' PAD coordinate: far outside any
+        # d_cut, so warm-up reads (e.g. service.query NN) never match them
+        self.host = np.full((capacity, dim), PAD_COORD, np.float32)
+        self.device = jnp.full((capacity, dim), PAD_COORD, jnp.float32)
+        self.count = 0          # occupied slots (== capacity at steady state)
+        self.cursor = 0         # next slot to fill / evict (ring order)
+        self.ticks = 0
+
+    @property
+    def full(self) -> bool:
+        return self.count == self.capacity
+
+    def contents(self) -> np.ndarray:
+        """Current window contents in slot order (host copy, (count, d))."""
+        return self.host[: self.count].copy()
+
+    def push(self, batch: np.ndarray, r: int):
+        """Overwrite the next ``r`` ring slots with ``batch[:r]``.
+
+        ``batch`` is the fixed-shape (batch_cap, d) micro-batch; rows past
+        ``r`` are padding.  Returns ``(slots, evicted, evicted_valid)``:
+
+        * ``slots``          (batch_cap,) int32 — target slot per batch row,
+                             ``capacity`` (out of range -> scatter-drop) for
+                             padding rows;
+        * ``evicted``        (batch_cap, d) f32 — the *old* contents of those
+                             slots (garbage where not ``evicted_valid``);
+        * ``evicted_valid``  (batch_cap,) bool — True where the slot held a
+                             live point that this push evicts.
+        """
+        cap, B = self.capacity, batch.shape[0]
+        assert 0 <= r <= min(B, cap)
+        slots = np.full((B,), cap, np.int32)
+        ring = (self.cursor + np.arange(r)) % cap
+        slots[:r] = ring
+        evicted = self.host[np.minimum(slots, cap - 1)].copy()
+        evicted_valid = np.zeros((B,), bool)
+        evicted_valid[:r] = ring < self.count
+        # host mirror + one fixed-shape device scatter (drop on padding)
+        self.host[ring] = batch[:r]
+        self.device = self.device.at[jnp.asarray(slots)].set(
+            jnp.asarray(batch), mode="drop")
+        self.cursor = int((self.cursor + r) % cap)
+        self.count = min(self.count + r, cap)
+        self.ticks += 1
+        return slots, evicted, evicted_valid

@@ -112,6 +112,120 @@ class TestPrimitiveParity:
             assert bool(jnp.all(jnp.isinf(dd) == jnp.isinf(rd))), name
 
 
+class TestStreamingPrimitives:
+    """The two streaming batched primitives (repro.stream) per backend."""
+
+    @pytest.mark.parametrize("name", ["jnp", "pallas-interpret"])
+    def test_range_count_delta(self, name):
+        be = get_backend(name)
+        rng = np.random.default_rng(5)
+        x = jnp.asarray(_safe_points(400, 3, D_CUT, 6))
+        batch = jnp.asarray(_safe_points(96, 3, D_CUT, 7))
+        signs = jnp.asarray(rng.choice([-1.0, 0.0, 1.0], batch.shape[0]),
+                            jnp.float32)
+        got = be.range_count_delta(x, batch, signs, D_CUT)
+        d2 = ((np.asarray(x)[:, None, :].astype(np.float64)
+               - np.asarray(batch)[None]) ** 2).sum(-1)
+        ref = ((d2 < D_CUT ** 2) * np.asarray(signs)[None, :]).sum(1)
+        assert np.array_equal(np.asarray(got), ref.astype(np.float32))
+
+    @pytest.mark.parametrize("name", ["jnp", "pallas-interpret"])
+    def test_delta_of_counts_composes(self, name):
+        """rho(after) == rho(before) + delta(batch): the exact-integer
+        repair identity the sliding window relies on."""
+        be = get_backend(name)
+        pts = _safe_points(500, 2, D_CUT, 8)
+        survivors, ins = pts[:400], pts[400:432]
+        evi = survivors[:32]          # pretend these leave the window
+        after = np.concatenate([survivors[32:], ins])
+        batch = jnp.asarray(np.concatenate([ins, evi]))
+        signs = jnp.asarray(np.concatenate([np.ones(len(ins)),
+                                            -np.ones(len(evi))]), jnp.float32)
+        q = jnp.asarray(survivors[32:])
+        before = be.range_count(q, jnp.asarray(survivors), D_CUT)
+        repaired = before + be.range_count_delta(q, batch, signs, D_CUT)
+        fresh = be.range_count(q, jnp.asarray(after), D_CUT)
+        assert bool(jnp.all(repaired == fresh))
+
+    @pytest.mark.parametrize("name", ["jnp", "pallas-interpret"])
+    def test_denser_nn_update_subset(self, name):
+        be = get_backend(name)
+        rng = np.random.default_rng(9)
+        pts = jnp.asarray(_safe_points(400, 3, D_CUT, 10))
+        n = pts.shape[0]
+        rk = jnp.asarray(rng.permutation(n).astype(np.float32))
+        rows = np.sort(rng.choice(n, 48, replace=False))
+        q_slots = jnp.asarray(np.concatenate([rows, [n, n + 3]]))  # + padding
+        dd, pp = be.denser_nn_update(pts, rk, q_slots)
+        rd, rp = be.denser_nn(pts[jnp.asarray(rows)],
+                              rk[jnp.asarray(rows)], pts, rk)
+        assert bool(jnp.all(pp[:48] == rp))
+        both_inf = jnp.isinf(dd[:48]) & jnp.isinf(rd)
+        assert bool(jnp.all((dd[:48] == rd) | both_inf))
+        assert bool(jnp.all(jnp.isinf(dd[48:])))     # padding rows inert
+        assert bool(jnp.all(pp[48:] == -1))
+
+
+class TestArgminRefinement:
+    """ROADMAP item: expanded-form d2 can flip near-tie argmins when NN
+    distances << domain scale; the kernels re-rank the top-k candidates in
+    direct-diff form so the winner survives ill conditioning."""
+
+    @staticmethod
+    def _adversarial(offset=5e4, seed=0):
+        """Query at a large offset with a planted near-tie: true NN at
+        r=30, decoy at r=30.07 — a gap far below the expanded form's
+        absolute error (~eps * |x|^2 ~ 1e2 at this offset), with fillers
+        far enough to stay out of every top-k."""
+        rng = np.random.default_rng(seed)
+        q = np.array([offset, offset], np.float32)
+        nn = q + np.array([30.0, 0.0], np.float32)
+        decoy = q + np.array([0.0, 30.07], np.float32)
+        fillers = q + (rng.uniform(300.0, 2000.0, (61, 2)).astype(np.float32)
+                       * rng.choice([-1, 1], (61, 2)))
+        y = np.concatenate([[nn], [decoy], fillers]).astype(np.float32)
+        return (jnp.asarray(q[None]), jnp.zeros(1, jnp.float32),
+                jnp.asarray(y), jnp.ones(len(y), jnp.float32))
+
+    def test_topk_rerank_recovers_true_nn(self):
+        from repro.kernels import ops
+
+        x, xk, y, yk = self._adversarial()
+        ref_d, ref_p = get_backend("jnp").denser_nn(x, xk, y, yk)
+        assert int(ref_p[0]) == 0                    # direct diff: true NN
+        got_d, got_p = ops.dependent_masked(x, xk, y, yk, interpret=True)
+        assert int(got_p[0]) == int(ref_p[0])
+        assert float(got_d[0]) == float(ref_d[0])    # winner value direct-diff
+
+    def test_k1_reproduces_the_bug(self):
+        """refine_k=1 is the historical refine-the-winner-only behavior;
+        the adversarial data must flip it (guards the test's potency)."""
+        from repro.kernels.dependent import masked_min_dist
+        from repro.kernels.ops import pad_points, pad_vec
+
+        x, xk, y, yk = self._adversarial()
+        xp, xkp = pad_points(x, 128), pad_vec(xk, 128, jnp.inf)
+        yp, ykp = pad_points(y, 256), pad_vec(yk, 256, -jnp.inf)
+        _, p1 = masked_min_dist(xp, xkp, yp, ykp, interpret=True, refine_k=1)
+        assert int(p1[0]) == 1, "expanded-form flip no longer reproduces"
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_scaled_dataset_parent_parity(self, seed):
+        """Whole-dataset regression: a blob at a 50x offset (NN distances
+        << coordinate scale; expanded-form noise spans several near-ties,
+        flipping refine_k=1 on every seed) keeps exact parent parity
+        between the jnp reference and the re-ranking kernels."""
+        rng = np.random.default_rng(seed)
+        pts = (rng.normal(0, 200.0, (384, 2)) + 1e4).astype(np.float32)
+        x = jnp.asarray(pts)
+        rk = jnp.asarray(rng.permutation(len(pts)).astype(np.float32))
+        rd, rp = get_backend("jnp").denser_nn(x, rk, x, rk)
+        gd, gp = get_backend("pallas-interpret").denser_nn(x, rk, x, rk)
+        assert bool(jnp.all(rp == gp))
+        both_inf = jnp.isinf(rd) & jnp.isinf(gd)
+        assert bool(jnp.all((rd == gd) | both_inf))
+
+
 class TestAlgorithmParity:
     """Acceptance: compute_dpc(..., backend="pallas-interpret") equals the
     jnp backend (and, for the exact algorithms, the run_scan oracle)."""
