@@ -16,9 +16,11 @@ resolved by rules 1-2 has true delta < d_cut < delta_min under Ex-DPC too, and
 every root gets its exact delta.  Property-tested in tests/test_dpc_core.py.
 
 With a pallas backend the grouping grid (rule 1) is unchanged but both hot
-primitives go dense: rho is the tiled all-pairs range count, and ONE global
-denser-NN kernel pass serves rules 2 and 3 at once — the NN is within d_cut
-iff rule 2 fires, and otherwise IS the rule-3 exact root distance.
+primitives come from ONE fused ``rho_delta`` tile sweep (kernels/sweep.py):
+the same pass that counts every row's density also keeps its k nearest
+candidates, so rules 2 and 3 read the per-row denser-NN for the cell maxima
+with no second table sweep — the NN is within d_cut iff rule 2 fires, and
+otherwise IS the rule-3 exact root distance.
 """
 from __future__ import annotations
 
@@ -28,7 +30,7 @@ import jax.numpy as jnp
 
 from repro.kernels.backend import get_backend
 
-from .dpc_types import DPCResult, with_jitter
+from .dpc_types import DPCResult, density_jitter, with_jitter
 from .exdpc import resolve_fallback
 from .grid import build_grid, Grid
 from .stencil import density_per_cell, dependent_stencil
@@ -52,17 +54,31 @@ def run_approxdpc(points, d_cut: float, *, g: int | None = None,
     if grid is None:
         grid = build_grid(points, d_cut, g=g)
 
+    seg = _group_segments(grid)
+
     # --- exact local density: joint per-cell range count (§4.2) on the
-    #     reference backend, tiled all-pairs kernel on pallas ---
+    #     reference backend, fused rho+delta tile sweep on pallas ---
+    nn_delta_all = nn_parent_all = None
     if be.mxu_dense:
-        rho = be.range_count(points, points, d_cut)
+        def _maxima_mask(rho_key):
+            # only cell maxima consume the Def.-2 answer (rules 2+3), so the
+            # fused path's unresolved-row fallback is restricted to them —
+            # the |G| << n rectangular pass the paper's cost model counts on
+            rk_s = rho_key[grid.order]
+            seg_max = jax.ops.segment_max(rk_s, seg, num_segments=n)
+            return (rk_s == seg_max[seg])[grid.inv_order]
+
+        # one engine invocation answers Def. 1 for every row AND Def. 2 for
+        # the rows that will need it (the cell maxima, picked below)
+        rho, rho_key, nn_delta_all, nn_parent_all = be.rho_delta(
+            points, points, d_cut, jitter=density_jitter(n),
+            fallback_interest=_maxima_mask)
     else:
         rho = density_per_cell(grid, block=cell_block)[grid.inv_order]
-    rho_key = with_jitter(rho)
+        rho_key = with_jitter(rho)
     rk_sorted = rho_key[grid.order]
 
     # --- rule 1: in-cell O(1) dependents via segment argmax ---
-    seg = _group_segments(grid)
     num_seg = n  # <= n segments; segment ops padded to n
     seg_max = jax.ops.segment_max(rk_sorted, seg, num_segments=num_seg)
     is_cellmax = rk_sorted == seg_max[seg]
@@ -74,16 +90,14 @@ def run_approxdpc(points, d_cut: float, *, g: int | None = None,
     delta_s = jnp.full((n,), grid.d_cut, jnp.float32)
 
     if be.mxu_dense:
-        # --- rules 2+3 in one rectangular denser-NN kernel pass over the
-        #     cell maxima only (|maxima| = |G| << n, the paper's whole
-        #     point): NN within d_cut -> rule 2 (delta stamped d_cut);
-        #     NN beyond d_cut -> rule 3 exact root delta (inf at the peak).
+        # --- rules 2+3 from the fused sweep's per-row denser-NN: only the
+        #     cell maxima consume it (every other row is rule 1).  NN within
+        #     d_cut -> rule 2 (delta stamped d_cut); NN beyond d_cut ->
+        #     rule 3 exact root delta (inf at the peak).
         is_cm = np.asarray(is_cellmax[grid.inv_order])
         cm_rows = is_cm.nonzero()[0]
-        q_pts = points[cm_rows]
-        q_rk = rho_key[cm_rows]
-        nn_delta, nn_parent = be.denser_nn(q_pts, q_rk, points, rho_key,
-                                           block=fallback_block)
+        nn_delta = nn_delta_all[cm_rows]
+        nn_parent = nn_parent_all[cm_rows]
         parent1 = jnp.where(parent_s >= 0, grid.order[parent_s], -1)
         parent1 = parent1[grid.inv_order]
         found2 = jnp.isfinite(nn_delta) & (nn_delta < d_cut)

@@ -9,10 +9,12 @@ parallelized).  Two exact realizations, selected by the kernel backend:
   masked search* — first the d_cut stencil (exact whenever a denser point
   exists within d_cut, i.e. the paper's Lemma-2 alpha fraction), then a
   global masked-NN fallback for the few stencil-unresolved points.
-* ``pallas`` / ``pallas-interpret`` (dense MXU): rho is the tiled all-pairs
-  range-count kernel; delta sorts points by descending density key and runs
-  the triangular prefix-NN kernel — the incremental-tree invariant as a
-  static lower-triangular tile sweep (kernels/dependent.py).
+* ``pallas`` / ``pallas-interpret`` (dense MXU): the fused ``rho_delta``
+  engine primitive — one tile sweep computes the range count AND the
+  denser-NN accumulator (kernels/sweep.py); the incremental-tree invariant
+  becomes the kept-k resolution plus a masked-NN pass over the local-maxima
+  tail.  (The triangular prefix-NN kernel remains on the backend as an
+  alternative schedule.)
 
 Output is exact either way — bit-equal to the O(n^2) Scan oracle (tested;
 the pallas form up to f32 threshold rounding, see kernels/backend.py).
@@ -24,7 +26,7 @@ import jax.numpy as jnp
 
 from repro.kernels.backend import get_backend
 
-from .dpc_types import DPCResult, with_jitter
+from .dpc_types import DPCResult, density_jitter, with_jitter
 from .grid import build_grid, Grid
 from .stencil import density_per_point, dependent_stencil
 
@@ -59,16 +61,18 @@ def resolve_fallback(points, rho_key, delta, parent, resolved, block=4096,
 
 
 def _run_exdpc_dense(points, d_cut: float, be, block: int) -> DPCResult:
-    """Dense kernel path: all-pairs rho tile sweep + triangular prefix NN."""
-    rho = be.range_count(points, points, d_cut)
-    rho_key = with_jitter(rho)
-    order = jnp.argsort(-rho_key)           # descending: prefix == denser
-    inv = jnp.argsort(order)
-    delta_s, parent_s = be.prefix_nn(points[order], block=block)
-    parent_orig = jnp.where(parent_s >= 0,
-                            order[jnp.maximum(parent_s, 0)], -1)
-    return DPCResult(rho=rho, rho_key=rho_key, delta=delta_s[inv],
-                     parent=parent_orig[inv].astype(jnp.int32))
+    """Dense kernel path: the fused rho+delta tile sweep.
+
+    One engine invocation computes the range count and the denser-NN
+    accumulator over the same distance tiles (kernels/sweep.py) — no
+    density sort, no second sweep.  The triangular ``prefix_nn`` form
+    remains available on the backend for schedule experiments
+    (benchmarks/backend_compare.py still times it)."""
+    rho, rho_key, delta, parent = be.rho_delta(
+        points, points, d_cut, jitter=density_jitter(points.shape[0]),
+        block=block)
+    return DPCResult(rho=rho, rho_key=rho_key, delta=delta,
+                     parent=parent.astype(jnp.int32))
 
 
 def run_exdpc(points, d_cut: float, *, g: int | None = None,

@@ -27,7 +27,7 @@ import jax.numpy as jnp
 
 from repro.kernels.backend import get_backend
 
-from .dpc_types import DPCResult, with_jitter
+from .dpc_types import DPCResult, density_jitter, with_jitter
 from .exdpc import _pow2_pad
 from .grid import build_grid, Grid
 from .stencil import density_for_slots, dependent_stencil_slots
@@ -69,9 +69,16 @@ def run_sapproxdpc(points, d_cut: float, eps: float = 0.8, *,
                                      constant_values=n))
 
     # --- exact rho for representatives only ---
-    if be.mxu_dense:    # dense rectangular range-count kernel: reps x all
-        rep_rho = be.range_count(grid.points[jnp.asarray(rep_slots)],
-                                 grid.points, d_cut)
+    if be.mxu_dense:
+        # fused engine sweep: reps x all-points range count AND the NN among
+        # the strictly-denser *representative* columns (nn_sel gates the
+        # kept-k to rep rows), one pass — phases 1+2 fall out of its result.
+        # the density jitter indexes by *original* point id, so rep queries
+        # carry jitter[order[slot]] — identical keys to rk_sorted[rep_slots]
+        rep_jit = density_jitter(n)[grid.order[jnp.asarray(rep_slots)]]
+        rep_rho, _, nn_d, nn_p = be.rho_delta(
+            grid.points[jnp.asarray(rep_slots)], grid.points, d_cut,
+            jitter=rep_jit, y_sel_slots=jnp.asarray(rep_slots))
     else:
         rep_rho = density_for_slots(grid, rep_slots_p, block=block)[:num_reps]
 
@@ -90,18 +97,17 @@ def run_sapproxdpc(points, d_cut: float, eps: float = 0.8, *,
     rep_pts = grid.points[jnp.asarray(rep_slots)]
     rep_rk = rk_sorted[jnp.asarray(rep_slots)]
     if be.mxu_dense:
-        # --- phases 1+2 in one dense denser-NN kernel pass over the reps:
-        #     NN within d_cut -> phase-1 resolution (delta stamped d_cut,
-        #     the tighter-than-paper bound below); otherwise the NN already
-        #     IS the phase-2 exact answer.
-        nn_d, nn_p = be.denser_nn(rep_pts, rep_rk, rep_pts, rep_rk,
-                                  block=fallback_block)
+        # --- phases 1+2 straight from the fused sweep above: NN within
+        #     d_cut -> phase-1 resolution (delta stamped d_cut, the
+        #     tighter-than-paper bound below); otherwise the NN already IS
+        #     the phase-2 exact answer.  nn_p is in sorted-slot space (the
+        #     candidate columns were the full table, gated to rep rows).
         nn_d = np.asarray(nn_d)
-        nn_p = np.asarray(nn_p)                           # rep-index space
+        nn_p = np.asarray(nn_p)
         found = np.isfinite(nn_d) & (nn_d < d_cut)
         p2_delta = np.where(found, np.float32(d_cut),
                             np.where(np.isfinite(nn_d), nn_d, np.inf))
-        p2_parent = np.where(nn_p >= 0, rep_slots[np.maximum(nn_p, 0)], -1)
+        p2_parent = nn_p
     else:
         # --- phase 1: stencil among representatives (d_cut ⊂ (1+eps)d_cut
         #     bound) ---

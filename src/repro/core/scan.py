@@ -7,6 +7,13 @@ not tolerances.  With a pallas backend the same two primitives run as MXU
 expanded-form tiles (threshold-safe tolerances apply — see
 tests/test_kernels.py); ``run_scan`` is then the dense-hardware DPC rather
 than the oracle.
+
+Since the unified tile-sweep engine landed, ``run_scan`` drives the fused
+``rho_delta`` primitive — Def. 1 and Def. 2 answered by one backend call
+(one shared jit on ``jnp``, one kernel sweep + direct-diff epilogue on
+pallas) instead of two back-to-back table sweeps.  The fused path is
+bit-parity-tested against the sequential formulation per backend
+(tests/test_sweep_fused.py), so the oracle contract is unchanged.
 """
 from __future__ import annotations
 
@@ -14,7 +21,7 @@ import jax.numpy as jnp
 
 from repro.kernels.backend import get_backend
 
-from .dpc_types import DPCResult, with_jitter
+from .dpc_types import DPCResult, density_jitter
 
 
 def local_density_scan(points: jnp.ndarray, d_cut: float,
@@ -41,8 +48,8 @@ def run_scan(points, d_cut: float, block: int = 512,
     the ``jnp`` default on CPU is the bit-exact oracle)."""
     be = get_backend(backend)
     points = jnp.asarray(points, jnp.float32)
-    rho = be.range_count(points, points, d_cut, block=block)
-    rho_key = with_jitter(rho)
-    delta, parent = be.denser_nn(points, rho_key, points, rho_key,
-                                 block=block)
-    return DPCResult(rho=rho, rho_key=rho_key, delta=delta, parent=parent)
+    rho, rho_key, delta, parent = be.rho_delta(
+        points, points, d_cut, jitter=density_jitter(points.shape[0]),
+        block=block)
+    return DPCResult(rho=rho, rho_key=rho_key, delta=delta,
+                     parent=parent.astype(jnp.int32))

@@ -58,8 +58,10 @@ class DistDPCConfig:
     # Kernel backend for the per-shard tiles (repro.kernels.backend).  With
     # a pallas backend + 'gather', the rho/delta phases run the dense MXU
     # kernels per shard (my rows x gathered table) and the delta phase is
-    # already globally exact, so the fallback phase is skipped.  The 'halo'
-    # strategy is stencil-shaped and always uses the jnp reference tiles.
+    # already globally exact, so the fallback phase is skipped.  With
+    # 'halo', both phases run the backend's span-masked halo primitives
+    # (pallas tiles when dense — the ring windows feed the Mosaic kernels
+    # directly; jnp gathers otherwise).
     backend: str | None = None
 
 
@@ -111,75 +113,35 @@ def _halo_window(tbl_my, lo_my, axis, n_shards: int, W: int,
     return window
 
 
-def _make_rho_halo(axis, d_cut, block, span_w, n_shards, W, hf, hb):
-    d2cut = jnp.float32(d_cut) ** 2
-
+def _make_rho_halo(axis, d_cut, block, span_w, n_shards, W, hf, hb, be):
     def rho(my_pts, my_starts, my_ends, tbl_my, lo_my):
+        """Halo rho phase: ring-assemble the window, then the backend's
+        span-masked range-count primitive (pallas tiles when the backend is
+        dense — the optimized distributed path exercises the Mosaic kernels,
+        not the jnp reference)."""
         window = _halo_window(tbl_my, lo_my, axis, n_shards, W, hf, hb)
-        m = my_pts.shape[0]
         lo = lo_my[0]
-        nb = _blocked(m, block)
-        mp = nb * block
-        pts_p = _pad_rows(my_pts, mp, 0.0)
-        st_p = _pad_rows(my_starts, mp, 0)
-        en_p = _pad_rows(my_ends, mp, 0)
-
-        def chunk(i0):
-            rows = jax.lax.dynamic_slice_in_dim(pts_p, i0, block, 0)
-            st = jax.lax.dynamic_slice_in_dim(st_p, i0, block, 0) - lo
-            en = jax.lax.dynamic_slice_in_dim(en_p, i0, block, 0) - lo
-            idx = st[..., None] + jnp.arange(span_w, dtype=st.dtype)
-            valid = (idx < en[..., None]) & (idx >= 0)
-            cand = window[jnp.clip(idx, 0, W - 1)]
-            d2 = jnp.sum((rows[:, None, None, :] - cand) ** 2, axis=-1)
-            return jnp.sum((d2 < d2cut) & valid, axis=(1, 2))
-
-        cnt = jax.lax.map(chunk, jnp.arange(nb) * block).reshape(-1)[:m]
-        return cnt.astype(jnp.float32)
+        return be.range_count_halo(my_pts, window, my_starts - lo,
+                                   my_ends - lo, d_cut, span_cap=span_w,
+                                   block=block)
 
     return rho
 
 
-def _make_delta_halo(axis, d_cut, block, span_w, n_shards, W, hf, hb):
-    d2cut = jnp.float32(d_cut) ** 2
-
+def _make_delta_halo(axis, d_cut, block, span_w, n_shards, W, hf, hb, be):
     def delta(my_pts, my_rk, my_starts, my_ends, tbl_my, rk_my, lo_my):
+        """Halo delta phase: strictly-denser NN within d_cut over the halo
+        window, through the backend's span-masked NN primitive."""
         both = jnp.concatenate([tbl_my, rk_my[:, None]], axis=1)
         wboth = _halo_window(both, lo_my, axis, n_shards, W, hf, hb)
         window, wrk = wboth[:, :-1], wboth[:, -1]
-        m = my_pts.shape[0]
         lo = lo_my[0]
-        nb = _blocked(m, block)
-        mp = nb * block
-        pts_p = _pad_rows(my_pts, mp, 0.0)
-        rk_p = _pad_rows(my_rk, mp, jnp.inf)
-        st_p = _pad_rows(my_starts, mp, 0)
-        en_p = _pad_rows(my_ends, mp, 0)
-
-        def chunk(i0):
-            rows = jax.lax.dynamic_slice_in_dim(pts_p, i0, block, 0)
-            rk = jax.lax.dynamic_slice_in_dim(rk_p, i0, block, 0)
-            st = jax.lax.dynamic_slice_in_dim(st_p, i0, block, 0) - lo
-            en = jax.lax.dynamic_slice_in_dim(en_p, i0, block, 0) - lo
-            idx = st[..., None] + jnp.arange(span_w, dtype=st.dtype)
-            valid = (idx < en[..., None]) & (idx >= 0)
-            idx_c = jnp.clip(idx, 0, W - 1)
-            cand = window[idx_c]
-            cand_rk = wrk[idx_c]
-            d2 = jnp.sum((rows[:, None, None, :] - cand) ** 2, axis=-1)
-            mask = valid & (cand_rk > rk[:, None, None]) & (d2 < d2cut)
-            d2m = jnp.where(mask, d2, jnp.inf).reshape(block, -1)
-            j = jnp.argmin(d2m, axis=1)
-            best = d2m[jnp.arange(block), j]
-            # local window idx -> global sorted slot
-            pidx = (idx_c.reshape(block, -1)[jnp.arange(block), j]
-                    + lo).astype(jnp.int32)
-            ok = jnp.isfinite(best)
-            return (jnp.sqrt(best),
-                    jnp.where(ok, pidx, -1).astype(jnp.int32), ok)
-
-        dd, pp, ff = jax.lax.map(chunk, jnp.arange(nb) * block)
-        return (dd.reshape(-1)[:m], pp.reshape(-1)[:m], ff.reshape(-1)[:m])
+        dd, pp, ok = be.denser_nn_halo(my_pts, my_rk, window, wrk,
+                                       my_starts - lo, my_ends - lo, d_cut,
+                                       span_cap=span_w, block=block)
+        # local window idx -> global sorted slot
+        pp = jnp.where(ok, (pp + lo).astype(jnp.int32), -1)
+        return dd, pp, ok
 
     return delta
 
@@ -334,9 +296,10 @@ def distributed_dpc(points, cfg: DistDPCConfig, mesh: Mesh) -> DPCResult:
         lo_arr = jnp.asarray(lo_s[:, None].astype(np.int64))  # (S, 1)
 
         rho_fn = _make_rho_halo(axis, cfg.d_cut, cfg.block, span_w,
-                                S_data, W, hf, hb)
+                                S_data, W, hf, hb, be)
         sm_rho = shard_map(rho_fn, mesh=flat_mesh,
-                           in_specs=(P(axis),) * 5, out_specs=P(axis))
+                           in_specs=(P(axis),) * 5, out_specs=P(axis),
+                           check_rep=not be.mxu_dense)  # pallas: no rep rule
         rho_sorted = jax.jit(sm_rho)(pts_s, starts_p, ends_p, pts_s,
                                      lo_arr)[:n]
     elif dense:
@@ -359,10 +322,11 @@ def distributed_dpc(points, cfg: DistDPCConfig, mesh: Mesh) -> DPCResult:
     rk_query = _pad_rows(rho_key[grid.order], m, jnp.inf)
     if halo:
         delta_fn = _make_delta_halo(axis, cfg.d_cut, cfg.block, span_w,
-                                    S_data, W, hf, hb)
+                                    S_data, W, hf, hb, be)
         sm_delta = shard_map(delta_fn, mesh=flat_mesh,
                              in_specs=(P(axis),) * 7,
-                             out_specs=(P(axis), P(axis), P(axis)))
+                             out_specs=(P(axis), P(axis), P(axis)),
+                             check_rep=not be.mxu_dense)  # pallas: no rep rule
         dlt_s, par_s, ok_s = jax.jit(sm_delta)(
             pts_s, rk_query, starts_p, ends_p, pts_s, rk_sorted_full,
             lo_arr)
@@ -393,9 +357,10 @@ def distributed_dpc(points, cfg: DistDPCConfig, mesh: Mesh) -> DPCResult:
         q_rk = jnp.asarray(np.where(
             np.arange(cap) < unresolved.size,
             np.asarray(rho_key[grid.order])[q_idx], np.inf))
-        # halo results are direct-difference throughout, so its fallback
-        # stays on the jnp reference even when cfg.backend is pallas
-        fb_be = get_backend("jnp") if halo else be
+        # the halo phases route through the configured backend's span-masked
+        # kernels (winners direct-diff refined), so the fallback uses the
+        # same backend — no silent jnp detour on the optimized path
+        fb_be = be
         fb_fn = _make_fallback(axis, max(cfg.block, 1024), fb_be)
         sm_fb = shard_map(fb_fn, mesh=flat_mesh,
                           in_specs=(P(axis), P(axis), P(axis), P(axis)),

@@ -9,50 +9,109 @@ pick where those primitives run:
 * ``jnp``              — blocked pure-jnp direct-difference forms: the
                          reference implementation and the CPU default.  Bit-
                          identical to the historical ``core.scan`` oracle.
-* ``pallas``           — the Mosaic TPU kernels in ``kernels/density.py`` /
-                         ``kernels/dependent.py`` (MXU expanded-form tiles).
+* ``pallas``           — the Mosaic TPU tile-sweep kernels in
+                         ``kernels/sweep.py`` (MXU expanded-form tiles).
 * ``pallas-interpret`` — the same kernels under the Pallas interpreter, so CI
                          containers without a TPU exercise the kernel code
                          paths (slow; correctness only).
 
 Beyond the two static primitives (+ the triangular prefix variant), every
-backend carries the two *streaming* batched primitives used by
-``repro.stream``: ``range_count_delta`` (signed range count over an
-insert/evict delta batch — the sliding-window rho repair) and
-``denser_nn_update`` (Def. 2 re-queried for a row subset — the delta repair
-for points whose dependent may have changed).
+backend carries:
+
+* the **fused** ``rho_delta`` primitive — Def. 1 and Def. 2 answered by one
+  engine invocation instead of two back-to-back sweeps.  The jnp form shares
+  one jit (a count pass plus a lean min-only NN pass whose argmin is
+  recovered per winning tile); the pallas form is a genuinely single tile
+  sweep (count + unmasked kept-k accumulator, the denser-mask resolved in a
+  direct-diff epilogue, unresolved rows — the local-maxima tail — re-queried
+  with one small masked-NN pass).  ``fused_traceable`` marks backends whose
+  ``rho_delta`` is jit-safe end to end (the pallas epilogue's fallback is
+  host-orchestrated).
+* the **halo** primitives ``range_count_halo`` / ``denser_nn_halo`` — the
+  same two definitions restricted to per-row ragged [start, end) windows of
+  a halo-exchanged column table (the distributed optimized path).
+* the two *streaming* batched primitives used by ``repro.stream``:
+  ``range_count_delta`` (signed range count over an insert/evict delta batch
+  — the sliding-window rho repair) and ``denser_nn_update`` (Def. 2
+  re-queried for a row subset; the pallas backends fuse the row gather into
+  the kernel).
 
 ``get_backend(None)`` auto-detects: ``pallas`` on TPU, ``jnp`` elsewhere.
 Numerical contract: the pallas backends compute squared distances in the MXU
 expanded form |x|^2+|y|^2-2xy (then re-rank the top-k candidates direct-diff,
-see dependent._refine_topk_d2), so pairs within f32 rounding of a threshold
+see sweep.refine_topk_d2), so pairs within f32 rounding of a threshold
 can be classified differently from ``jnp``.  Equality tests draw data away
 from thresholds; production consumers treat the backends as interchangeable.
+The pallas backends additionally accept ``precision="bf16"`` on ``rho_delta``
+(bf16 inner product at twice the MXU rate, winners refined back to f32
+direct-diff); the jnp backend is the f32 reference and rejects it.
 """
 from __future__ import annotations
 
 from functools import partial
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
 from . import ops
 
 __all__ = ["KernelBackend", "available_backends", "default_backend_name",
-           "get_backend", "register_backend"]
+           "get_backend", "register_backend", "rho_delta_sequential"]
+
+
+def _default_jitter(n: int):
+    from repro.core.dpc_types import density_jitter  # lazy: avoids a cycle
+    return density_jitter(n)
+
+
+def _pow2_pad(m: int) -> int:
+    p = 1
+    while p < m:
+        p *= 2
+    return p
+
+
+def rho_delta_sequential(be: "KernelBackend", x, y, d_cut, *, jitter=None,
+                         y_sel_slots=None, block: int | None = None):
+    """The two-pass reference formulation of the fused primitive.
+
+    Def. 1 then Def. 2 as separate backend calls — the parity oracle the
+    fused ``rho_delta`` implementations are tested against, and the default
+    for backends that do not override it.  ``y_sel_slots`` (len(x) int,
+    y-row of query i) restricts the NN candidate set to the query rows
+    themselves mapped into y space (S-Approx representatives); ``None``
+    means y *is* the query set (identity correspondence).
+    """
+    rho = be.range_count(x, y, d_cut, block=block)
+    if jitter is None:
+        jitter = _default_jitter(x.shape[0])
+    rho_key = rho + jitter
+    if y_sel_slots is None:
+        assert x.shape[0] == y.shape[0], \
+            "identity rho_delta needs y rows == query rows"
+        col_key = rho_key
+    else:
+        col_key = jnp.full((y.shape[0],), -jnp.inf,
+                           jnp.float32).at[y_sel_slots].set(rho_key)
+    delta, parent = be.denser_nn(x, rho_key, y, col_key, block=block)
+    return rho, rho_key, delta, parent
 
 
 # --------------------------------------------------------------- interface
 class KernelBackend:
-    """The two DPC primitives (+ the triangular prefix variant of Def. 2).
+    """The DPC primitives (Def. 1 / Def. 2 + fused, halo and streaming forms).
 
     ``mxu_dense`` tells algorithm drivers this backend wants the dense tiled
     formulation (all-pairs MXU tiles) rather than the grid-stencil gathers;
     the stencil IS the jnp reference, so only the pallas backends set it.
+    ``fused_traceable`` marks a ``rho_delta`` that is safe to call inside
+    jit/vmap (no host-orchestrated fallback step).
     """
 
     name: str = "abstract"
     mxu_dense: bool = False
+    fused_traceable: bool = False
 
     def range_count(self, x, y, d_cut, *, block: int | None = None):
         """(n,) f32: |{j : ||x_i - y_j|| < d_cut}| per row of x (Def. 1)."""
@@ -66,6 +125,53 @@ class KernelBackend:
     def prefix_nn(self, pts_sorted_desc, *, block: int | None = None):
         """(delta, parent): NN among strict-prefix rows, input pre-sorted by
         descending density key — Def. 2 as a triangular sweep (Ex-DPC)."""
+        raise NotImplementedError
+
+    # ---- fused rho + delta (the unified-engine primitive) ----
+
+    def rho_delta(self, x, y, d_cut, *, jitter=None, y_sel_slots=None,
+                  block: int | None = None, precision: str | None = None,
+                  fallback_interest=None):
+        """Fused Def. 1 + Def. 2: per x-row range count over y AND the
+        nearest strictly-denser neighbor, one engine invocation.
+
+        Returns (rho, rho_key, delta, parent); rho_key = rho + jitter
+        (all-distinct comparison key), parent in y-row index space.
+        ``y_sel_slots``: see :func:`rho_delta_sequential`.  ``precision``:
+        pallas backends accept ``"bf16"`` for the tile inner product (winners
+        refined back to f32 direct-diff); default f32.
+
+        ``fallback_interest``: optional ``rho_key -> (nx,) bool`` callable
+        naming the rows whose Def.-2 answer the caller will actually consume
+        (e.g. Approx-DPC reads it only for the cell maxima).  Backends whose
+        fused path re-queries unresolved rows may restrict that pass to the
+        interest set — rows outside it can come back as (inf, -1) when the
+        kept-k did not resolve them.  Exact backends ignore it.
+        """
+        if precision not in (None, "f32"):
+            raise ValueError(f"{self.name} backend computes f32 only")
+        del fallback_interest  # every row exact: nothing to restrict
+        return rho_delta_sequential(self, x, y, d_cut, jitter=jitter,
+                                    y_sel_slots=y_sel_slots, block=block)
+
+    # ---- halo-window primitives (distributed optimized path) ----
+
+    def range_count_halo(self, x, window, starts, ends, d_cut, *,
+                         span_cap: int, block: int | None = None):
+        """Def. 1 restricted to per-row ragged [start, end) windows into a
+        halo-exchanged column table.  ``starts``/``ends``: (n, S)
+        window-local span bounds (empty or negative spans count nothing;
+        a row's spans must be pairwise disjoint, as the grid's candidate-cell
+        spans are); ``span_cap``: static max span length (gather-form
+        backends)."""
+        raise NotImplementedError
+
+    def denser_nn_halo(self, x, x_key, window, w_key, starts, ends, d_cut, *,
+                       span_cap: int, block: int | None = None):
+        """Def. 2 restricted to the row's halo spans AND to d_cut (stencil
+        semantics).  Returns (delta, parent_window_idx, found); rows with no
+        strictly-denser candidate within d_cut inside their spans report
+        found = False (the caller's global fallback handles them)."""
         raise NotImplementedError
 
     # ---- streaming (repro.stream) batched primitives ----
@@ -86,8 +192,9 @@ class KernelBackend:
         The streaming delta repair: only rows whose dependent point may have
         changed (cell maxima / dirty rows) are re-queried against the full
         window.  ``q_slots`` entries >= len(points) are padding and return
-        (inf, -1).  Rides each backend's denser-NN kernel; backends may
-        override with a fused gather kernel."""
+        (inf, -1).  Rides each backend's denser-NN kernel; the pallas
+        backends override with the fused-gather kernel (the gathered subset
+        never materialises)."""
         n = points.shape[0]
         slot_c = jnp.clip(q_slots, 0, n - 1)
         valid = q_slots < n
@@ -191,11 +298,151 @@ def _range_count_delta_jnp(x, batch, signs, d_cut, block: int = 512):
     return cnt
 
 
+@partial(jax.jit, static_argnames=("block",))
+def _rho_delta_jnp(x, y, jitter, d_cut, y_sel_slots=None, block: int = 512):
+    """Fused rho + delta, direct-difference, one jit.
+
+    Pass 1 is the blocked range count; pass 2 is a *lean* masked NN that
+    keeps only (min d2, winning column tile) per row — no per-tile argmin or
+    gathers on the hot loop; the argmin is recovered afterwards by
+    recomputing the single winning tile per row block (bit-identical floats,
+    so the recovered winner equals the sequential formulation's exactly).
+    """
+    n, d = x.shape
+    m = y.shape[0]
+    nbr, nbc = -(-n // block), -(-m // block)
+    xp = jnp.pad(x, ((0, nbr * block - n), (0, 0)), constant_values=jnp.inf)
+    yp = jnp.pad(y, ((0, nbc * block - m), (0, 0)), constant_values=jnp.inf)
+    d2cut = jnp.asarray(d_cut, jnp.float32) ** 2
+
+    # ---- pass 1: range count (Def. 1) ----
+    def row_count(i0):
+        rows = jax.lax.dynamic_slice_in_dim(xp, i0, block, 0)
+
+        def col(j, acc):
+            cols = jax.lax.dynamic_slice_in_dim(yp, j * block, block, 0)
+            d2 = jnp.sum((rows[:, None, :] - cols[None, :, :]) ** 2, -1)
+            return acc + jnp.sum(d2 < d2cut, axis=1).astype(jnp.int32)
+
+        return jax.lax.fori_loop(0, nbc, col, jnp.zeros((block,), jnp.int32))
+
+    cnt = jax.lax.map(row_count, jnp.arange(nbr) * block).reshape(-1)[:n]
+    rho = cnt.astype(jnp.float32)
+    rho_key = rho + jitter
+    if y_sel_slots is None:
+        col_key = rho_key
+    else:
+        col_key = jnp.full((m,), -jnp.inf,
+                           jnp.float32).at[y_sel_slots].set(rho_key)
+    rkp = jnp.pad(rho_key, (0, nbr * block - n), constant_values=jnp.inf)
+    ckp = jnp.pad(col_key, (0, nbc * block - m), constant_values=-jnp.inf)
+
+    # ---- pass 2 + epilogue: lean masked NN (Def. 2) ----
+    def row_nn(i0):
+        rows = jax.lax.dynamic_slice_in_dim(xp, i0, block, 0)
+        rrk = jax.lax.dynamic_slice_in_dim(rkp, i0, block, 0)
+
+        def col(j, carry):
+            best, jwin = carry
+            cols = jax.lax.dynamic_slice_in_dim(yp, j * block, block, 0)
+            crk = jax.lax.dynamic_slice_in_dim(ckp, j * block, block, 0)
+            d2 = jnp.sum((rows[:, None, :] - cols[None, :, :]) ** 2, -1)
+            cand = jnp.min(jnp.where(crk[None, :] > rrk[:, None], d2,
+                                     jnp.inf), axis=1)
+            better = cand < best
+            return (jnp.where(better, cand, best), jnp.where(better, j, jwin))
+
+        best, jwin = jax.lax.fori_loop(
+            0, nbc, col, (jnp.full((block,), jnp.inf),
+                          jnp.zeros((block,), jnp.int32)))
+        # recover the argmin inside each row's winning tile (same float ops
+        # on the same operands -> bitwise-equal d2 -> the sequential winner)
+        cidx = jwin[:, None] * block + jnp.arange(block)[None, :]
+        cols = yp[cidx]                              # (block, block, d)
+        crk = ckp[cidx]
+        d2r = jnp.sum((rows[:, None, :] - cols) ** 2, -1)
+        d2m = jnp.where(crk > rrk[:, None], d2r, jnp.inf)
+        jloc = jnp.argmin(d2m, axis=1)
+        parent = jnp.where(jnp.isfinite(best),
+                           cidx[jnp.arange(block), jloc], -1)
+        return jnp.sqrt(best), parent
+
+    delta, parent = jax.lax.map(row_nn, jnp.arange(nbr) * block)
+    return (rho, rho_key, delta.reshape(-1)[:n],
+            parent.reshape(-1)[:n].astype(jnp.int32))
+
+
+@partial(jax.jit, static_argnames=("span_w", "block"))
+def _range_count_halo_jnp(x, window, starts, ends, d_cut, span_w: int,
+                          block: int = 256):
+    """Gather-form halo range count: per-row candidate spans into a window."""
+    W = window.shape[0]
+    m, d = x.shape
+    nb = -(-m // block)
+    mp = nb * block
+    xp = jnp.pad(x, ((0, mp - m), (0, 0)), constant_values=jnp.inf)
+    st_p = jnp.pad(starts, ((0, mp - m), (0, 0)), constant_values=0)
+    en_p = jnp.pad(ends, ((0, mp - m), (0, 0)), constant_values=0)
+    d2cut = jnp.asarray(d_cut, jnp.float32) ** 2
+
+    def chunk(i0):
+        rows = jax.lax.dynamic_slice_in_dim(xp, i0, block, 0)
+        st = jax.lax.dynamic_slice_in_dim(st_p, i0, block, 0)
+        en = jax.lax.dynamic_slice_in_dim(en_p, i0, block, 0)
+        idx = st[..., None] + jnp.arange(span_w, dtype=st.dtype)
+        valid = (idx < en[..., None]) & (idx >= 0)
+        cand = window[jnp.clip(idx, 0, W - 1)]
+        d2 = jnp.sum((rows[:, None, None, :] - cand) ** 2, axis=-1)
+        return jnp.sum((d2 < d2cut) & valid, axis=(1, 2))
+
+    cnt = jax.lax.map(chunk, jnp.arange(nb) * block).reshape(-1)[:m]
+    return cnt.astype(jnp.float32)
+
+
+@partial(jax.jit, static_argnames=("span_w", "block"))
+def _denser_nn_halo_jnp(x, x_key, window, w_key, starts, ends, d_cut,
+                        span_w: int, block: int = 256):
+    """Gather-form halo strictly-denser NN within d_cut (window-local
+    parents; found = a qualifying candidate exists inside the spans)."""
+    W = window.shape[0]
+    m, d = x.shape
+    nb = -(-m // block)
+    mp = nb * block
+    xp = jnp.pad(x, ((0, mp - m), (0, 0)), constant_values=jnp.inf)
+    rk_p = jnp.pad(x_key, (0, mp - m), constant_values=jnp.inf)
+    st_p = jnp.pad(starts, ((0, mp - m), (0, 0)), constant_values=0)
+    en_p = jnp.pad(ends, ((0, mp - m), (0, 0)), constant_values=0)
+    d2cut = jnp.asarray(d_cut, jnp.float32) ** 2
+
+    def chunk(i0):
+        rows = jax.lax.dynamic_slice_in_dim(xp, i0, block, 0)
+        rk = jax.lax.dynamic_slice_in_dim(rk_p, i0, block, 0)
+        st = jax.lax.dynamic_slice_in_dim(st_p, i0, block, 0)
+        en = jax.lax.dynamic_slice_in_dim(en_p, i0, block, 0)
+        idx = st[..., None] + jnp.arange(span_w, dtype=st.dtype)
+        valid = (idx < en[..., None]) & (idx >= 0)
+        idx_c = jnp.clip(idx, 0, W - 1)
+        cand = window[idx_c]
+        cand_rk = w_key[idx_c]
+        d2 = jnp.sum((rows[:, None, None, :] - cand) ** 2, axis=-1)
+        mask = valid & (cand_rk > rk[:, None, None]) & (d2 < d2cut)
+        d2m = jnp.where(mask, d2, jnp.inf).reshape(block, -1)
+        j = jnp.argmin(d2m, axis=1)
+        best = d2m[jnp.arange(block), j]
+        pidx = idx_c.reshape(block, -1)[jnp.arange(block), j].astype(jnp.int32)
+        ok = jnp.isfinite(best)
+        return (jnp.sqrt(best), jnp.where(ok, pidx, -1).astype(jnp.int32), ok)
+
+    dd, pp, ff = jax.lax.map(chunk, jnp.arange(nb) * block)
+    return (dd.reshape(-1)[:m], pp.reshape(-1)[:m], ff.reshape(-1)[:m])
+
+
 class JnpBackend(KernelBackend):
     """Reference backend: the direct-difference math of the Scan oracle."""
 
     name = "jnp"
     mxu_dense = False
+    fused_traceable = True
 
     def range_count(self, x, y, d_cut, *, block=None):
         return _range_count_jnp(x, y, d_cut, block=block or 512)
@@ -215,8 +462,54 @@ class JnpBackend(KernelBackend):
         return _denser_nn_jnp(pts_sorted_desc, key, pts_sorted_desc, key,
                               block=block or 512)
 
+    def rho_delta(self, x, y, d_cut, *, jitter=None, y_sel_slots=None,
+                  block=None, precision=None, fallback_interest=None):
+        if precision not in (None, "f32"):
+            raise ValueError("the jnp backend is the f32 direct-difference "
+                             "reference; use a pallas backend for bf16")
+        del fallback_interest  # the lean pass answers every row exactly
+        if jitter is None:
+            jitter = _default_jitter(x.shape[0])
+        return _rho_delta_jnp(x, y, jitter, d_cut, y_sel_slots,
+                              block=block or 512)
+
+    def range_count_halo(self, x, window, starts, ends, d_cut, *,
+                         span_cap, block=None):
+        return _range_count_halo_jnp(x, window, starts, ends, d_cut,
+                                     span_cap, block=block or 256)
+
+    def denser_nn_halo(self, x, x_key, window, w_key, starts, ends, d_cut, *,
+                       span_cap, block=None):
+        return _denser_nn_halo_jnp(x, x_key, window, w_key, starts, ends,
+                                   d_cut, span_cap, block=block or 256)
+
 
 # --------------------------------------------------------------- pallas
+@jax.jit
+def _fused_resolve(x, y, rho_key, col_key, topv, topi):
+    """Direct-diff refine + denser-mask resolution of the kept-k candidates.
+
+    Re-evaluates every kept candidate in direct-difference f32 (extending the
+    refine_topk_d2 contract to the fused path: both the winner and its value
+    are direct-diff exact whenever the true denser-NN sits within the kept
+    k), then picks the nearest strictly-denser one — lexicographic
+    (d2, y-index), matching the sequential sweep's tie-break.  Rows with no
+    denser kept candidate report resolved = False.
+    """
+    n, k = topi.shape
+    ti = jnp.maximum(topi, 0)
+    y_sel = y[ti]                                      # (n, k, d)
+    d2d = jnp.sum((x[:, None, :] - y_sel) ** 2, -1)
+    ok = (topi >= 0) & (col_key[ti] > rho_key[:, None])
+    cand = jnp.where(ok, d2d, jnp.inf)
+    best = jnp.min(cand, axis=1)
+    tied = jnp.where(cand == best[:, None], topi, jnp.iinfo(jnp.int32).max)
+    parent = jnp.min(tied, axis=1)
+    resolved = jnp.isfinite(best)
+    parent = jnp.where(resolved, parent, -1).astype(jnp.int32)
+    return jnp.sqrt(best), parent, resolved
+
+
 class PallasBackend(KernelBackend):
     """MXU tiled kernels; ``interpret=True`` is the CPU-CI variant."""
 
@@ -244,6 +537,79 @@ class PallasBackend(KernelBackend):
     def prefix_nn(self, pts_sorted_desc, *, block=None):
         return ops.dependent_prefix(pts_sorted_desc, block=block or 256,
                                     interpret=self.interpret)
+
+    def rho_delta(self, x, y, d_cut, *, jitter=None, y_sel_slots=None,
+                  block=None, precision=None, fallback_interest=None):
+        """One tile sweep (count + unmasked kept-k), direct-diff epilogue,
+        then one small masked-NN pass for the unresolved tail.
+
+        The kept-k resolution is exact: if any kept candidate is strictly
+        denser, every candidate nearer than it would also have been kept, so
+        the nearest denser kept candidate IS the dependent point.  Rows
+        whose k nearest neighbors are all less dense (the local-maxima /
+        jitter-tail fraction) fall through to the fallback —
+        ``fallback_interest`` restricts that pass to the rows the caller
+        will read (Approx-DPC: the |G| << n cell maxima).  The fallback is
+        host-orchestrated, so this path is not jit-safe (fused_traceable is
+        False); jitted consumers use the two-pass formulation instead.
+        """
+        if precision is None:
+            precision = "f32"
+        if jitter is None:
+            jitter = _default_jitter(x.shape[0])
+        nn_sel = None
+        if y_sel_slots is not None:
+            nn_sel = jnp.zeros((y.shape[0],),
+                               jnp.float32).at[y_sel_slots].set(1.0)
+        cnt, topv, topi = ops.fused_sweep(x, y, d_cut, nn_sel=nn_sel,
+                                          precision=precision,
+                                          block_n=block or
+                                          ops.DENSITY_BLOCK_N,
+                                          interpret=self.interpret)
+        rho = cnt
+        rho_key = rho + jitter
+        if y_sel_slots is None:
+            col_key = rho_key
+        else:
+            col_key = jnp.full((y.shape[0],), -jnp.inf,
+                               jnp.float32).at[y_sel_slots].set(rho_key)
+        delta, parent, resolved = _fused_resolve(
+            jnp.asarray(x, jnp.float32), jnp.asarray(y, jnp.float32),
+            rho_key, col_key, topv, topi)
+        unres_mask = ~np.asarray(resolved)
+        if fallback_interest is not None:
+            unres_mask &= np.asarray(fallback_interest(rho_key), bool)
+        unresolved = np.nonzero(unres_mask)[0]
+        if unresolved.size:
+            cap = _pow2_pad(unresolved.size)
+            rows = np.pad(unresolved, (0, cap - unresolved.size))
+            fd, fp = self.denser_nn(jnp.asarray(x)[rows], rho_key[rows],
+                                    y, col_key, block=block)
+            dd = np.asarray(delta).copy()
+            pp = np.asarray(parent).copy()
+            dd[unresolved] = np.asarray(fd)[: unresolved.size]
+            pp[unresolved] = np.asarray(fp)[: unresolved.size]
+            delta, parent = jnp.asarray(dd), jnp.asarray(pp)
+        return rho, rho_key, delta, parent
+
+    def range_count_halo(self, x, window, starts, ends, d_cut, *,
+                         span_cap, block=None):
+        del span_cap  # dense span-masked tiles: no gather width needed
+        return ops.halo_density(x, window, starts, ends, d_cut,
+                                block_n=block or ops.DENSITY_BLOCK_N,
+                                interpret=self.interpret)
+
+    def denser_nn_halo(self, x, x_key, window, w_key, starts, ends, d_cut, *,
+                       span_cap, block=None):
+        del span_cap
+        return ops.halo_dependent(x, x_key, window, w_key, starts, ends,
+                                  d_cut, block_n=min(block or 128, 1024),
+                                  interpret=self.interpret)
+
+    def denser_nn_update(self, points, rho_key, q_slots, *, block=None):
+        return ops.dependent_masked_gather(points, rho_key, q_slots,
+                                           block_n=min(block or 128, 1024),
+                                           interpret=self.interpret)
 
 
 # --------------------------------------------------------------- registry

@@ -1,10 +1,11 @@
-"""Pallas TPU kernel: blocked pairwise range count (local density, Def. 1).
+"""Range-count kernels (local density, Def. 1) — tile-sweep instantiations.
 
-The compute hot spot of DPC's rho phase.  Tiles the (n x m) pairwise-distance
-problem into (BLOCK_N x BLOCK_M) VMEM tiles; the squared distance uses the
-expanded form |x|^2 + |y|^2 - 2 x.y so the inner product feeds the MXU
-(a (BLOCK_N, d) @ (d, BLOCK_M) matmul per tile).  Counts accumulate in the
-output ref across the column grid dimension.
+The compute hot spot of DPC's rho phase: an (n x m) pairwise-distance problem
+tiled into (BLOCK_N x BLOCK_M) VMEM blocks, squared distances in the MXU
+expanded form, counts accumulated across the column grid dimension.  Since
+the unified engine landed, this module is the *instantiation* of
+``kernels.sweep`` for the two count-only primitives; the kernel body itself
+lives in ``sweep.tile_sweep`` (one ``SweepSpec`` per primitive).
 
 The threshold d_cut^2 rides in SMEM as a runtime scalar (not baked into the
 kernel), so jit-traced callers — DPC-KV estimates d_cut per head *inside*
@@ -17,125 +18,62 @@ slice off; padded *columns* are never counted.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-PAD_COORD = 1e9  # >> any data domain; 3*PAD^2 ~ 3e18 << f32 max
-
-DEFAULT_BLOCK_N = 256
-DEFAULT_BLOCK_M = 512
+from .sweep import (DEFAULT_BLOCK_M, DEFAULT_BLOCK_N, PAD_COORD,  # noqa: F401
+                    SweepSpec, tile_sweep)
 
 
-def _density_kernel(d2_ref, x_ref, y_ref, o_ref):
-    j = pl.program_id(1)
-    d2cut = d2_ref[0]                                # SMEM scalar
-    x = x_ref[...]                                   # (bn, d)
-    y = y_ref[...]                                   # (bm, d)
-    x2 = jnp.sum(x * x, axis=-1, keepdims=True)      # (bn, 1)
-    y2 = jnp.sum(y * y, axis=-1, keepdims=True).T    # (1, bm)
-    xy = jax.lax.dot_general(x, y, (((1,), (1,)), ((), ())),
-                             preferred_element_type=jnp.float32)
-    d2 = x2 + y2 - 2.0 * xy
-    cnt = jnp.sum(d2 < d2cut, axis=1).astype(jnp.int32)
-
-    @pl.when(j == 0)
-    def _init():
-        o_ref[...] = cnt
-
-    @pl.when(j != 0)
-    def _acc():
-        o_ref[...] += cnt
-
-
-@functools.partial(jax.jit,
-                   static_argnames=("block_n", "block_m", "interpret"))
 def range_count(x: jnp.ndarray, y: jnp.ndarray, d_cut,
                 block_n: int = DEFAULT_BLOCK_N, block_m: int = DEFAULT_BLOCK_M,
-                interpret: bool = False) -> jnp.ndarray:
+                interpret: bool = False,
+                precision: str = "f32") -> jnp.ndarray:
     """For each row of x (n, d): |{j : ||x_i - y_j|| < d_cut}| over y (m, d).
 
     x and y must already be padded to multiples of block_n/block_m with
     PAD_COORD rows (ops.pad_points does this).  ``d_cut`` may be a python
     float or a traced f32 scalar.
     """
-    n, d = x.shape
-    m, _ = y.shape
-    assert n % block_n == 0 and m % block_m == 0
-    grid = (n // block_n, m // block_m)
-    d2cut = (jnp.asarray(d_cut, jnp.float32) ** 2).reshape((1,))
-    return pl.pallas_call(
-        _density_kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1,), lambda i, j: (0,), memory_space=pltpu.SMEM),
-            pl.BlockSpec((block_n, d), lambda i, j: (i, 0)),
-            pl.BlockSpec((block_m, d), lambda i, j: (j, 0)),
-        ],
-        out_specs=pl.BlockSpec((block_n,), lambda i, j: (i,)),
-        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
-        interpret=interpret,
-    )(d2cut, x, y)
+    spec = SweepSpec(block_n=block_n, block_m=block_m, count=True,
+                     precision=precision)
+    (cnt,) = tile_sweep(spec, x, y, d_cut, interpret=interpret)
+    return cnt
 
 
-def _signed_density_kernel(d2_ref, x_ref, y_ref, s_ref, o_ref):
-    """Signed range count: one tile sweep accumulates sum_j s_j * [d2 < d2cut].
+def range_count_signed(x: jnp.ndarray, y: jnp.ndarray, signs: jnp.ndarray,
+                       d_cut, block_n: int = DEFAULT_BLOCK_N,
+                       block_m: int = DEFAULT_BLOCK_M,
+                       interpret: bool = False,
+                       precision: str = "f32") -> jnp.ndarray:
+    """For each row of x: sum_j signs[j] * [||x_i - y_j|| < d_cut], f32.
 
     The streaming rho-repair kernel — every surviving point's density changes
     by +1 per inserted / -1 per evicted neighbor, so one fused pass over the
     (insert + evict) delta batch with a per-column sign replaces two
-    range-count sweeps.
+    range-count sweeps.  Same padding contract as ``range_count``; padded y
+    rows must carry sign 0 (and PAD_COORD keeps them outside any d_cut).
     """
-    j = pl.program_id(1)
-    d2cut = d2_ref[0]                                # SMEM scalar
-    x = x_ref[...]                                   # (bn, d)
-    y = y_ref[...]                                   # (bm, d)
-    s = s_ref[...]                                   # (bm,) f32 in {-1, 0, +1}
-    x2 = jnp.sum(x * x, axis=-1, keepdims=True)
-    y2 = jnp.sum(y * y, axis=-1, keepdims=True).T
-    xy = jax.lax.dot_general(x, y, (((1,), (1,)), ((), ())),
-                             preferred_element_type=jnp.float32)
-    d2 = x2 + y2 - 2.0 * xy
-    cnt = jnp.sum(jnp.where(d2 < d2cut, s[None, :], 0.0), axis=1)
-
-    @pl.when(j == 0)
-    def _init():
-        o_ref[...] = cnt
-
-    @pl.when(j != 0)
-    def _acc():
-        o_ref[...] += cnt
+    spec = SweepSpec(block_n=block_n, block_m=block_m, count=True,
+                     signed=True, precision=precision)
+    (cnt,) = tile_sweep(spec, x, y, d_cut, signs=signs, interpret=interpret)
+    return cnt
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("block_n", "block_m", "interpret"))
-def range_count_signed(x: jnp.ndarray, y: jnp.ndarray, signs: jnp.ndarray,
-                       d_cut, block_n: int = DEFAULT_BLOCK_N,
-                       block_m: int = DEFAULT_BLOCK_M,
-                       interpret: bool = False) -> jnp.ndarray:
-    """For each row of x: sum_j signs[j] * [||x_i - y_j|| < d_cut], f32.
+def range_count_halo(x: jnp.ndarray, window: jnp.ndarray,
+                     starts: jnp.ndarray, ends: jnp.ndarray, d_cut,
+                     block_n: int = DEFAULT_BLOCK_N,
+                     block_m: int = DEFAULT_BLOCK_M,
+                     interpret: bool = False,
+                     precision: str = "f32") -> jnp.ndarray:
+    """Range count against per-row ragged [start, end) windows (halo tiles).
 
-    Same padding contract as ``range_count``; padded y rows must carry
-    sign 0 (and PAD_COORD coordinates keep them outside any d_cut anyway).
+    The distributed halo layout: each x-row counts only the window columns
+    inside its candidate spans (``starts``/``ends``: (n, S) window-local
+    bounds; empty or negative spans contribute nothing).  Same padding
+    contract; padded x rows must carry empty spans.
     """
-    n, d = x.shape
-    m, _ = y.shape
-    assert n % block_n == 0 and m % block_m == 0
-    grid = (n // block_n, m // block_m)
-    d2cut = (jnp.asarray(d_cut, jnp.float32) ** 2).reshape((1,))
-    return pl.pallas_call(
-        _signed_density_kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1,), lambda i, j: (0,), memory_space=pltpu.SMEM),
-            pl.BlockSpec((block_n, d), lambda i, j: (i, 0)),
-            pl.BlockSpec((block_m, d), lambda i, j: (j, 0)),
-            pl.BlockSpec((block_m,), lambda i, j: (j,)),
-        ],
-        out_specs=pl.BlockSpec((block_n,), lambda i, j: (i,)),
-        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
-        interpret=interpret,
-    )(d2cut, x, y, signs.astype(jnp.float32))
+    spec = SweepSpec(block_n=block_n, block_m=block_m, count=True, span=True,
+                     span_s=starts.shape[1], precision=precision)
+    (cnt,) = tile_sweep(spec, x, window, d_cut, starts=starts, ends=ends,
+                        interpret=interpret)
+    return cnt

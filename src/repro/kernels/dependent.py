@@ -1,176 +1,71 @@
-"""Pallas TPU kernel: triangular prefix nearest-neighbor (dependent points).
+"""Dependent-point (Def. 2) kernels — tile-sweep instantiations.
 
 Ex-DPC's delta phase: with points sorted by *descending* density key, the
 dependent point of row i is its nearest neighbor among rows j < i.  The
 paper's incrementally-rebuilt kd-tree (provably sequential) becomes a static
-lower-triangular tile sweep: tile (i, j) is computed only when j <= i, giving
-the 2x triangular saving; within the diagonal tile an iota mask enforces the
-strict prefix.  Running (min, argmin) accumulate in the output refs across
-the column grid dimension.
+lower-triangular tile sweep (``prefix_min_dist``); ``masked_min_dist`` is the
+rectangular strictly-denser variant (global fallback, S-Approx phase 2); and
+``masked_min_dist_halo`` is the same NN restricted to per-row ragged halo
+windows (the distributed optimized path).  All three are instantiations of
+``kernels.sweep`` — one ``SweepSpec`` each over the shared engine.
 
-Also provides ``masked_min_dist``: NN among rows with strictly greater key —
-the global fallback used for stencil-unresolved points and the S-Approx
-phase-2 representative search.
-
-Both kernels compute tile distances in the MXU expanded form and re-rank the
-top-k candidates per row in direct-difference form (``_refine_topk_d2``), so
-near-tie argmins survive ill-conditioned data (NN distances << domain scale)
-and the consumed delta value is direct-diff exact.
+Every variant computes tile distances in the MXU expanded form and re-ranks
+the top-k candidates per row in direct-difference form
+(``sweep.refine_topk_d2``), so near-tie argmins survive ill-conditioned data
+(NN distances << domain scale) and the consumed delta value is direct-diff
+exact.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
+
+from .sweep import (REFINE_TOPK, SweepSpec, tile_sweep,  # noqa: F401
+                    refine_topk_d2 as _refine_topk_d2)
 
 DEFAULT_BLOCK = 256
 
-# How many expanded-form candidates are re-ranked in direct-difference form
-# per row tile.  1 restores the historical refine-the-winner-only behavior
-# (value exact, winner potentially flipped by expanded-form rounding).
-REFINE_TOPK = 4
 
-
-def _mxu_d2(x, y):
-    x2 = jnp.sum(x * x, axis=-1, keepdims=True)
-    y2 = jnp.sum(y * y, axis=-1, keepdims=True).T
-    xy = jax.lax.dot_general(x, y, (((1,), (1,)), ((), ())),
-                             preferred_element_type=jnp.float32)
-    return x2 + y2 - 2.0 * xy
-
-
-def _refine_topk_d2(x, y, d2, k: int):
-    """Re-rank the k smallest expanded-form candidates in direct-diff form.
-
-    The expanded form has absolute error ~eps*(|x|^2+|y|^2) — a large
-    *relative* error for small distances, big enough to flip near-tie argmins
-    when NN distances are far below the domain scale.  k rounds of extract-
-    argmin / re-evaluate-direct-diff (one-hot matmul: MXU-friendly, no
-    gather) / retire make both the winner *and* its value direct-diff exact
-    whenever the true NN sits within the top-k expanded candidates.
-
-    Masked candidates carry d2 = inf and stay inert.  Returns
-    (best_d2_direct, local_argmin); (inf, -1) where no finite candidate.
-    """
-    bn, bm = d2.shape
-    cols = jax.lax.broadcasted_iota(jnp.int32, (bn, bm), 1)
-    best = jnp.full((bn,), jnp.inf, jnp.float32)
-    arg = jnp.full((bn,), -1, jnp.int32)
-    work = d2
-    for _ in range(max(k, 1)):
-        loc = jnp.argmin(work, axis=1).astype(jnp.int32)
-        cand = jnp.min(work, axis=1)
-        onehot = (loc[:, None] == cols).astype(jnp.float32)
-        y_sel = jax.lax.dot_general(onehot, y, (((1,), (0,)), ((), ())),
-                                    preferred_element_type=jnp.float32)
-        d2d = jnp.sum((x - y_sel) ** 2, axis=-1)
-        d2d = jnp.where(jnp.isfinite(cand), d2d, jnp.inf)     # keep masked inert
-        better = d2d < best
-        best = jnp.where(better, d2d, best)
-        arg = jnp.where(better, loc, arg)
-        work = jnp.where(cols == loc[:, None], jnp.inf, work)  # retire winner
-    return best, arg
-
-
-def _prefix_kernel(x_ref, y_ref, best_ref, arg_ref, *, block: int,
-                   refine_k: int):
-    i = pl.program_id(0)
-    j = pl.program_id(1)
-
-    @pl.when(j == 0)
-    def _init():
-        best_ref[...] = jnp.full((block,), jnp.inf, jnp.float32)
-        arg_ref[...] = jnp.full((block,), -1, jnp.int32)
-
-    @pl.when(j <= i)  # triangular: upper tiles never touch the MXU
-    def _compute():
-        d2 = _mxu_d2(x_ref[...], y_ref[...])                  # (block, block)
-        row = i * block + jax.lax.broadcasted_iota(jnp.int32, (block, block), 0)
-        col = j * block + jax.lax.broadcasted_iota(jnp.int32, (block, block), 1)
-        d2 = jnp.where(col < row, d2, jnp.inf)                # strict prefix
-        cand, loc = _refine_topk_d2(x_ref[...], y_ref[...], d2, refine_k)
-        better = cand < best_ref[...]
-        best_ref[...] = jnp.where(better, cand, best_ref[...])
-        arg_ref[...] = jnp.where(better, j * block + loc, arg_ref[...])
-
-
-@functools.partial(jax.jit, static_argnames=("block", "interpret", "refine_k"))
 def prefix_min_dist(pts: jnp.ndarray, block: int = DEFAULT_BLOCK,
-                    interpret: bool = False, refine_k: int = REFINE_TOPK):
+                    interpret: bool = False, refine_k: int = REFINE_TOPK,
+                    precision: str = "f32"):
     """min_{j<i} ||p_i - p_j|| and argmin, rows sorted by descending key.
 
     pts must be padded to a multiple of block with PAD_COORD rows.
     Returns (delta (n,), parent (n,) int32, -1 where no prefix).
     """
-    n, d = pts.shape
-    assert n % block == 0
-    nb = n // block
-    best, arg = pl.pallas_call(
-        functools.partial(_prefix_kernel, block=block, refine_k=refine_k),
-        grid=(nb, nb),
-        in_specs=[
-            pl.BlockSpec((block, d), lambda i, j: (i, 0)),
-            pl.BlockSpec((block, d), lambda i, j: (j, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((block,), lambda i, j: (i,)),
-            pl.BlockSpec((block,), lambda i, j: (i,)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((n,), jnp.float32),
-            jax.ShapeDtypeStruct((n,), jnp.int32),
-        ],
-        interpret=interpret,
-    )(pts, pts)
+    spec = SweepSpec(block_n=block, block_m=block, nn="best1", prefix=True,
+                     refine_k=refine_k, precision=precision)
+    best, arg = tile_sweep(spec, pts, pts, interpret=interpret)
     return jnp.sqrt(best), arg
 
 
-def _masked_kernel(x_ref, xk_ref, y_ref, yk_ref, best_ref, arg_ref, *,
-                   block_m: int, refine_k: int):
-    j = pl.program_id(1)
-
-    @pl.when(j == 0)
-    def _init():
-        best_ref[...] = jnp.full_like(best_ref[...], jnp.inf)
-        arg_ref[...] = jnp.full_like(arg_ref[...], -1)
-
-    d2 = _mxu_d2(x_ref[...], y_ref[...])
-    d2 = jnp.where(yk_ref[...][None, :] > xk_ref[...][:, None], d2, jnp.inf)
-    cand, loc = _refine_topk_d2(x_ref[...], y_ref[...], d2, refine_k)
-    better = cand < best_ref[...]
-    best_ref[...] = jnp.where(better, cand, best_ref[...])
-    arg_ref[...] = jnp.where(better, j * block_m + loc, arg_ref[...])
-
-
-@functools.partial(jax.jit,
-                   static_argnames=("block_n", "block_m", "interpret",
-                                    "refine_k"))
 def masked_min_dist(x, x_key, y, y_key, block_n: int = 128,
                     block_m: int = DEFAULT_BLOCK, interpret: bool = False,
-                    refine_k: int = REFINE_TOPK):
+                    refine_k: int = REFINE_TOPK, precision: str = "f32"):
     """NN among y-rows with y_key > x_key, per x-row (global fallback)."""
-    n, d = x.shape
-    m, _ = y.shape
-    assert n % block_n == 0 and m % block_m == 0
-    best, arg = pl.pallas_call(
-        functools.partial(_masked_kernel, block_m=block_m, refine_k=refine_k),
-        grid=(n // block_n, m // block_m),
-        in_specs=[
-            pl.BlockSpec((block_n, d), lambda i, j: (i, 0)),
-            pl.BlockSpec((block_n,), lambda i, j: (i,)),
-            pl.BlockSpec((block_m, d), lambda i, j: (j, 0)),
-            pl.BlockSpec((block_m,), lambda i, j: (j,)),
-        ],
-        out_specs=[
-            pl.BlockSpec((block_n,), lambda i, j: (i,)),
-            pl.BlockSpec((block_n,), lambda i, j: (i,)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((n,), jnp.float32),
-            jax.ShapeDtypeStruct((n,), jnp.int32),
-        ],
-        interpret=interpret,
-    )(x, x_key, y, y_key)
+    spec = SweepSpec(block_n=block_n, block_m=block_m, nn="best1", key=True,
+                     refine_k=refine_k, precision=precision)
+    best, arg = tile_sweep(spec, x, y, x_key=x_key, y_key=y_key,
+                           interpret=interpret)
+    return jnp.sqrt(best), arg
+
+
+def masked_min_dist_halo(x, x_key, window, w_key, starts, ends, d_cut,
+                         block_n: int = 128, block_m: int = DEFAULT_BLOCK,
+                         interpret: bool = False,
+                         refine_k: int = REFINE_TOPK,
+                         precision: str = "f32"):
+    """Strictly-denser NN within d_cut over per-row ragged halo windows.
+
+    The distributed delta phase: candidates are the window columns inside the
+    row's [start, end) spans that are strictly denser AND within d_cut
+    (stencil semantics — beyond-d_cut rows fall to the global fallback).
+    Returns (delta, parent_window_idx); parent -1 / delta inf when no
+    candidate qualifies.
+    """
+    spec = SweepSpec(block_n=block_n, block_m=block_m, nn="best1", key=True,
+                     span=True, span_s=starts.shape[1], nn_dcut=True,
+                     refine_k=refine_k, precision=precision)
+    best, arg = tile_sweep(spec, x, window, d_cut, x_key=x_key, y_key=w_key,
+                           starts=starts, ends=ends, interpret=interpret)
     return jnp.sqrt(best), arg

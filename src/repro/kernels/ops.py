@@ -1,4 +1,4 @@
-"""jit'd public wrappers around the Pallas kernels.
+"""jit'd public wrappers around the Pallas tile-sweep kernels.
 
 On CPU (this container) the kernels execute in interpret mode for
 correctness; on TPU they compile to Mosaic.  ``pad_points`` implements the
@@ -10,8 +10,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .density import PAD_COORD, range_count, range_count_signed
-from .dependent import masked_min_dist, prefix_min_dist
+from .density import (PAD_COORD, range_count, range_count_halo,
+                      range_count_signed)
+from .dependent import masked_min_dist, masked_min_dist_halo, prefix_min_dist
+from .sweep import FUSED_TOPK, SweepSpec, gather_nn, tile_sweep
 
 
 def _on_cpu() -> bool:
@@ -101,3 +103,99 @@ def dependent_masked(x, x_key, y, y_key, *, block_n: int = 128,
     delta, parent = masked_min_dist(xp, xk, yp, yk, block_n=block_n,
                                     block_m=block_m, interpret=interpret)
     return delta[:n], parent[:n]
+
+
+# ------------------------------------------------------ fused rho + delta
+def fused_sweep(x, y, d_cut, *, nn_sel=None, k: int = FUSED_TOPK,
+                block_n: int = DENSITY_BLOCK_N, block_m: int = DENSITY_BLOCK_M,
+                precision: str = "f32", interpret: bool | None = None):
+    """One tile sweep: per x-row range count over y AND the k nearest
+    candidates (expanded-form d2 + global index, unmasked by density — the
+    denser-mask resolves in the caller's epilogue once the counts are
+    complete).  ``nn_sel`` (len(y) bool/int) optionally gates which columns
+    may enter the kept-k (S-Approx representatives); the count ignores it.
+
+    Returns (count (n,) f32, topv (n, k) f32 expanded d2, topi (n, k) int32
+    y-row index, -1 when fewer than k candidates).
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    n = x.shape[0]
+    xp = pad_points(x.astype(jnp.float32), block_n)
+    yp = pad_points(y.astype(jnp.float32), block_m)
+    sel = None
+    if nn_sel is not None:
+        sel = pad_vec(nn_sel.astype(jnp.float32), block_m, 0.0)
+    spec = SweepSpec(block_n=block_n, block_m=block_m, count=True, nn="topk",
+                     nn_sel=sel is not None, k=k, precision=precision)
+    cnt, topv, topi = tile_sweep(spec, xp, yp, d_cut, nn_sel=sel,
+                                 interpret=interpret)
+    return cnt[:n].astype(jnp.float32), topv[:n], topi[:n]
+
+
+# --------------------------------------------------------- halo windows
+def halo_density(x, window, starts, ends, d_cut, *,
+                 block_n: int = DENSITY_BLOCK_N,
+                 block_m: int = DENSITY_BLOCK_M,
+                 interpret: bool | None = None):
+    """Kernel-backed halo range count: per x-row count of window columns
+    inside the row's [start, end) spans and within d_cut."""
+    if interpret is None:
+        interpret = _on_cpu()
+    n = x.shape[0]
+    xp = pad_points(x.astype(jnp.float32), block_n)
+    wp = pad_points(window.astype(jnp.float32), block_m)
+    st = _pad_spans(starts, block_n)
+    en = _pad_spans(ends, block_n)
+    cnt = range_count_halo(xp, wp, st, en, d_cut, block_n=block_n,
+                           block_m=block_m, interpret=interpret)
+    return cnt[:n].astype(jnp.float32)
+
+
+def halo_dependent(x, x_key, window, w_key, starts, ends, d_cut, *,
+                   block_n: int = 128, block_m: int = DENSITY_BLOCK_M,
+                   interpret: bool | None = None):
+    """Kernel-backed halo strictly-denser NN within d_cut.  Returns
+    (delta, parent_window_idx, found)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    n = x.shape[0]
+    xp = pad_points(x.astype(jnp.float32), block_n)
+    xk = pad_vec(x_key.astype(jnp.float32), block_n, jnp.inf)
+    wp = pad_points(window.astype(jnp.float32), block_m)
+    wk = pad_vec(w_key.astype(jnp.float32), block_m, -jnp.inf)
+    st = _pad_spans(starts, block_n)
+    en = _pad_spans(ends, block_n)
+    delta, parent = masked_min_dist_halo(xp, xk, wp, wk, st, en, d_cut,
+                                         block_n=block_n, block_m=block_m,
+                                         interpret=interpret)
+    found = jnp.isfinite(delta[:n])
+    return delta[:n], parent[:n], found
+
+
+def _pad_spans(s, multiple: int):
+    n = s.shape[0]
+    npad = -(-n // multiple) * multiple
+    return jnp.pad(s.astype(jnp.int32), ((0, npad - n), (0, 0)),
+                   constant_values=0)
+
+
+# ----------------------------------------------------- fused-gather NN
+def dependent_masked_gather(table, keys, q_slots, *, block_n: int = 128,
+                            block_m: int = DENSITY_BLOCK_M,
+                            interpret: bool | None = None):
+    """Strictly-denser NN for the row subset ``table[q_slots]``, with the
+    gather fused into the kernel (the streaming maxima repair: the gathered
+    query subset never materialises in HBM).  ``q_slots`` >= len(table) are
+    padding and return (inf, -1).  Returns (delta, parent)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    q = q_slots.shape[0]
+    m = table.shape[0]
+    tp = pad_points(table.astype(jnp.float32), block_m)
+    kp = pad_vec(keys.astype(jnp.float32), block_m, -jnp.inf)
+    # padded slots point past the valid table: the kernel marks them inert
+    sp = pad_vec(q_slots.astype(jnp.int32), block_n, m)
+    best, parent = gather_nn(tp, kp, sp, m_valid=m, block_n=block_n,
+                             block_m=block_m, interpret=interpret)
+    return jnp.sqrt(best[:q]), parent[:q]

@@ -1,0 +1,437 @@
+"""The unified tile-sweep engine behind every DPC Pallas kernel.
+
+Every hot primitive in this repo is the same computation wearing different
+masks: sweep a grid of (row-tile x col-tile) squared-distance blocks and
+reduce each tile into per-row accumulators.  This module owns that sweep
+once — a :class:`SweepSpec` declares *which* accumulators and *which* masks a
+primitive needs, and ``tile_sweep`` builds the corresponding Mosaic kernel:
+
+==================  =======================================================
+accumulators        ``count`` — |{j : d2 < d_cut^2}| per row (Def. 1), with
+                    optional per-column ``signed`` weights (streaming rho
+                    repair); ``nn`` — running masked nearest neighbor, either
+                    ``'best1'`` (min + argmin, per-tile direct-diff re-rank
+                    of the top-``refine_k`` candidates) or ``'topk'`` (the
+                    ``k`` nearest candidates kept for a direct-diff epilogue
+                    — the fused rho+delta path, where the denser-mask is not
+                    known until the counts are complete).
+masks               ``key`` — strictly-denser candidates only (Def. 2);
+                    ``prefix`` — strict lower-triangular tiles (Ex-DPC's
+                    density-sorted invariant; upper tiles never touch the
+                    MXU); ``span`` — per-row ragged [start, end) windows into
+                    the column table (the distributed halo layout); ``nn_dcut``
+                    — NN candidates must also sit within d_cut (stencil
+                    semantics); ``nn_sel`` — per-column candidate gate for
+                    the NN accumulator only (S-Approx representatives).
+precision           ``'f32'`` — expanded-form distances with an f32 MXU
+                    matmul; ``'bf16'`` — bf16 inner product (MXU at twice the
+                    f32 rate), f32 accumulation and norms.  Winners are
+                    restored to direct-difference f32 by the re-rank
+                    (``'best1'``) or the caller's epilogue (``'topk'``), so
+                    mixed precision costs nothing on well-separated data.
+==================  =======================================================
+
+``kernels/density.py`` and ``kernels/dependent.py`` keep their public
+signatures as thin instantiations, and ``kernels/ops.py`` adds the padding
+wrappers for the new fused / halo / gathered entry points.
+
+Also here: ``gather_nn`` — the fused-gather variant of the masked NN for the
+streaming repair path.  The query rows are gathered *inside* the kernel from
+the (VMEM-resident) window table via one-hot matmuls over a doubled column
+grid (first ``nbc`` steps assemble the queries into scratch, the next ``nbc``
+steps run the masked-NN sweep), so the gathered row subset is never
+materialised in HBM.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+PAD_COORD = 1e9  # >> any data domain; 3*PAD^2 ~ 3e18 << f32 max
+
+DEFAULT_BLOCK_N = 256
+DEFAULT_BLOCK_M = 512
+
+# How many expanded-form candidates are re-ranked in direct-difference form
+# per row tile ('best1') or kept for the epilogue ('topk').
+REFINE_TOPK = 4
+FUSED_TOPK = 8
+
+
+@dataclass(frozen=True)
+class SweepSpec:
+    """Static description of one tile-sweep primitive (hashable: jit key)."""
+
+    block_n: int = DEFAULT_BLOCK_N
+    block_m: int = DEFAULT_BLOCK_M
+    count: bool = False          # emit (n,) range count
+    signed: bool = False         # count weighted by per-column signs (f32)
+    nn: str | None = None        # None | 'best1' | 'topk'
+    key: bool = False            # strictly-denser mask (xk / yk inputs)
+    prefix: bool = False         # strict lower-triangular sweep
+    span: bool = False           # per-row ragged [start, end) column windows
+    span_s: int = 0              # spans per row (span mask)
+    nn_dcut: bool = False        # NN candidates must satisfy d2 < d_cut^2
+    nn_sel: bool = False         # per-column NN candidate gate (f32 mask)
+    k: int = FUSED_TOPK          # kept candidates ('topk')
+    refine_k: int = REFINE_TOPK  # re-rank rounds ('best1')
+    precision: str = "f32"       # 'f32' | 'bf16' tile-distance inner product
+
+    @property
+    def needs_dcut(self) -> bool:
+        return self.count or self.nn_dcut
+
+
+def tile_d2(x, y, precision: str = "f32"):
+    """Expanded-form squared distances |x|^2 + |y|^2 - 2 x.y for one tile.
+
+    The inner product feeds the MXU; ``'bf16'`` casts the operands of the
+    matmul only (norms and accumulation stay f32), trading ~8 mantissa bits
+    on the cross term for twice the MXU rate.
+    """
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)
+    y2 = jnp.sum(y * y, axis=-1, keepdims=True).T
+    if precision == "bf16":
+        xm, ym = x.astype(jnp.bfloat16), y.astype(jnp.bfloat16)
+    else:
+        xm, ym = x, y
+    xy = jax.lax.dot_general(xm, ym, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    return x2 + y2 - 2.0 * xy
+
+
+def refine_topk_d2(x, y, d2, k: int):
+    """Re-rank the k smallest expanded-form candidates in direct-diff form.
+
+    The expanded form has absolute error ~eps*(|x|^2+|y|^2) — a large
+    *relative* error for small distances, big enough to flip near-tie argmins
+    when NN distances are far below the domain scale.  k rounds of extract-
+    argmin / re-evaluate-direct-diff (one-hot matmul: MXU-friendly, no
+    gather) / retire make both the winner *and* its value direct-diff exact
+    whenever the true NN sits within the top-k expanded candidates.
+
+    Masked candidates carry d2 = inf and stay inert.  Returns
+    (best_d2_direct, local_argmin); (inf, -1) where no finite candidate.
+    """
+    bn, bm = d2.shape
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bn, bm), 1)
+    best = jnp.full((bn,), jnp.inf, jnp.float32)
+    arg = jnp.full((bn,), -1, jnp.int32)
+    work = d2
+    for _ in range(max(k, 1)):
+        loc = jnp.argmin(work, axis=1).astype(jnp.int32)
+        cand = jnp.min(work, axis=1)
+        onehot = (loc[:, None] == cols).astype(jnp.float32)
+        y_sel = jax.lax.dot_general(onehot, y, (((1,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+        d2d = jnp.sum((x - y_sel) ** 2, axis=-1)
+        d2d = jnp.where(jnp.isfinite(cand), d2d, jnp.inf)     # keep masked inert
+        better = d2d < best
+        best = jnp.where(better, d2d, best)
+        arg = jnp.where(better, loc, arg)
+        work = jnp.where(cols == loc[:, None], jnp.inf, work)  # retire winner
+    return best, arg
+
+
+def _extract_topk(d2, base_col: int, k: int):
+    """k smallest (d2, global col) of a tile, ascending by (d2, idx)."""
+    bn, bm = d2.shape
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bn, bm), 1)
+    vals, idxs = [], []
+    work = d2
+    for _ in range(k):
+        loc = jnp.argmin(work, axis=1).astype(jnp.int32)
+        vals.append(jnp.min(work, axis=1))
+        idxs.append(base_col + loc)
+        work = jnp.where(cols == loc[:, None], jnp.inf, work)
+    return jnp.stack(vals, axis=1), jnp.stack(idxs, axis=1)
+
+
+def _merge_topk(av, ai, bv, bi, k: int):
+    """Merge two (bn, k) candidate lists, keeping the k smallest by (d2, idx).
+
+    ``a`` (the running list, lower global indices) is concatenated first, so
+    the iterated argmin's first-position tie-break preserves the sequential
+    sweep's lowest-index winner on exact distance ties.
+    """
+    allv = jnp.concatenate([av, bv], axis=1)                  # (bn, 2k)
+    alli = jnp.concatenate([ai, bi], axis=1)
+    bn, w = allv.shape
+    pos = jax.lax.broadcasted_iota(jnp.int32, (bn, w), 1)
+    vals, idxs = [], []
+    work = allv
+    for _ in range(k):
+        loc = jnp.argmin(work, axis=1).astype(jnp.int32)
+        vals.append(jnp.min(work, axis=1))
+        sel = pos == loc[:, None]
+        # one-hot select (no gather: Mosaic-friendly); exactly one hit
+        idxs.append(jnp.sum(jnp.where(sel, alli, jnp.int32(0)), axis=1,
+                            dtype=jnp.int32))
+        work = jnp.where(sel, jnp.inf, work)
+    return jnp.stack(vals, axis=1), jnp.stack(idxs, axis=1)
+
+
+def _span_mask(st, en, base_col: int, bn: int, bm: int):
+    """(bn, bm) bool: column j in any of the row's [start, end) windows."""
+    col = base_col + jax.lax.broadcasted_iota(jnp.int32, (bn, bm), 1)
+    mask = jnp.zeros((bn, bm), bool)
+    for s in range(st.shape[1]):
+        mask |= (col >= st[:, s][:, None]) & (col < en[:, s][:, None])
+    return mask
+
+
+def _make_sweep_kernel(spec: SweepSpec):
+    bn, bm = spec.block_n, spec.block_m
+
+    def kernel(*refs):
+        it = iter(refs)
+        d2s_ref = next(it) if spec.needs_dcut else None
+        x_ref = next(it)
+        xk_ref = next(it) if spec.key else None
+        y_ref = next(it)
+        yk_ref = next(it) if spec.key else None
+        s_ref = next(it) if spec.signed else None
+        sel_ref = next(it) if spec.nn_sel else None
+        st_ref = next(it) if spec.span else None
+        en_ref = next(it) if spec.span else None
+        cnt_ref = next(it) if spec.count else None
+        if spec.nn == "best1":
+            best_ref, arg_ref = next(it), next(it)
+        elif spec.nn == "topk":
+            topv_ref, topi_ref = next(it), next(it)
+
+        i = pl.program_id(0)
+        j = pl.program_id(1)
+
+        @pl.when(j == 0)
+        def _init():
+            if spec.count:
+                cnt_ref[...] = jnp.zeros_like(cnt_ref[...])
+            if spec.nn == "best1":
+                best_ref[...] = jnp.full_like(best_ref[...], jnp.inf)
+                arg_ref[...] = jnp.full_like(arg_ref[...], -1)
+            elif spec.nn == "topk":
+                topv_ref[...] = jnp.full_like(topv_ref[...], jnp.inf)
+                topi_ref[...] = jnp.full_like(topi_ref[...], -1)
+
+        def _compute():
+            x = x_ref[...]
+            y = y_ref[...]
+            d2 = tile_d2(x, y, spec.precision)
+            d2cut = d2s_ref[0] if spec.needs_dcut else None
+            smask = (_span_mask(st_ref[...], en_ref[...], j * bm, bn, bm)
+                     if spec.span else None)
+
+            if spec.count:
+                cmask = d2 < d2cut
+                if smask is not None:
+                    cmask &= smask
+                if spec.signed:
+                    cnt = jnp.sum(jnp.where(cmask, s_ref[...][None, :], 0.0),
+                                  axis=1)
+                else:
+                    cnt = jnp.sum(cmask, axis=1).astype(jnp.int32)
+                cnt_ref[...] += cnt
+
+            if spec.nn is None:
+                return
+            d2m = d2
+            if spec.key:
+                d2m = jnp.where(yk_ref[...][None, :] > xk_ref[...][:, None],
+                                d2m, jnp.inf)
+            if spec.prefix:
+                row = i * bn + jax.lax.broadcasted_iota(jnp.int32, (bn, bm), 0)
+                col = j * bm + jax.lax.broadcasted_iota(jnp.int32, (bn, bm), 1)
+                d2m = jnp.where(col < row, d2m, jnp.inf)
+            if smask is not None:
+                d2m = jnp.where(smask, d2m, jnp.inf)
+            if spec.nn_dcut:
+                d2m = jnp.where(d2 < d2cut, d2m, jnp.inf)
+            if spec.nn_sel:
+                d2m = jnp.where(sel_ref[...][None, :] > 0, d2m, jnp.inf)
+
+            if spec.nn == "best1":
+                cand, loc = refine_topk_d2(x, y, d2m, spec.refine_k)
+                better = cand < best_ref[...]
+                best_ref[...] = jnp.where(better, cand, best_ref[...])
+                arg_ref[...] = jnp.where(better, j * bm + loc, arg_ref[...])
+            else:
+                tv, ti = _extract_topk(d2m, j * bm, spec.k)
+                mv, mi = _merge_topk(topv_ref[...], topi_ref[...], tv, ti,
+                                     spec.k)
+                topv_ref[...] = mv
+                topi_ref[...] = mi
+
+        if spec.prefix:
+            pl.when(j * bm < (i + 1) * bn)(_compute)  # triangular skip
+        else:
+            _compute()
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "interpret"))
+def tile_sweep(spec: SweepSpec, x, y, d_cut=None, x_key=None, y_key=None,
+               signs=None, nn_sel=None, starts=None, ends=None, *,
+               interpret: bool = False):
+    """Run the sweep described by ``spec`` over padded inputs.
+
+    Shape contract (as for every kernel here): ``x`` is (n, d) padded to a
+    multiple of ``spec.block_n`` with PAD_COORD rows, ``y`` (m, d) padded to
+    ``spec.block_m``; per-row/per-column vectors padded to match (keys +inf
+    on padded queries / -inf on padded candidates; signs 0; spans empty).
+    Returns the tuple of requested accumulators, in order:
+    ``count`` (n,), then ``nn`` — (best_d2, arg) or (topv, topi).
+    """
+    n, d = x.shape
+    m, _ = y.shape
+    assert n % spec.block_n == 0 and m % spec.block_m == 0
+    grid = (n // spec.block_n, m // spec.block_m)
+    bn, bm = spec.block_n, spec.block_m
+
+    args, in_specs = [], []
+    if spec.needs_dcut:
+        d2cut = (jnp.asarray(d_cut, jnp.float32) ** 2).reshape((1,))
+        args.append(d2cut)
+        in_specs.append(pl.BlockSpec((1,), lambda i, j: (0,),
+                                     memory_space=pltpu.SMEM))
+    args.append(x)
+    in_specs.append(pl.BlockSpec((bn, d), lambda i, j: (i, 0)))
+    if spec.key:
+        args.append(x_key)
+        in_specs.append(pl.BlockSpec((bn,), lambda i, j: (i,)))
+    args.append(y)
+    in_specs.append(pl.BlockSpec((bm, d), lambda i, j: (j, 0)))
+    if spec.key:
+        args.append(y_key)
+        in_specs.append(pl.BlockSpec((bm,), lambda i, j: (j,)))
+    if spec.signed:
+        args.append(signs.astype(jnp.float32))
+        in_specs.append(pl.BlockSpec((bm,), lambda i, j: (j,)))
+    if spec.nn_sel:
+        args.append(nn_sel.astype(jnp.float32))
+        in_specs.append(pl.BlockSpec((bm,), lambda i, j: (j,)))
+    if spec.span:
+        S = spec.span_s
+        args += [starts.astype(jnp.int32), ends.astype(jnp.int32)]
+        in_specs += [pl.BlockSpec((bn, S), lambda i, j: (i, 0))] * 2
+
+    out_specs, out_shape = [], []
+    if spec.count:
+        out_specs.append(pl.BlockSpec((bn,), lambda i, j: (i,)))
+        out_shape.append(jax.ShapeDtypeStruct(
+            (n,), jnp.float32 if spec.signed else jnp.int32))
+    if spec.nn == "best1":
+        out_specs += [pl.BlockSpec((bn,), lambda i, j: (i,))] * 2
+        out_shape += [jax.ShapeDtypeStruct((n,), jnp.float32),
+                      jax.ShapeDtypeStruct((n,), jnp.int32)]
+    elif spec.nn == "topk":
+        out_specs += [pl.BlockSpec((bn, spec.k), lambda i, j: (i, 0))] * 2
+        out_shape += [jax.ShapeDtypeStruct((n, spec.k), jnp.float32),
+                      jax.ShapeDtypeStruct((n, spec.k), jnp.int32)]
+
+    out = pl.pallas_call(
+        _make_sweep_kernel(spec),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs if len(out_specs) > 1 else out_specs[0],
+        out_shape=out_shape if len(out_shape) > 1 else out_shape[0],
+        interpret=interpret,
+    )(*args)
+    return out if isinstance(out, (tuple, list)) else (out,)
+
+
+# ------------------------------------------------------- fused-gather NN
+def _gather_nn_kernel(slots_ref, y_ref, yk_ref, best_ref, arg_ref, acc_ref, *,
+                      block_n: int, block_m: int, nbc: int, m_valid: int,
+                      refine_k: int):
+    """Masked NN whose query rows are gathered in-kernel from the table.
+
+    Doubled column grid: steps j < nbc assemble the gathered queries
+    [coords | key] into VMEM scratch via one-hot matmuls (MXU-friendly, no
+    dynamic gather); steps j >= nbc run the standard strictly-denser NN
+    sweep against column tile (j - nbc).  Slots >= ``m_valid`` are padding
+    and produce (inf, -1).
+    """
+    j = pl.program_id(1)
+    bn, bm = block_n, block_m
+    d = y_ref.shape[1]
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref[...])
+        best_ref[...] = jnp.full_like(best_ref[...], jnp.inf)
+        arg_ref[...] = jnp.full_like(arg_ref[...], -1)
+
+    @pl.when(j < nbc)
+    def _gather():
+        slots = slots_ref[...]
+        col = j * bm + jax.lax.broadcasted_iota(jnp.int32, (bn, bm), 1)
+        onehot = (slots[:, None] == col).astype(jnp.float32)
+        # padded table rows carry -inf keys; finitize them so the one-hot
+        # matmul never forms 0 * inf = NaN (such slots are masked inert below)
+        yk = jnp.maximum(yk_ref[...], jnp.float32(-3e38))
+        both = jnp.concatenate([y_ref[...], yk[:, None]], axis=1)
+        acc_ref[...] += jax.lax.dot_general(
+            onehot, both, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(j >= nbc)
+    def _sweep():
+        x = acc_ref[...][:, :d]
+        xk = jnp.where(slots_ref[...] < m_valid, acc_ref[...][:, d], jnp.inf)
+        d2 = tile_d2(x, y_ref[...])
+        d2m = jnp.where(yk_ref[...][None, :] > xk[:, None], d2, jnp.inf)
+        cand, loc = refine_topk_d2(x, y_ref[...], d2m, refine_k)
+        better = cand < best_ref[...]
+        best_ref[...] = jnp.where(better, cand, best_ref[...])
+        arg_ref[...] = jnp.where(
+            better, (j - nbc) * bm + loc, arg_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_m", "m_valid",
+                                             "refine_k", "interpret"))
+def gather_nn(table, keys, q_slots, *, m_valid: int,
+              block_n: int = 128, block_m: int = DEFAULT_BLOCK_M,
+              refine_k: int = REFINE_TOPK, interpret: bool = False):
+    """Strictly-denser NN for ``table[q_slots]`` rows, gather fused in-kernel.
+
+    ``table`` (m, d) / ``keys`` (m,) padded to ``block_m`` multiples
+    (PAD_COORD rows, -inf keys); ``q_slots`` (q,) int32 padded to ``block_n``
+    with values >= ``m_valid`` (padding queries return (inf, -1)).  Returns
+    (best_d2, parent) of shape (q,) — best_d2 is the squared distance.
+    """
+    q = q_slots.shape[0]
+    m, d = table.shape
+    assert q % block_n == 0 and m % block_m == 0
+    nbc = m // block_m
+    kernel = functools.partial(_gather_nn_kernel, block_n=block_n,
+                               block_m=block_m, nbc=nbc, m_valid=m_valid,
+                               refine_k=refine_k)
+    col_map = lambda i, j: (jax.lax.rem(j, jnp.int32(nbc)),)
+
+    best, arg = pl.pallas_call(
+        kernel,
+        grid=(q // block_n, 2 * nbc),
+        in_specs=[
+            pl.BlockSpec((block_n,), lambda i, j: (i,)),
+            pl.BlockSpec((block_m, d), lambda i, j: (*col_map(i, j), 0)),
+            pl.BlockSpec((block_m,), col_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i, j: (i,)),
+            pl.BlockSpec((block_n,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q,), jnp.float32),
+            jax.ShapeDtypeStruct((q,), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_n, d + 1), jnp.float32)],
+        interpret=interpret,
+    )(q_slots.astype(jnp.int32), table, keys)
+    return best, arg

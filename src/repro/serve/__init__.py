@@ -2,7 +2,9 @@
 and the online-clustering endpoint (re-exported from ``repro.stream``)."""
 from .engine import ServeConfig, ServeEngine
 from .dpc_kv import DPCKVConfig, compress_kv
-from repro.stream.service import StreamServeConfig, StreamService
+from repro.stream.service import (QueryResult, QueryStatus,
+                                 StreamServeConfig, StreamService)
 
 __all__ = ["ServeConfig", "ServeEngine", "DPCKVConfig", "compress_kv",
-           "StreamService", "StreamServeConfig"]
+           "StreamService", "StreamServeConfig", "QueryResult",
+           "QueryStatus"]

@@ -27,7 +27,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.dpc_types import with_jitter
+from repro.core.dpc_types import density_jitter, with_jitter
 from repro.kernels.backend import get_backend
 
 
@@ -76,12 +76,22 @@ def _compress_head(k_head, v_head, valid, cfg: DPCKVConfig):
     d_cut = _dcut_estimate(jnp.where(valid[:, None], pts, 0.0),
                            cfg.d_cut_quantile)
     be = get_backend(cfg.backend)
-    rho = be.range_count(pts, pts, d_cut, block=min(cfg.block, S))
-    rho = jnp.where(valid, rho, 0.0)
-    rho_key = with_jitter(rho)
-    rho_key = jnp.where(valid, rho_key, -jnp.inf)
-    delta, parent = be.denser_nn(pts, rho_key, pts, rho_key,
-                                 block=min(cfg.block, S))
+    if be.fused_traceable:
+        # fused rho+delta in one backend call (this whole function runs
+        # under jit+vmap, so only jit-safe fused paths qualify).  A -inf
+        # jitter on invalid rows makes their keys -inf exactly as the
+        # two-pass formulation's masking does.
+        jit_mask = jnp.where(valid, density_jitter(S), -jnp.inf)
+        rho, rho_key, delta, parent = be.rho_delta(
+            pts, pts, d_cut, jitter=jit_mask, block=min(cfg.block, S))
+        rho = jnp.where(valid, rho, 0.0)
+    else:
+        rho = be.range_count(pts, pts, d_cut, block=min(cfg.block, S))
+        rho = jnp.where(valid, rho, 0.0)
+        rho_key = with_jitter(rho)
+        rho_key = jnp.where(valid, rho_key, -jnp.inf)
+        delta, parent = be.denser_nn(pts, rho_key, pts, rho_key,
+                                     block=min(cfg.block, S))
     # global peak: delta = inf -> cap at the domain diameter for gamma
     delta = jnp.where(jnp.isfinite(delta), delta, 2.0 * d_cut * 10.0)
     gamma = jnp.where(valid, rho * delta, -jnp.inf)

@@ -7,10 +7,12 @@ cluster ids across ticks).  ``StreamService`` wraps it with the serve
 layer's fixed-shape padding discipline.
 """
 from .incremental import CellOverflow, IncrementalGrid, repair_rho
-from .service import StreamServeConfig, StreamService
+from .service import (QueryResult, QueryStatus, StreamServeConfig,
+                      StreamService)
 from .stream_dpc import StreamDPC, StreamDPCConfig, StreamTick
 from .window import SlidingWindow
 
 __all__ = ["StreamDPC", "StreamDPCConfig", "StreamTick", "SlidingWindow",
            "IncrementalGrid", "CellOverflow", "repair_rho",
-           "StreamService", "StreamServeConfig"]
+           "StreamService", "StreamServeConfig", "QueryResult",
+           "QueryStatus"]

@@ -8,16 +8,24 @@ behavior, and read-only queries answered from maintained state.
 * ``submit`` buffers arriving points and fires a ``StreamDPC.ingest`` tick
   for every full micro-batch (zero or more ticks per call).
 * ``flush`` drains the partial remainder as one padded tick.
-* ``query`` labels arbitrary points *without mutating the window*: each
-  query point adopts the stable cluster id of its nearest window point
-  within d_cut (noise / out-of-coverage -> -1).  The NN runs through the
-  backend's ``denser_nn`` with a -inf query key — every window row is
+* ``query`` labels arbitrary points *without mutating the window*, returning
+  a :class:`QueryResult` of (labels, status) per point.  A query point whose
+  nearest window point lies within d_cut adopts that point's stable cluster
+  id (``HIT``; the id is -1 when the window point is noise).  Out-of-coverage
+  points no longer get a bare -1: they fall back to the *nearest current
+  cluster center* with an explicit ``MISS_FALLBACK`` status, so consumers can
+  distinguish "confidently clustered" from "best-effort nearest center" —
+  the decide-and-drop policy the roadmap called for.  ``MISS`` (label -1)
+  only remains for the no-centers-at-all window.  The window NN runs through
+  the backend's ``denser_nn`` with a -inf query key — every window row is
   "denser", so the masked NN degenerates to a plain NN on the same kernels
   the write path uses.
 """
 from __future__ import annotations
 
+import enum
 from dataclasses import dataclass, field
+from typing import NamedTuple
 
 import numpy as np
 import jax.numpy as jnp
@@ -25,6 +33,19 @@ import jax.numpy as jnp
 from repro.kernels.density import PAD_COORD
 
 from .stream_dpc import StreamDPC, StreamDPCConfig, StreamTick
+
+
+class QueryStatus(enum.IntEnum):
+    """Per-point provenance of a ``StreamService.query`` answer."""
+
+    HIT = 0            # nearest window point within d_cut; its stable label
+    MISS_FALLBACK = 1  # out of coverage; nearest current center's stable id
+    MISS = 2           # out of coverage and no centers exist; label is -1
+
+
+class QueryResult(NamedTuple):
+    labels: np.ndarray   # (m,) int64 stable cluster ids (-1 = noise / MISS)
+    status: np.ndarray   # (m,) int8 QueryStatus values
 
 
 @dataclass(frozen=True)
@@ -75,8 +96,14 @@ class StreamService:
         return self.engine.ingest(flat)
 
     # ------------------------------------------------------------ queries
-    def query(self, points: np.ndarray) -> np.ndarray:
-        """Stable cluster id per query point (read-only; -1 = noise/far)."""
+    def query(self, points: np.ndarray) -> QueryResult:
+        """(labels, status) per query point (read-only).
+
+        Within-coverage points take their nearest window point's stable id
+        (``HIT``); out-of-coverage points fall back to the nearest current
+        cluster center (``MISS_FALLBACK``) instead of a bare -1; ``MISS``
+        (label -1) only when the window currently has no centers at all.
+        """
         last = self.engine._last
         assert last is not None, "query before any ingest tick"
         points = np.atleast_2d(np.asarray(points, np.float32))
@@ -94,10 +121,20 @@ class StreamService:
         dist = np.asarray(dist)[:m]
         parent = np.asarray(parent)[:m]
         labels = np.full(m, -1, np.int64)
+        status = np.full(m, int(QueryStatus.MISS), np.int8)
         ok = (np.isfinite(dist) & (dist < self.cfg.stream.d_cut)
               & (parent >= 0) & (parent < len(last.labels)))
         labels[ok] = last.labels[parent[ok]]
-        return labels
+        status[ok] = int(QueryStatus.HIT)
+        miss = ~ok
+        if miss.any():
+            ids, pos = self.engine.center_positions()
+            if len(ids):
+                d2 = ((points[miss][:, None, :].astype(np.float64)
+                       - pos[None]) ** 2).sum(-1)
+                labels[miss] = ids[np.argmin(d2, axis=1)]
+                status[miss] = int(QueryStatus.MISS_FALLBACK)
+        return QueryResult(labels=labels, status=status)
 
     def stats(self) -> dict:
         return {**self.engine.stats(), "buffered": self._buffered,

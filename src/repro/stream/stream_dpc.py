@@ -186,6 +186,17 @@ class StreamDPC:
         the from-scratch reference the stream is parity-tested against."""
         return self.window.contents()
 
+    def center_positions(self) -> tuple[np.ndarray, np.ndarray]:
+        """(stable_ids, positions) of the current tick's cluster centers —
+        the read-side view ``StreamService.query`` uses for its
+        nearest-center miss fallback."""
+        if not self._registry:
+            dim = 0 if self.window is None else self.window.dim
+            return np.zeros(0, np.int64), np.zeros((0, dim), np.float32)
+        ids = np.array([s for s, _ in self._registry], np.int64)
+        pos = np.stack([p for _, p in self._registry]).astype(np.float32)
+        return ids, pos
+
     @property
     def result(self) -> DPCResult:
         return self._result

@@ -252,6 +252,8 @@ class TestService:
         _assert_parity(svc.engine, "jnp")
 
     def test_query_labels_match_window(self):
+        from repro.stream import QueryStatus
+
         pts, _ = gaussian_mixture(CAP + B, k=3, d=2, overlap=0.02, seed=11)
         svc = self._service()
         svc.engine.initialize(pts[:CAP])
@@ -259,10 +261,44 @@ class TestService:
         last = svc.engine._last
         # querying window points themselves returns their own stable labels
         probe = np.nonzero(last.labels >= 0)[0][:16]
-        got = svc.query(svc.engine.window.host[probe])
-        np.testing.assert_array_equal(got, last.labels[probe])
-        # far-away probes are out of coverage
-        assert svc.query(np.array([[9e8, 9e8]], np.float32))[0] == -1
+        res = svc.query(svc.engine.window.host[probe])
+        np.testing.assert_array_equal(res.labels, last.labels[probe])
+        assert (res.status == QueryStatus.HIT).all()
+
+    def test_query_miss_falls_back_to_nearest_center(self):
+        from repro.stream import QueryStatus
+
+        pts, _ = gaussian_mixture(CAP + B, k=3, d=2, overlap=0.02, seed=11)
+        svc = self._service()
+        svc.engine.initialize(pts[:CAP])
+        svc.submit(pts[CAP: CAP + B])
+        ids, pos = svc.engine.center_positions()
+        assert len(ids) > 0
+        # a probe far outside coverage adopts the nearest center's stable id
+        # with an explicit MISS_FALLBACK flag (not a bare -1)
+        probe = np.array([[9e8, 9e8]], np.float32)
+        res = svc.query(probe)
+        assert res.status[0] == QueryStatus.MISS_FALLBACK
+        d2 = ((probe[0] - pos) ** 2).sum(-1)
+        assert res.labels[0] == ids[np.argmin(d2)]
+        # mixed request: in-coverage rows stay HIT with their window label
+        mixed = np.concatenate([svc.engine.window.host[:1], probe])
+        res = svc.query(mixed)
+        assert res.status[0] == QueryStatus.HIT
+        assert res.status[1] == QueryStatus.MISS_FALLBACK
+
+    def test_query_no_centers_is_miss(self):
+        from repro.stream import QueryStatus
+
+        rng = np.random.default_rng(4)
+        # all-noise window (uniform scatter, rho never reaches rho_min)
+        pts = rng.uniform(0, 5e6, (CAP, 2)).astype(np.float32)
+        svc = self._service()
+        svc.engine.initialize(pts)
+        if svc.engine.clustering.num_clusters == 0:
+            res = svc.query(np.array([[9e8, 9e8]], np.float32))
+            assert res.labels[0] == -1
+            assert res.status[0] == QueryStatus.MISS
 
 
 class TestDriftingGenerator:

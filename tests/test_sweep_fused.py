@@ -1,0 +1,256 @@
+"""Fused rho_delta parity and the halo / mixed-precision engine paths.
+
+The acceptance contract of the unified tile-sweep engine (ISSUE 3):
+
+* fused ``rho_delta`` == the sequential ``range_count`` + ``denser_nn``
+  two-pass formulation, per backend (``jnp``, ``pallas-interpret``) and
+  dtype (f32, bf16+refine) — property-tested on integer-lattice data where
+  every distance and inner product is exact in all three arithmetics, so
+  equality is *bit* equality (including duplicate points, i.e. exact
+  distance ties exercising the lexicographic tie-break).  The property runs
+  under hypothesis when available (CI) and over a fixed seed matrix always;
+* adversarially scaled near-tie data: the fused path's kept-k candidates are
+  re-ranked in direct-difference form, so expanded-form rounding cannot flip
+  the dependent point (extending the ``refine_topk_d2`` contract);
+* the halo primitives (span-masked tiles) agree between the jnp gather form
+  and the pallas dense form, and with an unrestricted reference when the
+  spans cover the whole window.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+try:  # dev-only dep (requirements-dev.txt); fixed-seed tests run without it
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core.dpc_types import density_jitter
+from repro.kernels import get_backend, rho_delta_sequential
+from repro.kernels.backend import JnpBackend
+
+
+def _assert_fused_equals_sequential(be, pts, d_cut, precision=None,
+                                    seq_be=None):
+    n = pts.shape[0]
+    jit_ = density_jitter(n)
+    seq = rho_delta_sequential(seq_be or be, pts, pts, d_cut, jitter=jit_)
+    fus = be.rho_delta(pts, pts, d_cut, jitter=jit_, precision=precision)
+    rho_s, rk_s, dd_s, pp_s = seq
+    rho_f, rk_f, dd_f, pp_f = fus
+    assert bool(jnp.all(rho_f == rho_s)), "fused rho != sequential rho"
+    assert bool(jnp.all(rk_f == rk_s)), "fused rho_key != sequential"
+    assert bool(jnp.all(pp_f == pp_s)), (
+        f"{int(jnp.sum(pp_f != pp_s))} fused parents differ")
+    both_inf = jnp.isinf(dd_f) & jnp.isinf(dd_s)
+    assert bool(jnp.all((dd_f == dd_s) | both_inf)), "fused delta differs"
+
+
+def _lattice(n, d, sexp, seed):
+    """Integer lattice x power-of-two scale: coordinates, squared distances
+    and expanded-form inner products are exact integers well inside the
+    bf16-product / f32-sum exact range, so jnp (direct-diff f32), pallas
+    (expanded f32) and pallas-bf16 agree bit-for-bit and the interesting
+    behavior left is masking and tie-breaking.  Small coords make duplicate
+    points (exact distance ties) frequent.  d2cut = (k + .5)*scale^2 never
+    ties an integer squared distance."""
+    rng = np.random.default_rng(seed)
+    pts = rng.integers(0, 13, (n, d)).astype(np.float32) * (2.0 ** sexp)
+    d2cut = (float(rng.integers(1, 3 * 13 ** 2)) + 0.5) * (2.0 ** (2 * sexp))
+    return jnp.asarray(pts), float(np.sqrt(d2cut))
+
+
+def _check_lattice_parity(backend, n, d, sexp, seed, precision=None):
+    pts, d_cut = _lattice(n, d, sexp, seed)
+    seq_be = get_backend("jnp") if precision == "bf16" else None
+    _assert_fused_equals_sequential(get_backend(backend), pts, d_cut,
+                                    precision=precision, seq_be=seq_be)
+
+
+SEED_MATRIX = [(17, 2, 0, 0), (96, 3, 3, 1), (64, 4, 6, 2), (2, 2, 0, 3),
+               (33, 2, 1, 4)]
+
+
+class TestFusedParity:
+    """fused rho_delta == sequential two-pass, property-tested."""
+
+    @pytest.mark.parametrize("n,d,sexp,seed", SEED_MATRIX)
+    @pytest.mark.parametrize("backend", ["jnp", "pallas-interpret"])
+    def test_fixed_seeds_f32(self, backend, n, d, sexp, seed):
+        _check_lattice_parity(backend, n, d, sexp, seed)
+
+    @pytest.mark.parametrize("n,d,sexp,seed", SEED_MATRIX[:3])
+    def test_fixed_seeds_bf16(self, n, d, sexp, seed):
+        """bf16 accumulation + f32 refine == the f32 jnp sequential oracle
+        on exactly-representable data: mixed precision loses nothing."""
+        _check_lattice_parity("pallas-interpret", n, d, sexp, seed,
+                              precision="bf16")
+
+    if HAVE_HYPOTHESIS:
+        @settings(max_examples=40, deadline=None)
+        @given(n=st.integers(2, 96), d=st.integers(2, 4),
+               sexp=st.integers(0, 6), seed=st.integers(0, 2 ** 31))
+        def test_hypothesis_jnp(self, n, d, sexp, seed):
+            _check_lattice_parity("jnp", n, d, sexp, seed)
+
+        @settings(max_examples=12, deadline=None)
+        @given(n=st.integers(2, 96), d=st.integers(2, 4),
+               sexp=st.integers(0, 6), seed=st.integers(0, 2 ** 31))
+        def test_hypothesis_pallas_interpret(self, n, d, sexp, seed):
+            _check_lattice_parity("pallas-interpret", n, d, sexp, seed)
+
+        @settings(max_examples=8, deadline=None)
+        @given(n=st.integers(2, 96), d=st.integers(2, 4),
+               sexp=st.integers(0, 6), seed=st.integers(0, 2 ** 31))
+        def test_hypothesis_bf16(self, n, d, sexp, seed):
+            _check_lattice_parity("pallas-interpret", n, d, sexp, seed,
+                                  precision="bf16")
+
+    @pytest.mark.parametrize("backend", ["jnp", "pallas-interpret"])
+    def test_rep_subset_selection(self, backend):
+        """y_sel_slots: the NN candidate set restricted to a row subset
+        (S-Approx representatives) matches the sequential -inf-key mask."""
+        rng = np.random.default_rng(7)
+        n, m = 60, 200
+        y = jnp.asarray(rng.integers(0, 13, (m, 3)).astype(np.float32) * 8)
+        slots = jnp.asarray(np.sort(rng.choice(m, n, replace=False)))
+        x = y[slots]
+        d_cut = float(np.sqrt(100.5)) * 8
+        be = get_backend(backend)
+        jit_ = density_jitter(n)
+        seq = rho_delta_sequential(be, x, y, d_cut, jitter=jit_,
+                                   y_sel_slots=slots)
+        fus = be.rho_delta(x, y, d_cut, jitter=jit_, y_sel_slots=slots)
+        for a, b, name in zip(seq, fus, ("rho", "rho_key", "delta",
+                                         "parent")):
+            both_inf = (jnp.isinf(a) & jnp.isinf(b)
+                        if a.dtype.kind == "f" else jnp.zeros(a.shape, bool))
+            assert bool(jnp.all((a == b) | both_inf)), name
+
+    def test_jnp_backend_rejects_bf16(self):
+        pts = jnp.zeros((8, 2), jnp.float32)
+        with pytest.raises(ValueError, match="f32"):
+            get_backend("jnp").rho_delta(pts, pts, 1.0, precision="bf16")
+
+
+class TestFusedAdversarial:
+    """Scaled near-tie data: expanded-form noise spans several candidate
+    orderings, and the fused path must still return the direct-diff winner
+    (kept-k + epilogue re-rank extends the refine_topk_d2 contract)."""
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_scaled_blob_parity(self, seed):
+        """Same-backend parity on ill-conditioned data: counts near the
+        threshold follow the backend's expanded-form contract, so the oracle
+        is the *pallas* sequential formulation; what must survive the scale
+        is the fused path's winner selection (kept-k + direct-diff refine)."""
+        rng = np.random.default_rng(seed)
+        pts = (rng.normal(0, 200.0, (384, 2)) + 1e4).astype(np.float32)
+        d_cut = 150.0
+        _assert_fused_equals_sequential(get_backend("pallas-interpret"),
+                                        jnp.asarray(pts), d_cut)
+
+    def test_planted_near_tie(self):
+        """True NN at r=30, decoy at r=30.07, offset 5e4: expanded-form
+        error (~1e2) dwarfs the gap; the epilogue re-rank must recover the
+        true dependent point with its direct-diff distance."""
+        rng = np.random.default_rng(0)
+        off = np.array([5e4, 5e4], np.float32)
+        q = off + np.array([0.0, 0.0], np.float32)
+        nn = off + np.array([30.0, 0.0], np.float32)
+        decoy = off + np.array([0.0, 30.07], np.float32)
+        fillers = off + (rng.uniform(300.0, 2000.0, (61, 2)).astype(np.float32)
+                         * rng.choice([-1, 1], (61, 2)))
+        pts = jnp.asarray(np.concatenate([[q], [nn], [decoy], fillers]))
+        # jitter making q the least dense: its NN search sees all candidates
+        n = pts.shape[0]
+        jit_ = jnp.arange(n, dtype=jnp.float32) / n
+        d_cut = 5000.0
+        seq = rho_delta_sequential(get_backend("jnp"), pts, pts, d_cut,
+                                   jitter=jit_)
+        fus = get_backend("pallas-interpret").rho_delta(pts, pts, d_cut,
+                                                        jitter=jit_)
+        assert int(fus[3][0]) == int(seq[3][0]) == 1
+        assert float(fus[2][0]) == float(seq[2][0])  # direct-diff value
+
+
+class TestHaloPrimitives:
+    """Span-masked engine tiles == the jnp gather form, and both == an
+    unrestricted reference when the spans cover the whole window."""
+
+    @staticmethod
+    def _spans(rng, m, W, S):
+        # per-row *disjoint* spans (the grid's candidate-cell spans are)
+        cuts = np.sort(rng.integers(0, W, (m, 2 * S)), axis=1)
+        st_ = cuts[:, 0::2].astype(np.int32)
+        en = cuts[:, 1::2].astype(np.int32)
+        st_[:3] = en[:3] = 0          # empty spans
+        st_[3] = en[3] = -9           # negative (padding semantics)
+        return st_, en
+
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_count_jnp_vs_pallas(self, seed):
+        rng = np.random.default_rng(seed)
+        W, m, S, d = 256, 300, 3, 3
+        d_cut = 900.0
+        window = jnp.asarray(rng.uniform(0, 6 * d_cut, (W, d)), jnp.float32)
+        x = jnp.asarray(rng.uniform(0, 6 * d_cut, (m, d)), jnp.float32)
+        st_, en = self._spans(rng, m, W, S)
+        cap = max(int((en - st_).max()), 1)
+        cj = get_backend("jnp").range_count_halo(
+            x, window, jnp.asarray(st_), jnp.asarray(en), d_cut, span_cap=cap)
+        cp = get_backend("pallas-interpret").range_count_halo(
+            x, window, jnp.asarray(st_), jnp.asarray(en), d_cut, span_cap=cap)
+        assert bool(jnp.all(cj == cp))
+
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_nn_jnp_vs_pallas(self, seed):
+        rng = np.random.default_rng(seed + 10)
+        W, m, S, d = 256, 300, 3, 3
+        d_cut = 2500.0
+        window = jnp.asarray(rng.uniform(0, 6 * d_cut, (W, d)), jnp.float32)
+        wk = jnp.asarray(rng.permutation(W).astype(np.float32))
+        x = jnp.asarray(rng.uniform(0, 6 * d_cut, (m, d)), jnp.float32)
+        xk = jnp.asarray(rng.uniform(0, W, m).astype(np.float32))
+        st_, en = self._spans(rng, m, W, S)
+        cap = max(int((en - st_).max()), 1)
+        args = (x, xk, window, wk, jnp.asarray(st_), jnp.asarray(en), d_cut)
+        dj, pj, fj = get_backend("jnp").denser_nn_halo(*args, span_cap=cap)
+        dp, pp, fp = get_backend("pallas-interpret").denser_nn_halo(
+            *args, span_cap=cap)
+        assert bool(jnp.all(fj == fp))
+        assert bool(jnp.all(pj == pp))
+        both_inf = jnp.isinf(dj) & jnp.isinf(dp)
+        assert bool(jnp.all((dj == dp) | both_inf))
+
+    @pytest.mark.parametrize("backend", ["jnp", "pallas-interpret"])
+    def test_full_window_spans_match_unrestricted(self, backend):
+        """One [0, W) span per row == plain range count / within-d_cut NN."""
+        rng = np.random.default_rng(3)
+        W, m, d = 192, 128, 2
+        d_cut = 2000.0
+        window = jnp.asarray(rng.uniform(0, 5 * d_cut, (W, d)), jnp.float32)
+        wk = jnp.asarray(rng.permutation(W).astype(np.float32))
+        x = window[:m]
+        xk = wk[:m]
+        st_ = jnp.zeros((m, 1), jnp.int32)
+        en = jnp.full((m, 1), W, jnp.int32)
+        be = get_backend(backend)
+        cnt = be.range_count_halo(x, window, st_, en, d_cut, span_cap=W)
+        ref = be.range_count(x, window, d_cut)
+        assert bool(jnp.all(cnt == ref))
+        dd, pp, ff = be.denser_nn_halo(x, xk, window, wk, st_, en, d_cut,
+                                       span_cap=W)
+        rd, rp = be.denser_nn(x, xk, window, wk)
+        within = jnp.isfinite(rd) & (rd < d_cut)
+        # the halo NN only answers within d_cut; beyond it reports unfound
+        assert bool(jnp.all(ff == within))
+        assert bool(jnp.all(jnp.where(within, pp == rp, pp == -1)))
+
+
+class TestEngineRegistryFlags:
+    def test_fused_traceable_flags(self):
+        assert get_backend("jnp").fused_traceable
+        assert not get_backend("pallas-interpret").fused_traceable
+        assert isinstance(get_backend("jnp"), JnpBackend)
