@@ -19,10 +19,17 @@ pallas-interpret exercise pass, failing (exit 1) when
 
 * the fused ``rho_delta`` is less than FUSED_MIN_SPEEDUP x the two-pass
   dense sweep on the jnp CPU baseline (the ISSUE 3 acceptance bar), or
+* the block-sparse fused path's speedup over the dense fused path (same
+  grid-sorted data, paper-style d_cut) regressed more than SMOKE_TOLERANCE
+  relative to the committed ratio (the ISSUE 4 pruning bar), or
 * any jnp primitive regressed more than SMOKE_TOLERANCE in *relative*
   pairs/s against the committed BENCH_core.json (throughputs are normalized
   by the currently measured jnp range_count rate first, so the gate tracks
   algorithmic regressions rather than CI-machine speed).
+
+``--refresh-baseline`` rewrites BENCH_core.json: the standard-shape record
+plus the ISSUE-4 acceptance measurement (block-sparse vs dense fused
+``rho_delta`` wall clock at n=64k, d=3, paper-style d_cut, jnp CPU).
 """
 from __future__ import annotations
 
@@ -36,15 +43,21 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.dpc_types import density_jitter
+from repro.core.grid import build_grid
+from repro.core.tuning import pick_dcut
 from repro.kernels.backend import get_backend
 
 from .util import CSV
 
 PRIMITIVES = ("range_count", "denser_nn", "prefix_nn", "rho_delta_two_pass",
-              "rho_delta_fused", "range_count_halo", "denser_nn_halo")
+              "rho_delta_fused", "range_count_halo", "denser_nn_halo",
+              "rho_delta_fused_dense_gs", "rho_delta_fused_bs")
 
 FUSED_MIN_SPEEDUP = 1.3     # fused vs two-pass, jnp CPU (ISSUE 3 acceptance)
 SMOKE_TOLERANCE = 0.30      # relative pairs/s regression tripping the gate
+ACCEPT_N = 65536            # ISSUE 4 acceptance shape (n, d, min speedup)
+ACCEPT_D = 3
+ACCEPT_MIN_SPEEDUP = 3.0
 
 
 def default_backends() -> list[str]:
@@ -66,6 +79,18 @@ def _bench_data(n: int, d: int, seed: int = 0):
     starts = jnp.asarray(st[:, None].astype(np.int32))
     ends = jnp.asarray((st + width)[:, None].astype(np.int32))
     return pts, rho_key, d_cut, starts, ends, width
+
+
+def _bench_data_sparse(n: int, d: int, seed: int = 0):
+    """Block-sparse layout rows: same uniform domain, but a *paper-style*
+    d_cut (average rho in the tens — the assumption the grid pruning pays
+    under) and the points grid-sorted, exactly as the drivers lay them out.
+    Returns (pts_sorted, d_cut)."""
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(0, 6 * 900.0, (n, d)).astype(np.float32)
+    d_cut = float(pick_dcut(pts, target_rho=min(30.0, n / 200)))
+    grid = build_grid(jnp.asarray(pts), d_cut)
+    return grid.points, d_cut
 
 
 def bench_backend(name: str, n: int, d: int, repeats: int,
@@ -100,6 +125,18 @@ def bench_backend(name: str, n: int, d: int, repeats: int,
             lambda: be.rho_delta(pts, pts, d_cut, jitter=jitter,
                                  precision="bf16"), 2 * n * n)
 
+    # block-sparse layout rows: dense vs grid-pruned fused rho_delta on the
+    # same grid-sorted data at paper-style d_cut.  Both rows use the dense
+    # 2*n^2 pair count, so pairs/s is *wall-clock-equivalent* — the sparse
+    # row's higher rate IS the pruning win.
+    pts_gs, dcut_gs = _bench_data_sparse(n, d)
+    runs["rho_delta_fused_dense_gs"] = (
+        lambda: be.rho_delta(pts_gs, pts_gs, dcut_gs, jitter=jitter),
+        2 * n * n)
+    runs["rho_delta_fused_bs"] = (
+        lambda: be.rho_delta(pts_gs, pts_gs, dcut_gs, jitter=jitter,
+                             layout="block-sparse"), 2 * n * n)
+
     # Interleaved timing: one pass over the whole primitive set per repeat,
     # so slow machine-load drift hits every primitive equally and the
     # *relative* throughputs (what the smoke gate and the fused-speedup
@@ -130,6 +167,9 @@ def bench_backend(name: str, n: int, d: int, repeats: int,
     ratios = [t / f for t, f in zip(samples["rho_delta_two_pass"],
                                     samples["rho_delta_fused"])]
     out["_fused_speedup"] = float(np.median(ratios))
+    sratios = [t / f for t, f in zip(samples["rho_delta_fused_dense_gs"],
+                                     samples["rho_delta_fused_bs"])]
+    out["_sparse_speedup"] = float(np.median(sratios))
     return out
 
 
@@ -138,15 +178,51 @@ def run(n: int, d: int, repeats: int, backends: list[str]):
     csv.header(f"n={n} d={d}")
     rec = {"n": n, "d": d, "d_cut": 900.0,
            "platform": jax.default_backend(),
-           "primitives": {}, "fused_speedup": {}}
+           "primitives": {}, "fused_speedup": {}, "sparse_speedup": {}}
     for name in backends:
         res = bench_backend(name, n, d, repeats)
         rec["fused_speedup"][name] = res.pop("_fused_speedup")
+        rec["sparse_speedup"][name] = res.pop("_sparse_speedup")
         for prim, r in res.items():
             rec["primitives"].setdefault(prim, {})[name] = r
             csv.add(primitive=prim, backend=name, seconds=r["seconds"],
                     pairs_per_s=r["pairs_per_s"])
     return rec
+
+
+def measure_acceptance(repeats: int = 3) -> dict:
+    """The ISSUE 4 acceptance record: block-sparse vs dense fused rho_delta
+    wall clock at n=64k, d=3, paper-style d_cut, jnp CPU (grid-sorted)."""
+    import time as _time
+
+    be = get_backend("jnp")
+    pts, d_cut = _bench_data_sparse(ACCEPT_N, ACCEPT_D)
+    jitter = density_jitter(ACCEPT_N)
+    forms = {
+        "dense": lambda: be.rho_delta(pts, pts, d_cut, jitter=jitter),
+        "block_sparse": lambda: be.rho_delta(pts, pts, d_cut, jitter=jitter,
+                                             layout="block-sparse"),
+    }
+    secs = {}
+    for name, fn in forms.items():
+        jax.block_until_ready(fn())
+        ts = []
+        for _ in range(repeats):
+            t0 = _time.perf_counter()
+            jax.block_until_ready(fn())
+            ts.append(_time.perf_counter() - t0)
+        secs[name] = float(np.min(ts))
+    speedup = secs["dense"] / secs["block_sparse"]
+    print(f"[backend_compare] acceptance n={ACCEPT_N}: dense "
+          f"{secs['dense']:.2f}s, block-sparse {secs['block_sparse']:.2f}s "
+          f"-> {speedup:.2f}x (bar {ACCEPT_MIN_SPEEDUP}x)", flush=True)
+    return {"n": ACCEPT_N, "d": ACCEPT_D, "d_cut": float(d_cut),
+            "backend": "jnp",
+            "dense_seconds": secs["dense"],
+            "block_sparse_seconds": secs["block_sparse"],
+            "pairs_per_s_equiv_dense": 2 * ACCEPT_N ** 2 / secs["dense"],
+            "pairs_per_s_equiv_bs": 2 * ACCEPT_N ** 2 / secs["block_sparse"],
+            "speedup": speedup, "min_required": ACCEPT_MIN_SPEEDUP}
 
 
 def smoke_gate(rec, committed, tolerance: float = SMOKE_TOLERANCE):
@@ -156,6 +232,14 @@ def smoke_gate(rec, committed, tolerance: float = SMOKE_TOLERANCE):
     if sp < FUSED_MIN_SPEEDUP:
         failures.append(f"jnp fused rho_delta speedup {sp:.2f}x "
                         f"< required {FUSED_MIN_SPEEDUP}x")
+    ssp = rec.get("sparse_speedup", {}).get("jnp", 0.0)
+    ssp_ref = committed.get("sparse_speedup", {}).get("jnp")
+    if ssp_ref is None:
+        failures.append("committed baseline lacks the jnp sparse_speedup "
+                        "ratio (refresh BENCH_core.json)")
+    elif ssp < (1.0 - tolerance) * ssp_ref:
+        failures.append(f"jnp block-sparse speedup {ssp:.2f}x < "
+                        f"(1-{tolerance})x committed {ssp_ref:.2f}x")
     try:
         base_now = rec["primitives"]["range_count"]["jnp"]["pairs_per_s"]
         base_ref = committed["primitives"]["range_count"]["jnp"]["pairs_per_s"]
@@ -181,7 +265,8 @@ def smoke_gate(rec, committed, tolerance: float = SMOKE_TOLERANCE):
 def main(n: int = 4096, d: int = 3, repeats: int = 3,
          backends: list[str] | None = None,
          out: str = "experiments/backends", smoke: bool = False,
-         baseline: str = "BENCH_core.json"):
+         baseline: str = "BENCH_core.json",
+         refresh_baseline: bool = False):
     if smoke:
         # gated jnp pass at the committed shape + a small kernel exercise
         committed = json.load(open(baseline))
@@ -198,19 +283,27 @@ def main(n: int = 4096, d: int = 3, repeats: int = 3,
                 print("  -", f, flush=True)
             sys.exit(1)
         print(f"[backend_compare --smoke] OK (jnp fused speedup "
-              f"{rec['fused_speedup']['jnp']:.2f}x)", flush=True)
+              f"{rec['fused_speedup']['jnp']:.2f}x, block-sparse "
+              f"{rec['sparse_speedup']['jnp']:.2f}x)", flush=True)
         return rec
 
     rec = run(n=n, d=d, repeats=repeats,
               backends=backends or default_backends())
-    os.makedirs(out, exist_ok=True)
-    path = os.path.join(out, "backend_compare.json")
-    with open(path, "w") as f:
-        json.dump(rec, f, indent=2)
-    print(f"[backend_compare] wrote {path}", flush=True)
+    if refresh_baseline:
+        rec["acceptance_64k"] = measure_acceptance(repeats=repeats)
+        with open(baseline, "w") as f:
+            json.dump(rec, f, indent=2)
+        print(f"[backend_compare] refreshed {baseline}", flush=True)
+    else:
+        os.makedirs(out, exist_ok=True)
+        path = os.path.join(out, "backend_compare.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2)
+        print(f"[backend_compare] wrote {path}", flush=True)
     for name, sp in rec["fused_speedup"].items():
-        print(f"[backend_compare] {name}: fused rho_delta {sp:.2f}x "
-              f"over two-pass", flush=True)
+        print(f"[backend_compare] {name}: fused rho_delta {sp:.2f}x over "
+              f"two-pass; block-sparse {rec['sparse_speedup'][name]:.2f}x "
+              f"over dense fused", flush=True)
     return rec
 
 
@@ -225,7 +318,11 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="CI gate vs the committed BENCH_core.json")
     ap.add_argument("--baseline", default="BENCH_core.json")
+    ap.add_argument("--refresh-baseline", action="store_true",
+                    help="rewrite the committed baseline, including the "
+                         "n=64k block-sparse acceptance record")
     a = ap.parse_args()
     main(n=a.n, d=a.d, repeats=a.repeats,
          backends=a.backends.split(",") if a.backends else None, out=a.out,
-         smoke=a.smoke, baseline=a.baseline)
+         smoke=a.smoke, baseline=a.baseline,
+         refresh_baseline=a.refresh_baseline)

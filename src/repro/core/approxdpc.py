@@ -32,7 +32,7 @@ from repro.kernels.backend import get_backend
 
 from .dpc_types import DPCResult, density_jitter, with_jitter
 from .exdpc import resolve_fallback
-from .grid import build_grid, Grid
+from .grid import build_grid, Grid, unsort_dpc
 from .stencil import density_per_cell, dependent_stencil
 
 
@@ -47,7 +47,8 @@ def _group_segments(grid: Grid):
 def run_approxdpc(points, d_cut: float, *, g: int | None = None,
                   cell_block: int = 32, block: int = 256,
                   fallback_block: int = 4096,
-                  grid: Grid | None = None, backend=None) -> DPCResult:
+                  grid: Grid | None = None, backend=None,
+                  layout: str | None = None) -> DPCResult:
     be = get_backend(backend)
     points = jnp.asarray(points, jnp.float32)
     n = points.shape[0]
@@ -55,11 +56,27 @@ def run_approxdpc(points, d_cut: float, *, g: int | None = None,
         grid = build_grid(points, d_cut, g=g)
 
     seg = _group_segments(grid)
+    sparse = layout == "block-sparse"
 
     # --- exact local density: joint per-cell range count (§4.2) on the
-    #     reference backend, fused rho+delta tile sweep on pallas ---
+    #     reference backend, fused rho+delta tile sweep on pallas (or any
+    #     backend in the grid-pruned block-sparse layout) ---
     nn_delta_all = nn_parent_all = None
-    if be.mxu_dense:
+    use_engine = be.mxu_dense or sparse
+    if sparse:
+        def _maxima_mask_sorted(rk_s):
+            # the engine ran on the grid-sorted table, so the interest
+            # mask is directly the per-cell argmax in sorted space
+            seg_max = jax.ops.segment_max(rk_s, seg, num_segments=n)
+            return rk_s == seg_max[seg]
+
+        rho_s, rk_s, nnd_s, nnp_s = be.rho_delta(
+            grid.points, grid.points, d_cut,
+            jitter=density_jitter(n)[grid.order],
+            fallback_interest=_maxima_mask_sorted, layout=layout)
+        rho, rho_key, nn_delta_all, nn_parent_all = unsort_dpc(
+            grid, rho_s, rk_s, nnd_s, nnp_s)
+    elif use_engine:
         def _maxima_mask(rho_key):
             # only cell maxima consume the Def.-2 answer (rules 2+3), so the
             # fused path's unresolved-row fallback is restricted to them —
@@ -89,7 +106,7 @@ def run_approxdpc(points, d_cut: float, *, g: int | None = None,
     parent_s = cellmax_slot[seg]                 # rule-1 parent (sorted idx)
     delta_s = jnp.full((n,), grid.d_cut, jnp.float32)
 
-    if be.mxu_dense:
+    if use_engine:
         # --- rules 2+3 from the fused sweep's per-row denser-NN: only the
         #     cell maxima consume it (every other row is rule 1).  NN within
         #     d_cut -> rule 2 (delta stamped d_cut); NN beyond d_cut ->

@@ -35,6 +35,16 @@ class DPCConfig:
 
     Applies to ``scan``/``exdpc``/``approxdpc``/``sapproxdpc``; the LSH-DDP
     and CFSFDP-A baselines always run their own reference math.
+
+    ``layout`` selects the dense-engine execution mode:
+
+    * ``None`` / ``"dense"`` — the all-pairs tile sweep.
+    * ``"block-sparse"`` — the grid-pruned worklist mode: the driver runs
+      the fused primitive on the grid-sorted table and only tile pairs
+      within d_cut of each other's bounding boxes (plus the NN ring) touch
+      the hardware.  Bit-identical results, sub-quadratic tile work under
+      the paper's d_cut assumption; forces the dense-engine path even on
+      the ``jnp`` backend (whose worklists are jit-built).
     """
 
     d_cut: float
@@ -45,6 +55,7 @@ class DPCConfig:
     grid_dims: int | None = None        # candidate-grid dims (default min(d,3))
     block: int = 256
     backend: str | None = None          # kernel backend (see class docstring)
+    layout: str | None = None           # dense | block-sparse (see docstring)
 
     def resolved_delta_min(self) -> float:
         dm = 2.0 * self.d_cut if self.delta_min is None else self.delta_min
@@ -55,14 +66,16 @@ class DPCConfig:
 
 _RUNNERS = {
     "scan": lambda p, c: run_scan(p, c.d_cut, block=max(c.block, 256),
-                                  backend=c.backend),
+                                  backend=c.backend, layout=c.layout),
     "exdpc": lambda p, c: run_exdpc(p, c.d_cut, g=c.grid_dims, block=c.block,
-                                    backend=c.backend),
+                                    backend=c.backend, layout=c.layout),
     "approxdpc": lambda p, c: run_approxdpc(p, c.d_cut, g=c.grid_dims,
-                                            block=c.block, backend=c.backend),
+                                            block=c.block, backend=c.backend,
+                                            layout=c.layout),
     "sapproxdpc": lambda p, c: run_sapproxdpc(p, c.d_cut, eps=c.eps,
                                               g=c.grid_dims, block=c.block,
-                                              backend=c.backend),
+                                              backend=c.backend,
+                                              layout=c.layout),
     "lsh_ddp": lambda p, c: run_lsh_ddp(p, c.d_cut),
     "cfsfdp_a": lambda p, c: run_cfsfdp_a(p, c.d_cut),
 }

@@ -27,7 +27,7 @@ import jax.numpy as jnp
 from repro.kernels.backend import get_backend
 
 from .dpc_types import DPCResult, density_jitter, with_jitter
-from .grid import build_grid, Grid
+from .grid import build_grid, Grid, unsort_dpc
 from .stencil import density_per_point, dependent_stencil
 
 
@@ -60,28 +60,45 @@ def resolve_fallback(points, rho_key, delta, parent, resolved, block=4096,
     return jnp.asarray(delta), jnp.asarray(parent)
 
 
-def _run_exdpc_dense(points, d_cut: float, be, block: int) -> DPCResult:
-    """Dense kernel path: the fused rho+delta tile sweep.
+def _run_exdpc_dense(points, d_cut: float, be, block: int,
+                     layout: str | None = None,
+                     grid: Grid | None = None,
+                     g: int | None = None) -> DPCResult:
+    """Dense-engine path: the fused rho+delta tile sweep.
 
     One engine invocation computes the range count and the denser-NN
     accumulator over the same distance tiles (kernels/sweep.py) — no
-    density sort, no second sweep.  The triangular ``prefix_nn`` form
-    remains available on the backend for schedule experiments
-    (benchmarks/backend_compare.py still times it)."""
+    density sort, no second sweep.  With ``layout="block-sparse"`` the
+    sweep runs on the grid-sorted table (compact tile AABBs -> grid-pruned
+    worklist) and results map back through ``grid.unsort_dpc``.  The
+    triangular ``prefix_nn`` form remains available on the backend for
+    schedule experiments (benchmarks/backend_compare.py still times it)."""
+    n = points.shape[0]
+    if layout == "block-sparse":
+        if grid is None:
+            grid = build_grid(points, d_cut, g=g)
+        rho_s, rk_s, dd_s, pp_s = be.rho_delta(
+            grid.points, grid.points, d_cut,
+            jitter=density_jitter(n)[grid.order], block=block, layout=layout)
+        rho, rho_key, delta, parent = unsort_dpc(grid, rho_s, rk_s, dd_s,
+                                                 pp_s)
+        return DPCResult(rho=rho, rho_key=rho_key, delta=delta,
+                         parent=parent)
     rho, rho_key, delta, parent = be.rho_delta(
-        points, points, d_cut, jitter=density_jitter(points.shape[0]),
-        block=block)
+        points, points, d_cut, jitter=density_jitter(n), block=block)
     return DPCResult(rho=rho, rho_key=rho_key, delta=delta,
                      parent=parent.astype(jnp.int32))
 
 
 def run_exdpc(points, d_cut: float, *, g: int | None = None,
               block: int = 256, fallback_block: int = 4096,
-              grid: Grid | None = None, backend=None) -> DPCResult:
+              grid: Grid | None = None, backend=None,
+              layout: str | None = None) -> DPCResult:
     be = get_backend(backend)
     points = jnp.asarray(points, jnp.float32)
-    if be.mxu_dense:
-        return _run_exdpc_dense(points, d_cut, be, block)
+    if be.mxu_dense or layout == "block-sparse":
+        return _run_exdpc_dense(points, d_cut, be, block, layout=layout,
+                                grid=grid, g=g)
 
     if grid is None:
         grid = build_grid(points, d_cut, g=g)

@@ -209,6 +209,21 @@ def cell_span_bounds(grid: Grid) -> tuple[jnp.ndarray, jnp.ndarray]:
     return jnp.where(alive, starts, 0), jnp.where(alive, ends, 0)
 
 
+def unsort_dpc(grid: Grid, rho, rho_key, delta, parent):
+    """Map engine outputs computed on ``grid.points`` (sorted layout) back
+    to the original point order: per-row fields reindex through
+    ``inv_order``; parents translate from sorted-slot to original ids.
+
+    The block-sparse drivers run the fused engine on the grid-sorted table
+    (compact tile AABBs) and hand results back through this one helper.
+    """
+    parent_orig = jnp.where(parent >= 0,
+                            grid.order[jnp.maximum(parent, 0)], -1)
+    return (rho[grid.inv_order], rho_key[grid.inv_order],
+            delta[grid.inv_order],
+            parent_orig[grid.inv_order].astype(jnp.int32))
+
+
 def gather_window(arr: jnp.ndarray, start: jnp.ndarray, length: int):
     """Gather ``arr[start : start+length]`` rows with clamping; returns (length, ...)."""
     idx = start + jnp.arange(length)

@@ -46,10 +46,12 @@ def coarse_cell_key(points: jnp.ndarray, d_cut: float, eps: float) -> jnp.ndarra
 def run_sapproxdpc(points, d_cut: float, eps: float = 0.8, *,
                    g: int | None = None, block: int = 256,
                    fallback_block: int = 4096,
-                   grid: Grid | None = None, backend=None) -> DPCResult:
+                   grid: Grid | None = None, backend=None,
+                   layout: str | None = None) -> DPCResult:
     be = get_backend(backend)
     points = jnp.asarray(points, jnp.float32)
     n = points.shape[0]
+    use_engine = be.mxu_dense or layout == "block-sparse"
     if grid is None:
         grid = build_grid(points, d_cut, g=g)
 
@@ -69,16 +71,19 @@ def run_sapproxdpc(points, d_cut: float, eps: float = 0.8, *,
                                      constant_values=n))
 
     # --- exact rho for representatives only ---
-    if be.mxu_dense:
+    if use_engine:
         # fused engine sweep: reps x all-points range count AND the NN among
         # the strictly-denser *representative* columns (nn_sel gates the
         # kept-k to rep rows), one pass — phases 1+2 fall out of its result.
         # the density jitter indexes by *original* point id, so rep queries
         # carry jitter[order[slot]] — identical keys to rk_sorted[rep_slots]
+        # (rep slots ascend in grid-sorted order, so the block-sparse layout
+        # sees compact query tiles with no extra sort)
         rep_jit = density_jitter(n)[grid.order[jnp.asarray(rep_slots)]]
         rep_rho, _, nn_d, nn_p = be.rho_delta(
             grid.points[jnp.asarray(rep_slots)], grid.points, d_cut,
-            jitter=rep_jit, y_sel_slots=jnp.asarray(rep_slots))
+            jitter=rep_jit, y_sel_slots=jnp.asarray(rep_slots),
+            layout=layout)
     else:
         rep_rho = density_for_slots(grid, rep_slots_p, block=block)[:num_reps]
 
@@ -96,7 +101,7 @@ def run_sapproxdpc(points, d_cut: float, eps: float = 0.8, *,
         rep_slots_p < n)
     rep_pts = grid.points[jnp.asarray(rep_slots)]
     rep_rk = rk_sorted[jnp.asarray(rep_slots)]
-    if be.mxu_dense:
+    if use_engine:
         # --- phases 1+2 straight from the fused sweep above: NN within
         #     d_cut -> phase-1 resolution (delta stamped d_cut, the
         #     tighter-than-paper bound below); otherwise the NN already IS

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from repro.kernels.backend import get_backend
 
 from .dpc_types import DPCResult, density_jitter
+from .grid import build_grid, unsort_dpc
 
 
 def local_density_scan(points: jnp.ndarray, d_cut: float,
@@ -43,13 +44,28 @@ def dependent_scan(points: jnp.ndarray, rho_key: jnp.ndarray,
 
 
 def run_scan(points, d_cut: float, block: int = 512,
-             backend=None) -> DPCResult:
+             backend=None, layout: str | None = None) -> DPCResult:
     """O(n^2) DPC through the kernel backend (``None`` -> platform default;
-    the ``jnp`` default on CPU is the bit-exact oracle)."""
+    the ``jnp`` default on CPU is the bit-exact oracle).
+
+    ``layout="block-sparse"`` grid-sorts the points and runs the fused
+    primitive in the grid-pruned worklist mode — sub-quadratic tile work
+    under the paper's d_cut assumption, same outputs (Scan then is no
+    longer "the straightforward algorithm", but it is the same function).
+    """
     be = get_backend(backend)
     points = jnp.asarray(points, jnp.float32)
+    n = points.shape[0]
+    if layout == "block-sparse":
+        grid = build_grid(points, d_cut)
+        rho_s, rk_s, dd_s, pp_s = be.rho_delta(
+            grid.points, grid.points, d_cut,
+            jitter=density_jitter(n)[grid.order], block=block, layout=layout)
+        rho, rho_key, delta, parent = unsort_dpc(grid, rho_s, rk_s, dd_s,
+                                                 pp_s)
+        return DPCResult(rho=rho, rho_key=rho_key, delta=delta,
+                         parent=parent)
     rho, rho_key, delta, parent = be.rho_delta(
-        points, points, d_cut, jitter=density_jitter(points.shape[0]),
-        block=block)
+        points, points, d_cut, jitter=density_jitter(n), block=block)
     return DPCResult(rho=rho, rho_key=rho_key, delta=delta,
                      parent=parent.astype(jnp.int32))

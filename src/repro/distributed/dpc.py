@@ -63,6 +63,14 @@ class DistDPCConfig:
     # (pallas tiles when dense — the ring windows feed the Mosaic kernels
     # directly; jnp gathers otherwise).
     backend: str | None = None
+    # 'block-sparse' runs the per-shard gather-strategy phases in the
+    # grid-pruned worklist mode: each shard owns a contiguous chunk of the
+    # space-sorted table, so its row tiles have compact AABBs against the
+    # gathered table and most tile pairs prune away.  Requires a backend
+    # whose worklists are jit-built (``worklist_traceable`` — the jnp
+    # backend): pallas worklists are host-built and cannot be constructed
+    # inside shard_map, so pallas shards keep the dense MXU tiles.
+    layout: str | None = None
 
 
 def _pad_rows(x, m, value):
@@ -216,32 +224,37 @@ def _make_delta(axis, d_cut, block, span_w):
     return delta
 
 
-def _make_fallback(axis, block, be):
+def _make_fallback(axis, block, be, layout=None):
     def fallback(q_pts, q_rk, tbl_my, rk_my):
         """Dense denser-NN for unresolved rows (padded, rk=+inf rows inert):
         the backend's Def.-2 primitive over my queries x gathered table."""
         tbl = jax.lax.all_gather(tbl_my, axis, axis=0, tiled=True)
         rk_all = jax.lax.all_gather(rk_my, axis, axis=0, tiled=True)
-        return be.denser_nn(q_pts, q_rk, tbl, rk_all, block=block)
+        return be.denser_nn(q_pts, q_rk, tbl, rk_all, block=block,
+                            layout=layout)
 
     return fallback
 
 
-def _make_rho_dense(axis, d_cut, block, be):
+def _make_rho_dense(axis, d_cut, block, be, layout=None):
     def rho(my_pts, tbl_my):
-        """Dense MXU tiles: my rows x gathered table (kernel range count)."""
+        """Engine tiles: my rows x gathered table (kernel range count;
+        grid-pruned worklist when layout='block-sparse' — the shard rows
+        are a contiguous chunk of the space-sorted table, so the jit-built
+        AABB worklist prunes most of the gathered table's tiles)."""
         tbl = jax.lax.all_gather(tbl_my, axis, axis=0, tiled=True)
-        return be.range_count(my_pts, tbl, d_cut, block=block)
+        return be.range_count(my_pts, tbl, d_cut, block=block, layout=layout)
 
     return rho
 
 
-def _make_delta_dense(axis, block, be):
+def _make_delta_dense(axis, block, be, layout=None):
     def delta(my_pts, my_rk, tbl_my, rk_my):
-        """Dense denser-NN kernel: globally exact, no fallback needed."""
+        """Engine denser-NN kernel: globally exact, no fallback needed."""
         tbl = jax.lax.all_gather(tbl_my, axis, axis=0, tiled=True)
         rk_all = jax.lax.all_gather(rk_my, axis, axis=0, tiled=True)
-        dd, pp = be.denser_nn(my_pts, my_rk, tbl, rk_all, block=block)
+        dd, pp = be.denser_nn(my_pts, my_rk, tbl, rk_all, block=block,
+                              layout=layout)
         # the only infinite delta is the global peak (already final)
         return dd, pp, jnp.ones(dd.shape, bool)
 
@@ -267,7 +280,9 @@ def distributed_dpc(points, cfg: DistDPCConfig, mesh: Mesh) -> DPCResult:
     pts_s = _pad_rows(grid.points, m, 1e9)
 
     halo = cfg.strategy == "halo"
-    dense = be.mxu_dense and not halo   # halo windows are stencil-shaped
+    # per-shard block-sparse needs jit-built worklists (inside shard_map)
+    shard_layout = cfg.layout if be.worklist_traceable else None
+    dense = (be.mxu_dense or shard_layout == "block-sparse") and not halo
     if halo or not dense:   # the dense kernel tiles never read the spans
         starts, ends = point_span_bounds(grid)      # (n, S_spans)
         span_w = grid.span_cap
@@ -303,7 +318,8 @@ def distributed_dpc(points, cfg: DistDPCConfig, mesh: Mesh) -> DPCResult:
         rho_sorted = jax.jit(sm_rho)(pts_s, starts_p, ends_p, pts_s,
                                      lo_arr)[:n]
     elif dense:
-        rho_fn = _make_rho_dense(axis, cfg.d_cut, cfg.block, be)
+        rho_fn = _make_rho_dense(axis, cfg.d_cut, cfg.block, be,
+                                 layout=shard_layout)
         sm_rho = shard_map(rho_fn, mesh=flat_mesh,
                            in_specs=(P(axis), P(axis)), out_specs=P(axis),
                            check_rep=False)   # pallas_call lacks a rep rule
@@ -331,7 +347,8 @@ def distributed_dpc(points, cfg: DistDPCConfig, mesh: Mesh) -> DPCResult:
             pts_s, rk_query, starts_p, ends_p, pts_s, rk_sorted_full,
             lo_arr)
     elif dense:
-        delta_fn = _make_delta_dense(axis, cfg.block, be)
+        delta_fn = _make_delta_dense(axis, cfg.block, be,
+                                     layout=shard_layout)
         sm_delta = shard_map(delta_fn, mesh=flat_mesh,
                              in_specs=(P(axis),) * 4,
                              out_specs=(P(axis), P(axis), P(axis)),
@@ -361,7 +378,8 @@ def distributed_dpc(points, cfg: DistDPCConfig, mesh: Mesh) -> DPCResult:
         # kernels (winners direct-diff refined), so the fallback uses the
         # same backend — no silent jnp detour on the optimized path
         fb_be = be
-        fb_fn = _make_fallback(axis, max(cfg.block, 1024), fb_be)
+        fb_fn = _make_fallback(axis, max(cfg.block, 1024), fb_be,
+                               layout=shard_layout)
         sm_fb = shard_map(fb_fn, mesh=flat_mesh,
                           in_specs=(P(axis), P(axis), P(axis), P(axis)),
                           out_specs=(P(axis), P(axis)),

@@ -36,6 +36,29 @@ backend carries:
   re-queried for a row subset; the pallas backends fuse the row gather into
   the kernel).
 
+Every dense primitive additionally accepts ``layout="block-sparse"``: the
+grid-pruned execution mode (``kernels.blocksparse``).  Callers lay the
+points out in grid-sorted order (``core.grid``'s sort — the drivers do
+this), per-tile AABBs bound every tile pair's distances, and only pairs
+that can matter are visited: count accumulators keep pairs with min
+inter-AABB distance <= d_cut, NN accumulators walk an ascending-bound ring
+with a progressively-shrinking prune radius.  The jnp worklists are
+jit-built (``worklist_traceable``: block-sparse stays legal inside
+jit/shard_map and ``rho_delta`` stays ``fused_traceable``); the pallas
+worklists are host-built, like the grid itself, and drive a scalar-
+prefetched 1-D kernel grid.  f32 results are bit-identical to the dense
+layout of the same backend — pruning bounds carry conservative slack
+covering f32 rounding of the bound arithmetic, NN tie-breaks are
+explicitly lexicographic — which is property-tested on tie-heavy lattice
+data (tests/test_blocksparse.py).  Under ``precision="bf16"`` the bounds
+remain *true-distance* conservative (never prune a truly-relevant pair),
+but the dense bf16 sweep evaluates tile distances with ~2^-8 relative
+error, so on data where that error is material the two layouts can keep
+different candidates — block-sparse == dense-bf16 exactly on
+exactly-representable data (tested), and up to bf16 rounding elsewhere
+(the same caveat bf16 itself carries).  Correctness never depends on the
+input order; only the pruning rate does.
+
 ``get_backend(None)`` auto-detects: ``pallas`` on TPU, ``jnp`` elsewhere.
 Numerical contract: the pallas backends compute squared distances in the MXU
 expanded form |x|^2+|y|^2-2xy (then re-rank the top-k candidates direct-diff,
@@ -54,7 +77,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from . import ops
+from . import blocksparse, ops
 
 __all__ = ["KernelBackend", "available_backends", "default_backend_name",
            "get_backend", "register_backend", "rho_delta_sequential"]
@@ -72,8 +95,28 @@ def _pow2_pad(m: int) -> int:
     return p
 
 
+def _sparse(layout: str | None) -> bool:
+    """Resolve a layout name: None/'dense' -> False, 'block-sparse' -> True."""
+    if layout in (None, "dense"):
+        return False
+    if layout == "block-sparse":
+        return True
+    raise ValueError(f"unknown layout {layout!r}; "
+                     "expected 'dense' or 'block-sparse'")
+
+
+def _require_host(name: str, *arrays) -> None:
+    """Pallas worklists are host-built (like the grid index itself)."""
+    if any(isinstance(a, jax.core.Tracer) for a in arrays):
+        raise ValueError(
+            f"{name}(layout='block-sparse') on a pallas backend builds its "
+            "tile worklist on the host; call it outside jit/shard_map, or "
+            "use the jnp backend (worklist_traceable) for traced callers")
+
+
 def rho_delta_sequential(be: "KernelBackend", x, y, d_cut, *, jitter=None,
-                         y_sel_slots=None, block: int | None = None):
+                         y_sel_slots=None, block: int | None = None,
+                         layout: str | None = None):
     """The two-pass reference formulation of the fused primitive.
 
     Def. 1 then Def. 2 as separate backend calls — the parity oracle the
@@ -83,7 +126,7 @@ def rho_delta_sequential(be: "KernelBackend", x, y, d_cut, *, jitter=None,
     themselves mapped into y space (S-Approx representatives); ``None``
     means y *is* the query set (identity correspondence).
     """
-    rho = be.range_count(x, y, d_cut, block=block)
+    rho = be.range_count(x, y, d_cut, block=block, layout=layout)
     if jitter is None:
         jitter = _default_jitter(x.shape[0])
     rho_key = rho + jitter
@@ -94,7 +137,8 @@ def rho_delta_sequential(be: "KernelBackend", x, y, d_cut, *, jitter=None,
     else:
         col_key = jnp.full((y.shape[0],), -jnp.inf,
                            jnp.float32).at[y_sel_slots].set(rho_key)
-    delta, parent = be.denser_nn(x, rho_key, y, col_key, block=block)
+    delta, parent = be.denser_nn(x, rho_key, y, col_key, block=block,
+                                 layout=layout)
     return rho, rho_key, delta, parent
 
 
@@ -106,18 +150,24 @@ class KernelBackend:
     formulation (all-pairs MXU tiles) rather than the grid-stencil gathers;
     the stencil IS the jnp reference, so only the pallas backends set it.
     ``fused_traceable`` marks a ``rho_delta`` that is safe to call inside
-    jit/vmap (no host-orchestrated fallback step).
+    jit/vmap (no host-orchestrated fallback step).  ``worklist_traceable``
+    marks a backend whose block-sparse worklists are jit-built — its
+    ``layout="block-sparse"`` primitives stay legal inside jit/shard_map
+    (the pallas worklists are host-built, like the grid index).
     """
 
     name: str = "abstract"
     mxu_dense: bool = False
     fused_traceable: bool = False
+    worklist_traceable: bool = False
 
-    def range_count(self, x, y, d_cut, *, block: int | None = None):
+    def range_count(self, x, y, d_cut, *, block: int | None = None,
+                    layout: str | None = None):
         """(n,) f32: |{j : ||x_i - y_j|| < d_cut}| per row of x (Def. 1)."""
         raise NotImplementedError
 
-    def denser_nn(self, x, x_key, y, y_key, *, block: int | None = None):
+    def denser_nn(self, x, x_key, y, y_key, *, block: int | None = None,
+                  layout: str | None = None):
         """(delta, parent): NN among y rows with y_key strictly greater
         (Def. 2).  delta = +inf, parent = -1 where no such row exists."""
         raise NotImplementedError
@@ -131,7 +181,7 @@ class KernelBackend:
 
     def rho_delta(self, x, y, d_cut, *, jitter=None, y_sel_slots=None,
                   block: int | None = None, precision: str | None = None,
-                  fallback_interest=None):
+                  fallback_interest=None, layout: str | None = None):
         """Fused Def. 1 + Def. 2: per x-row range count over y AND the
         nearest strictly-denser neighbor, one engine invocation.
 
@@ -139,7 +189,10 @@ class KernelBackend:
         (all-distinct comparison key), parent in y-row index space.
         ``y_sel_slots``: see :func:`rho_delta_sequential`.  ``precision``:
         pallas backends accept ``"bf16"`` for the tile inner product (winners
-        refined back to f32 direct-diff); default f32.
+        refined back to f32 direct-diff); default f32.  ``layout``:
+        ``"block-sparse"`` selects the grid-pruned worklist mode (callers
+        should pass grid-sorted points — pruning quality, not correctness,
+        depends on the layout).
 
         ``fallback_interest``: optional ``rho_key -> (nx,) bool`` callable
         naming the rows whose Def.-2 answer the caller will actually consume
@@ -152,12 +205,14 @@ class KernelBackend:
             raise ValueError(f"{self.name} backend computes f32 only")
         del fallback_interest  # every row exact: nothing to restrict
         return rho_delta_sequential(self, x, y, d_cut, jitter=jitter,
-                                    y_sel_slots=y_sel_slots, block=block)
+                                    y_sel_slots=y_sel_slots, block=block,
+                                    layout=layout)
 
     # ---- halo-window primitives (distributed optimized path) ----
 
     def range_count_halo(self, x, window, starts, ends, d_cut, *,
-                         span_cap: int, block: int | None = None):
+                         span_cap: int, block: int | None = None,
+                         layout: str | None = None):
         """Def. 1 restricted to per-row ragged [start, end) windows into a
         halo-exchanged column table.  ``starts``/``ends``: (n, S)
         window-local span bounds (empty or negative spans count nothing;
@@ -167,7 +222,8 @@ class KernelBackend:
         raise NotImplementedError
 
     def denser_nn_halo(self, x, x_key, window, w_key, starts, ends, d_cut, *,
-                       span_cap: int, block: int | None = None):
+                       span_cap: int, block: int | None = None,
+                       layout: str | None = None):
         """Def. 2 restricted to the row's halo spans AND to d_cut (stencil
         semantics).  Returns (delta, parent_window_idx, found); rows with no
         strictly-denser candidate within d_cut inside their spans report
@@ -177,16 +233,21 @@ class KernelBackend:
     # ---- streaming (repro.stream) batched primitives ----
 
     def range_count_delta(self, x, batch, signs, d_cut, *,
-                          block: int | None = None):
+                          block: int | None = None,
+                          layout: str | None = None):
         """(n,) f32 signed count: sum_b signs[b] * [||x_i - batch_b|| < d_cut].
 
         The sliding-window rho repair (each surviving point's density changes
         by +1 per inserted / -1 per evicted neighbor): signs are +1 for
-        inserted rows, -1 for evicted rows, 0 for padding."""
+        inserted rows, -1 for evicted rows, 0 for padding.  With
+        ``layout="block-sparse"`` the window's row tiles outside d_cut of
+        the batch AABB are pruned — pays when batches are spatially
+        localized (drifting streams)."""
         raise NotImplementedError
 
     def denser_nn_update(self, points, rho_key, q_slots, *,
-                         block: int | None = None):
+                         block: int | None = None,
+                         layout: str | None = None):
         """Def. 2 recomputed for the row subset ``q_slots`` of ``points``.
 
         The streaming delta repair: only rows whose dependent point may have
@@ -200,7 +261,8 @@ class KernelBackend:
         valid = q_slots < n
         q = points[slot_c]
         qk = jnp.where(valid, rho_key[slot_c], jnp.inf)  # +inf key: inert row
-        return self.denser_nn(q, qk, points, rho_key, block=block)
+        return self.denser_nn(q, qk, points, rho_key, block=block,
+                              layout=layout)
 
 
 # ------------------------------------------------------------ jnp reference
@@ -438,20 +500,37 @@ def _denser_nn_halo_jnp(x, x_key, window, w_key, starts, ends, d_cut,
 
 
 class JnpBackend(KernelBackend):
-    """Reference backend: the direct-difference math of the Scan oracle."""
+    """Reference backend: the direct-difference math of the Scan oracle.
+
+    Block-sparse routes (``layout="block-sparse"``) run the jit-built ring
+    worklists of ``kernels.blocksparse`` — bit-identical outputs (same
+    per-tile float expressions, order-independent count sums, lexicographic
+    NN winner), sub-quadratic work under the paper's d_cut assumption.
+    The halo primitives are gather-form — the candidate spans already ARE
+    the grid pruning — so they accept and ignore ``layout``.
+    """
 
     name = "jnp"
     mxu_dense = False
     fused_traceable = True
+    worklist_traceable = True
 
-    def range_count(self, x, y, d_cut, *, block=None):
+    def range_count(self, x, y, d_cut, *, block=None, layout=None):
+        if _sparse(layout):
+            return blocksparse._count_bs_jnp(x, y, None, d_cut)
         return _range_count_jnp(x, y, d_cut, block=block or 512)
 
-    def range_count_delta(self, x, batch, signs, d_cut, *, block=None):
+    def range_count_delta(self, x, batch, signs, d_cut, *, block=None,
+                          layout=None):
+        if _sparse(layout):
+            return blocksparse._count_bs_jnp(x, batch, signs, d_cut,
+                                             signed=True)
         return _range_count_delta_jnp(x, batch, signs, d_cut,
                                       block=block or 512)
 
-    def denser_nn(self, x, x_key, y, y_key, *, block=None):
+    def denser_nn(self, x, x_key, y, y_key, *, block=None, layout=None):
+        if _sparse(layout):
+            return blocksparse._denser_nn_bs_jnp(x, x_key, y, y_key)
         return _denser_nn_jnp(x, x_key, y, y_key, block=block or 512)
 
     def prefix_nn(self, pts_sorted_desc, *, block=None):
@@ -463,23 +542,29 @@ class JnpBackend(KernelBackend):
                               block=block or 512)
 
     def rho_delta(self, x, y, d_cut, *, jitter=None, y_sel_slots=None,
-                  block=None, precision=None, fallback_interest=None):
+                  block=None, precision=None, fallback_interest=None,
+                  layout=None):
         if precision not in (None, "f32"):
             raise ValueError("the jnp backend is the f32 direct-difference "
                              "reference; use a pallas backend for bf16")
-        del fallback_interest  # the lean pass answers every row exactly
+        del fallback_interest  # every row answered exactly on both layouts
         if jitter is None:
             jitter = _default_jitter(x.shape[0])
+        if _sparse(layout):
+            return blocksparse._rho_delta_bs_jnp(x, y, jitter, d_cut,
+                                                 y_sel_slots)
         return _rho_delta_jnp(x, y, jitter, d_cut, y_sel_slots,
                               block=block or 512)
 
     def range_count_halo(self, x, window, starts, ends, d_cut, *,
-                         span_cap, block=None):
+                         span_cap, block=None, layout=None):
+        del layout  # gather form: the spans already prune the candidates
         return _range_count_halo_jnp(x, window, starts, ends, d_cut,
                                      span_cap, block=block or 256)
 
     def denser_nn_halo(self, x, x_key, window, w_key, starts, ends, d_cut, *,
-                       span_cap, block=None):
+                       span_cap, block=None, layout=None):
+        del layout  # gather form: the spans already prune the candidates
         return _denser_nn_halo_jnp(x, x_key, window, w_key, starts, ends,
                                    d_cut, span_cap, block=block or 256)
 
@@ -511,7 +596,16 @@ def _fused_resolve(x, y, rho_key, col_key, topv, topi):
 
 
 class PallasBackend(KernelBackend):
-    """MXU tiled kernels; ``interpret=True`` is the CPU-CI variant."""
+    """MXU tiled kernels; ``interpret=True`` is the CPU-CI variant.
+
+    Block-sparse routes host-build a :class:`blocksparse.FlatWorklist` and
+    hand it to the scalar-prefetched 1-D sweep grid: count primitives get a
+    genuinely pruned grid (kept pairs only), NN primitives a ring-ordered
+    list whose pairs the kernel skips against its live prune radius, and
+    the fused ``rho_delta`` the union of the d_cut prefix and the static
+    k-NN ring.  Host-built means not jit-callable (``worklist_traceable``
+    stays False) — the same contract as the grid build itself.
+    """
 
     mxu_dense = True
 
@@ -519,27 +613,46 @@ class PallasBackend(KernelBackend):
         self.interpret = interpret
         self.name = "pallas-interpret" if interpret else "pallas"
 
-    def range_count(self, x, y, d_cut, *, block=None):
-        return ops.local_density_xy(x, y, d_cut,
-                                    block_n=block or ops.DENSITY_BLOCK_N,
-                                    interpret=self.interpret)
+    def range_count(self, x, y, d_cut, *, block=None, layout=None):
+        bn = block or ops.DENSITY_BLOCK_N
+        wl = None
+        if _sparse(layout):
+            _require_host("range_count", x, y)
+            wl = blocksparse.build_flat_worklist(
+                x, y, d_cut, block_n=bn, block_m=ops.DENSITY_BLOCK_M,
+                count=True)
+        return ops.local_density_xy(x, y, d_cut, block_n=bn,
+                                    interpret=self.interpret, worklist=wl)
 
-    def range_count_delta(self, x, batch, signs, d_cut, *, block=None):
-        return ops.local_density_delta(x, batch, signs, d_cut,
-                                       block_n=block or ops.DENSITY_BLOCK_N,
-                                       interpret=self.interpret)
+    def range_count_delta(self, x, batch, signs, d_cut, *, block=None,
+                          layout=None):
+        bn = block or ops.DENSITY_BLOCK_N
+        wl = None
+        if _sparse(layout):
+            _require_host("range_count_delta", x, batch)
+            wl = blocksparse.build_flat_worklist(
+                x, batch, d_cut, block_n=bn, block_m=ops.DENSITY_BLOCK_M,
+                count=True)
+        return ops.local_density_delta(x, batch, signs, d_cut, block_n=bn,
+                                       interpret=self.interpret, worklist=wl)
 
-    def denser_nn(self, x, x_key, y, y_key, *, block=None):
-        return ops.dependent_masked(x, x_key, y, y_key,
-                                    block_n=min(block or 128, 1024),
-                                    interpret=self.interpret)
+    def denser_nn(self, x, x_key, y, y_key, *, block=None, layout=None):
+        bn = min(block or 128, 1024)
+        wl = None
+        if _sparse(layout):
+            _require_host("denser_nn", x, y)
+            wl = blocksparse.build_flat_worklist(
+                x, y, None, block_n=bn, block_m=256, count=False, nn="best1")
+        return ops.dependent_masked(x, x_key, y, y_key, block_n=bn,
+                                    interpret=self.interpret, worklist=wl)
 
     def prefix_nn(self, pts_sorted_desc, *, block=None):
         return ops.dependent_prefix(pts_sorted_desc, block=block or 256,
                                     interpret=self.interpret)
 
     def rho_delta(self, x, y, d_cut, *, jitter=None, y_sel_slots=None,
-                  block=None, precision=None, fallback_interest=None):
+                  block=None, precision=None, fallback_interest=None,
+                  layout=None):
         """One tile sweep (count + unmasked kept-k), direct-diff epilogue,
         then one small masked-NN pass for the unresolved tail.
 
@@ -561,11 +674,32 @@ class PallasBackend(KernelBackend):
         if y_sel_slots is not None:
             nn_sel = jnp.zeros((y.shape[0],),
                                jnp.float32).at[y_sel_slots].set(1.0)
+        bn = block or ops.DENSITY_BLOCK_N
+        wl = None
+        if _sparse(layout):
+            _require_host("rho_delta", x, y)
+            # the d_cut prefix (count) union the static kept-k ring (NN):
+            # a pair whose lower bound clears k strictly-closer candidates
+            # can never contribute a kept entry, so pruning it preserves
+            # the kept set bit-for-bit; rows whose true denser-NN lies
+            # beyond the kept-k fall to the existing unresolved fallback
+            sel_counts = None
+            if y_sel_slots is not None:
+                # selection-gated kept-k: the static ring must count only
+                # the admissible (representative) columns per tile
+                nbc = -(-y.shape[0] // ops.DENSITY_BLOCK_M)
+                sel_counts = np.bincount(
+                    np.asarray(y_sel_slots) // ops.DENSITY_BLOCK_M,
+                    minlength=nbc)
+            wl = blocksparse.build_flat_worklist(
+                x, y, d_cut, block_n=bn, block_m=ops.DENSITY_BLOCK_M,
+                count=True, nn="topk", k=ops.FUSED_TOPK,
+                nn_col_counts=sel_counts)
         cnt, topv, topi = ops.fused_sweep(x, y, d_cut, nn_sel=nn_sel,
                                           precision=precision,
-                                          block_n=block or
-                                          ops.DENSITY_BLOCK_N,
-                                          interpret=self.interpret)
+                                          block_n=bn,
+                                          interpret=self.interpret,
+                                          worklist=wl)
         rho = cnt
         rho_key = rho + jitter
         if y_sel_slots is None:
@@ -593,20 +727,38 @@ class PallasBackend(KernelBackend):
         return rho, rho_key, delta, parent
 
     def range_count_halo(self, x, window, starts, ends, d_cut, *,
-                         span_cap, block=None):
+                         span_cap, block=None, layout=None):
         del span_cap  # dense span-masked tiles: no gather width needed
-        return ops.halo_density(x, window, starts, ends, d_cut,
-                                block_n=block or ops.DENSITY_BLOCK_N,
-                                interpret=self.interpret)
+        bn = block or ops.DENSITY_BLOCK_N
+        wl = None
+        if _sparse(layout):
+            _require_host("range_count_halo", x, window)
+            wl = blocksparse.build_flat_worklist(
+                x, window, d_cut, block_n=bn, block_m=ops.DENSITY_BLOCK_M,
+                count=True, starts=starts, ends=ends)
+        return ops.halo_density(x, window, starts, ends, d_cut, block_n=bn,
+                                interpret=self.interpret, worklist=wl)
 
     def denser_nn_halo(self, x, x_key, window, w_key, starts, ends, d_cut, *,
-                       span_cap, block=None):
+                       span_cap, block=None, layout=None):
         del span_cap
+        bn = min(block or 128, 1024)
+        wl = None
+        if _sparse(layout):
+            _require_host("denser_nn_halo", x, window)
+            # halo NN is d_cut-bounded (stencil semantics), so the best-1
+            # ring prunes statically by lb <= d_cut^2 AND span reach
+            wl = blocksparse.build_flat_worklist(
+                x, window, d_cut, block_n=bn, block_m=ops.DENSITY_BLOCK_M,
+                count=False, nn="best1", nn_dcut=True,
+                starts=starts, ends=ends)
         return ops.halo_dependent(x, x_key, window, w_key, starts, ends,
-                                  d_cut, block_n=min(block or 128, 1024),
-                                  interpret=self.interpret)
+                                  d_cut, block_n=bn,
+                                  interpret=self.interpret, worklist=wl)
 
-    def denser_nn_update(self, points, rho_key, q_slots, *, block=None):
+    def denser_nn_update(self, points, rho_key, q_slots, *, block=None,
+                         layout=None):
+        del layout  # the fused-gather kernel is already subset-shaped
         return ops.dependent_masked_gather(points, rho_key, q_slots,
                                            block_n=min(block or 128, 1024),
                                            interpret=self.interpret)

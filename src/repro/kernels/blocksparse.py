@@ -1,0 +1,457 @@
+"""Block-sparse tile worklists: grid-pruned sub-quadratic DPC sweeps.
+
+The dense engine visits every (row-tile x col-tile) pair of the distance
+grid — O(n^2) tile work regardless of d_cut.  Under the paper's d_cut
+assumption (average rho in the tens) almost all of those pairs are provably
+empty: when points are laid out in grid-sorted order (``core.grid``'s
+(candidate-cell, grouping-cell) sort) each kernel tile covers a compact
+region of space, so a per-tile axis-aligned bounding box gives a cheap lower
+bound on every pairwise distance the tile pair could produce.  This module
+owns that pruning logic once, in three forms:
+
+* **pair bounds** — per-tile AABBs (pad rows masked) and the conservative
+  min/max inter-tile squared distances.  Lower bounds are shrunk and upper
+  bounds grown by a few ulps (``LB_SHRINK`` / ``UB_GROW``) so f32 rounding of
+  the bound arithmetic can never out-round the kernels' own f32 distance
+  evaluation — pruning decisions are exact, bit-parity with the dense sweep
+  is preserved (tested on tie-heavy lattice data).
+
+* **jit-built ring worklists** (the jnp backend) — the (nbr, nbc) bound
+  matrix is sorted ascending per row tile; count accumulators walk the
+  prefix with ``lb <= d_cut^2`` and NN accumulators walk the ring with a
+  ``lax.while_loop`` that stops once the next lower bound exceeds the row
+  tile's worst current candidate (the progressively-shrinking prune radius).
+  Everything is traced — shapes depend only on tile counts — so the
+  block-sparse jnp primitives stay jit/shard_map-safe (``rho_delta``
+  remains ``fused_traceable``) and the *work* is data-proportional because
+  ``while_loop`` trip counts are runtime values.
+
+* **host-built flat worklists** (the pallas backends) — the kept tile pairs
+  flatten into a scalar-prefetched (wi, wj, first-visit, in-cut) table that
+  drives a 1-D ``pallas_call`` grid (``sweep.tile_sweep``); the grid size IS
+  the kept-pair count for count primitives, while NN primitives keep a
+  ring-ordered list and skip tiles in-kernel against the live accumulator
+  (``best1``: the current best; ``topk``: the worst kept kth — statically
+  pre-pruned by the k-nearest upper-bound radius, which is exact because a
+  tile whose lower bound clears k strictly-closer candidates can never
+  contribute a kept entry).
+
+Every builder force-keeps at least one pair per row tile so output blocks
+are always initialized, and all-in-one-cell data degenerates to the dense
+worklist (nothing prunes; the engine behaves exactly as ``worklist=None``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+# Conservative slack on the f32 bound arithmetic: shrink lower bounds / grow
+# upper bounds by ~10 ulp-equivalents so a bound can never out-round the
+# kernel's own f32 distance (pruning stays exact; costs a few extra tiles).
+LB_SHRINK = 1.0 - 1e-5
+UB_GROW = 1.0 + 1e-5
+
+# Default block-sparse tile shape (jnp ring sweeps).  Smaller row tiles than
+# the dense engine: the ring early-exit is gated by the worst row in the
+# tile and the AABB tightens with fewer points, which buys more pruning than
+# the larger-tile dispatch amortization buys throughput (measured on the
+# 64k acceptance shape: (128, 256) beats (256, 256) and (512, 512)).
+BS_BLOCK_N = 128
+BS_BLOCK_M = 256
+
+
+def _pad_inf(x: jnp.ndarray, block: int) -> jnp.ndarray:
+    n = x.shape[0]
+    npad = -(-n // block) * block
+    return jnp.pad(x, ((0, npad - n), (0, 0)), constant_values=jnp.inf)
+
+
+def tile_bounds(xp: jnp.ndarray, n_valid: int, block: int):
+    """Per-tile AABB (lo, hi) of padded points, pad rows masked out.
+
+    Empty (all-pad) tiles report (lo=+inf, hi=-inf), which makes every bound
+    against them +inf — they prune away wherever pruning is legal and stay
+    inert (infinite distances) wherever it is not.
+    """
+    N, d = xp.shape
+    nb = N // block
+    valid = (jnp.arange(N) < n_valid).reshape(nb, block)[..., None]
+    xt = xp.reshape(nb, block, d)
+    lo = jnp.min(jnp.where(valid, xt, jnp.inf), axis=1)
+    hi = jnp.max(jnp.where(valid, xt, -jnp.inf), axis=1)
+    return lo, hi
+
+
+def pair_lower_bounds(rlo, rhi, clo, chi) -> jnp.ndarray:
+    """(nbr, nbc) conservative min inter-AABB squared distance (shrunk)."""
+    gap = jnp.maximum(jnp.maximum(clo[None, :, :] - rhi[:, None, :],
+                                  rlo[:, None, :] - chi[None, :, :]), 0.0)
+    return jnp.sum(gap * gap, axis=-1) * LB_SHRINK
+
+
+def pair_upper_bounds(rlo, rhi, clo, chi) -> jnp.ndarray:
+    """(nbr, nbc) conservative max inter-AABB squared distance (grown).
+
+    +inf whenever either tile is empty (its degenerate box has lo > hi).
+    """
+    reach = jnp.maximum(jnp.maximum(chi[None, :, :] - rlo[:, None, :],
+                                    rhi[:, None, :] - clo[None, :, :]), 0.0)
+    ub = jnp.sum(reach * reach, axis=-1) * UB_GROW
+    empty_r = jnp.any(rlo > rhi, axis=-1)
+    empty_c = jnp.any(clo > chi, axis=-1)
+    return jnp.where(empty_r[:, None] | empty_c[None, :], jnp.inf, ub)
+
+
+def _ring(x_pad, nx, y_pad, ny, bn: int, bm: int):
+    """Ascending-lb ring order per row tile: (order, lbs) of shape
+    (nbr, nbc).  Pure traced math — the jnp worklist is jit-built."""
+    rlo, rhi = tile_bounds(x_pad, nx, bn)
+    clo, chi = tile_bounds(y_pad, ny, bm)
+    lb = pair_lower_bounds(rlo, rhi, clo, chi)
+    order = jnp.argsort(lb, axis=1).astype(jnp.int32)
+    lbs = jnp.take_along_axis(lb, order, axis=1)
+    return order, lbs
+
+
+# =====================================================================
+# jnp block-sparse primitives (direct-difference; bit-parity with the
+# dense jnp engine — same per-tile float expressions, order-independent
+# count sums, explicit lexicographic (d2, col) NN tie-break)
+# =====================================================================
+@partial(jax.jit, static_argnames=("bn", "bm", "signed"))
+def _count_bs_jnp(x, y, weights, d_cut, bn: int = BS_BLOCK_N,
+                  bm: int = BS_BLOCK_M, signed: bool = False):
+    """Block-sparse (optionally signed) range count, x rows over y columns.
+
+    Walks only the ascending-lb prefix with lb <= d_cut^2 per row tile
+    (``while_loop``: work is proportional to the kept pairs, not the grid).
+    Integer/sign sums are order-independent, so the result is bit-identical
+    to the dense jnp range count.
+    """
+    n, d = x.shape
+    m = y.shape[0]
+    xp = _pad_inf(x, bn)
+    yp = _pad_inf(y, bm)
+    nbr, nbc = xp.shape[0] // bn, yp.shape[0] // bm
+    order, lbs = _ring(xp, n, yp, m, bn, bm)
+    d2cut = jnp.asarray(d_cut, jnp.float32) ** 2
+    kcut = jnp.sum(lbs <= d2cut, axis=1).astype(jnp.int32)
+    if signed:
+        wp = jnp.pad(weights.astype(jnp.float32), (0, nbc * bm - m),
+                     constant_values=0.0)
+
+    def row_tile(i):
+        rows = jax.lax.dynamic_slice_in_dim(xp, i * bn, bn, 0)
+        ord_i, kc = order[i], kcut[i]
+
+        def body(c):
+            p, acc = c
+            j = ord_i[p]
+            cols = jax.lax.dynamic_slice_in_dim(yp, j * bm, bm, 0)
+            d2 = jnp.sum((rows[:, None, :] - cols[None, :, :]) ** 2, -1)
+            if signed:
+                s = jax.lax.dynamic_slice_in_dim(wp, j * bm, bm, 0)
+                upd = jnp.sum(jnp.where(d2 < d2cut, s[None, :], 0.0), axis=1)
+            else:
+                upd = jnp.sum(d2 < d2cut, axis=1).astype(jnp.float32)
+            return p + 1, acc + upd
+
+        _, acc = jax.lax.while_loop(lambda c: c[0] < kc, body,
+                                    (jnp.int32(0),
+                                     jnp.zeros((bn,), jnp.float32)))
+        return acc
+
+    cnt = jax.lax.map(row_tile, jnp.arange(nbr)).reshape(-1)[:n]
+    return cnt
+
+
+def _nn_ring_rows(xp, rkp, yp, ckp, n, order, lbs, bn: int, bm: int):
+    """One block-sparse masked-NN row-tile sweep (the shared Def.-2 core).
+
+    Ring order with a runtime early-exit: stop once the next tile's lower
+    bound strictly exceeds the worst current best among the tile's valid
+    rows (a bound can only be *conservative*, so every skipped pair is
+    strictly worse for every row — exact, ties included).  Tracks the
+    lowest winning *tile*, then recovers the argmin inside it with the same
+    float ops on the same operands — bitwise-equal d2, hence the dense
+    engine's lexicographic (d2, col) winner.
+    """
+    nbc = yp.shape[0] // bm
+    int_max = jnp.iinfo(jnp.int32).max
+
+    def row_tile(i):
+        rows = jax.lax.dynamic_slice_in_dim(xp, i * bn, bn, 0)
+        rrk = jax.lax.dynamic_slice_in_dim(rkp, i * bn, bn, 0)
+        rvalid = (i * bn + jnp.arange(bn)) < n
+        ord_i, lbs_i = order[i], lbs[i]
+
+        def cond(c):
+            p, best, _ = c
+            worst = jnp.max(jnp.where(rvalid, best, -jnp.inf))
+            return (p < nbc) & (lbs_i[jnp.minimum(p, nbc - 1)] <= worst)
+
+        def body(c):
+            p, best, jwin = c
+            j = ord_i[p]
+            cols = jax.lax.dynamic_slice_in_dim(yp, j * bm, bm, 0)
+            crk = jax.lax.dynamic_slice_in_dim(ckp, j * bm, bm, 0)
+            d2 = jnp.sum((rows[:, None, :] - cols[None, :, :]) ** 2, -1)
+            cand = jnp.min(jnp.where(crk[None, :] > rrk[:, None], d2,
+                                     jnp.inf), axis=1)
+            better = cand < best
+            tie = (cand == best) & jnp.isfinite(cand) & (j < jwin)
+            return (p + 1, jnp.where(better, cand, best),
+                    jnp.where(better | tie, j, jwin))
+
+        _, best, jwin = jax.lax.while_loop(
+            cond, body, (jnp.int32(0), jnp.full((bn,), jnp.inf),
+                         jnp.full((bn,), int_max, jnp.int32)))
+        # recover the argmin inside each row's lowest winning tile (same
+        # float ops on the same operands -> bitwise-equal d2 -> the dense
+        # sweep's lowest-index winner on exact ties)
+        jw = jnp.minimum(jwin, nbc - 1)
+        cidx = jw[:, None] * bm + jnp.arange(bm)[None, :]
+        cols = yp[cidx]
+        crk = ckp[cidx]
+        d2r = jnp.sum((rows[:, None, :] - cols) ** 2, -1)
+        d2m = jnp.where(crk > rrk[:, None], d2r, jnp.inf)
+        jloc = jnp.argmin(d2m, axis=1)
+        parent = jnp.where(jnp.isfinite(best),
+                           cidx[jnp.arange(bn), jloc], -1)
+        return jnp.sqrt(best), parent
+
+    return row_tile
+
+
+@partial(jax.jit, static_argnames=("bn", "bm"))
+def _denser_nn_bs_jnp(x, x_key, y, y_key, bn: int = BS_BLOCK_N,
+                      bm: int = BS_BLOCK_M):
+    """Block-sparse strictly-denser NN (Def. 2), ring-pruned."""
+    n, d = x.shape
+    m = y.shape[0]
+    xp = _pad_inf(x, bn)
+    yp = _pad_inf(y, bm)
+    nbr = xp.shape[0] // bn
+    order, lbs = _ring(xp, n, yp, m, bn, bm)
+    rkp = jnp.pad(x_key.astype(jnp.float32), (0, xp.shape[0] - n),
+                  constant_values=jnp.inf)
+    ckp = jnp.pad(y_key.astype(jnp.float32), (0, yp.shape[0] - m),
+                  constant_values=-jnp.inf)
+    row_tile = _nn_ring_rows(xp, rkp, yp, ckp, n, order, lbs, bn, bm)
+    delta, parent = jax.lax.map(row_tile, jnp.arange(nbr))
+    return (delta.reshape(-1)[:n],
+            parent.reshape(-1)[:n].astype(jnp.int32))
+
+
+@partial(jax.jit, static_argnames=("bn", "bm"))
+def _rho_delta_bs_jnp(x, y, jitter, d_cut, y_sel_slots=None,
+                      bn: int = BS_BLOCK_N, bm: int = BS_BLOCK_M):
+    """Block-sparse fused rho + delta, one jit (jit-built worklist).
+
+    The count pass walks each row tile's lb <= d_cut^2 ring prefix; the NN
+    pass walks the same ring with the runtime prune radius.  Bit-identical
+    to the dense ``_rho_delta_jnp`` (order-independent counts; lexicographic
+    NN winner recovery).
+    """
+    n, d = x.shape
+    m = y.shape[0]
+    xp = _pad_inf(x, bn)
+    yp = _pad_inf(y, bm)
+    nbr = xp.shape[0] // bn
+    order, lbs = _ring(xp, n, yp, m, bn, bm)
+    d2cut = jnp.asarray(d_cut, jnp.float32) ** 2
+    kcut = jnp.sum(lbs <= d2cut, axis=1).astype(jnp.int32)
+
+    def row_count(i):
+        rows = jax.lax.dynamic_slice_in_dim(xp, i * bn, bn, 0)
+        ord_i, kc = order[i], kcut[i]
+
+        def body(c):
+            p, acc = c
+            j = ord_i[p]
+            cols = jax.lax.dynamic_slice_in_dim(yp, j * bm, bm, 0)
+            d2 = jnp.sum((rows[:, None, :] - cols[None, :, :]) ** 2, -1)
+            return p + 1, acc + jnp.sum(d2 < d2cut, axis=1).astype(jnp.int32)
+
+        _, acc = jax.lax.while_loop(lambda c: c[0] < kc, body,
+                                    (jnp.int32(0),
+                                     jnp.zeros((bn,), jnp.int32)))
+        return acc
+
+    cnt = jax.lax.map(row_count, jnp.arange(nbr)).reshape(-1)[:n]
+    rho = cnt.astype(jnp.float32)
+    rho_key = rho + jitter
+    if y_sel_slots is None:
+        col_key = rho_key
+    else:
+        col_key = jnp.full((m,), -jnp.inf,
+                           jnp.float32).at[y_sel_slots].set(rho_key)
+    rkp = jnp.pad(rho_key, (0, xp.shape[0] - n), constant_values=jnp.inf)
+    ckp = jnp.pad(col_key, (0, yp.shape[0] - m), constant_values=-jnp.inf)
+    row_nn = _nn_ring_rows(xp, rkp, yp, ckp, n, order, lbs, bn, bm)
+    delta, parent = jax.lax.map(row_nn, jnp.arange(nbr))
+    return (rho, rho_key, delta.reshape(-1)[:n],
+            parent.reshape(-1)[:n].astype(jnp.int32))
+
+
+# =====================================================================
+# host-built flat worklists (the pallas scalar-prefetch grid)
+# =====================================================================
+@dataclass(frozen=True)
+class FlatWorklist:
+    """A kept tile-pair list driving one 1-D ``tile_sweep`` grid.
+
+    ``meta`` rows: [row_tile, col_tile, first-visit flag, in-d_cut flag];
+    entries sorted by (row_tile, lb) so output blocks are revisited
+    consecutively (the Mosaic accumulation contract) in ring order.
+    """
+
+    meta: jnp.ndarray          # (4, W) int32
+    lb: jnp.ndarray            # (W,) f32 — the in-kernel NN prune radius
+    n_kept: int                # worklist entries (incl. forced keeps)
+    n_total: int               # nbr * nbc dense pair count
+
+    @property
+    def pruned_frac(self) -> float:
+        return 1.0 - self.n_kept / max(self.n_total, 1)
+
+
+def _host_bounds(arr: np.ndarray, block: int):
+    n, d = arr.shape
+    nb = -(-n // block)
+    pad = np.full((nb * block, d), np.inf, np.float32)
+    pad[:n] = arr
+    valid = (np.arange(nb * block) < n).reshape(nb, block)[..., None]
+    xt = pad.reshape(nb, block, d)
+    lo = np.where(valid, xt, np.inf).min(axis=1)
+    hi = np.where(valid, xt, -np.inf).max(axis=1)
+    return lo, hi
+
+
+def host_pair_bounds(x: np.ndarray, y: np.ndarray, block_n: int,
+                     block_m: int):
+    """Host (numpy) mirror of the device bound math: (lb, ub) matrices."""
+    rlo, rhi = _host_bounds(np.asarray(x, np.float32), block_n)
+    clo, chi = _host_bounds(np.asarray(y, np.float32), block_m)
+    gap = np.maximum(np.maximum(clo[None] - rhi[:, None],
+                                rlo[:, None] - chi[None]), 0.0)
+    lb = (gap * gap).sum(-1) * LB_SHRINK
+    reach = np.maximum(np.maximum(chi[None] - rlo[:, None],
+                                  rhi[:, None] - clo[None]), 0.0)
+    ub = (reach * reach).sum(-1) * UB_GROW
+    empty_r = (rlo > rhi).any(-1)
+    empty_c = (clo > chi).any(-1)
+    ub[empty_r[:, None] | empty_c[None, :]] = np.inf
+    return lb.astype(np.float32), ub.astype(np.float32)
+
+
+def _knn_radius(ub: np.ndarray, col_counts: np.ndarray, k: int) -> np.ndarray:
+    """Per-row-tile static k-NN prune radius: the smallest upper bound v
+    such that tiles with ub <= v hold at least k candidate points.  A pair
+    with lb > v is provably outside every row's kept-k (k strictly closer
+    candidates exist), so pruning by it preserves bit-parity."""
+    nbr, nbc = ub.shape
+    ord_ub = np.argsort(ub, axis=1)
+    ub_sorted = np.take_along_axis(ub, ord_ub, axis=1)
+    cnt_sorted = col_counts[ord_ub]
+    cum = np.cumsum(cnt_sorted, axis=1)
+    reach = np.argmax(cum >= k, axis=1)           # first prefix with >= k
+    enough = cum[:, -1] >= k
+    radius = ub_sorted[np.arange(nbr), reach]
+    return np.where(enough, radius, np.inf).astype(np.float32)
+
+
+def build_flat_worklist(x, y, d_cut=None, *, block_n: int, block_m: int,
+                        count: bool = True, nn: str | None = None,
+                        k: int = 0, nn_dcut: bool = False,
+                        nn_col_counts=None,
+                        starts=None, ends=None) -> FlatWorklist:
+    """Host-built kept-pair worklist for one pallas sweep.
+
+    Kept pairs are the union of what each requested accumulator can touch:
+    ``count`` keeps lb <= d_cut^2; ``nn='topk'`` adds the static k-NN ring
+    (see :func:`_knn_radius`; ``nn_col_counts`` overrides the per-col-tile
+    admissible-candidate counts when a selection gate restricts the kept-k,
+    e.g. S-Approx representatives); ``nn='best1'`` keeps every pair unless
+    ``nn_dcut`` bounds the search (halo semantics) — the in-kernel runtime
+    radius does the remaining pruning.  ``starts``/``ends`` (halo spans)
+    additionally drop col tiles no row span reaches.  At least one pair per
+    row tile is force-kept so output blocks always initialize.
+    """
+    x = np.asarray(x, np.float32)
+    y = np.asarray(y, np.float32)
+    n, _ = x.shape
+    m = y.shape[0]
+    nbr, nbc = -(-n // block_n), -(-m // block_m)
+    lb, ub = host_pair_bounds(x, y, block_n, block_m)
+    d2cut = None if d_cut is None else float(d_cut) ** 2
+
+    in_cut = np.zeros((nbr, nbc), bool)
+    keep = np.zeros((nbr, nbc), bool)
+    if count:
+        assert d2cut is not None
+        in_cut = lb <= d2cut
+        keep |= in_cut
+    if nn == "best1":
+        if nn_dcut:
+            assert d2cut is not None
+            keep |= lb <= d2cut
+        else:
+            keep[:] = True
+    elif nn == "topk":
+        if nn_col_counts is None:
+            col_counts = np.minimum(block_m, np.maximum(
+                0, m - np.arange(nbc) * block_m))
+        else:
+            col_counts = np.asarray(nn_col_counts)
+        radius = _knn_radius(ub, col_counts, max(k, 1))
+        keep |= lb <= radius[:, None]
+
+    if starts is not None:
+        st = np.asarray(starts)
+        en = np.asarray(ends)
+        pad_rows = nbr * block_n - n
+        if pad_rows:
+            st = np.pad(st, ((0, pad_rows), (0, 0)))
+            en = np.pad(en, ((0, pad_rows), (0, 0)))
+        live = en > st
+        smin = np.where(live, st, np.iinfo(np.int64).max) \
+            .reshape(nbr, block_n, -1).min(axis=(1, 2))
+        emax = np.where(live, en, np.iinfo(np.int64).min) \
+            .reshape(nbr, block_n, -1).max(axis=(1, 2))
+        jlo = np.arange(nbc) * block_m
+        overlap = (smin[:, None] < jlo[None, :] + block_m) & \
+                  (emax[:, None] > jlo[None, :])
+        keep &= overlap
+        in_cut &= overlap
+
+    # force-keep the min-lb pair of every row tile (output block init)
+    jmin = np.argmin(lb, axis=1)
+    keep[np.arange(nbr), jmin] = True
+
+    wi, wj = np.nonzero(keep)
+    wl = lb[wi, wj]
+    sort = np.lexsort((wl, wi))
+    wi, wj, wl = wi[sort], wj[sort], wl[sort]
+    first = np.zeros(len(wi), np.int32)
+    first[np.unique(wi, return_index=True)[1]] = 1
+    meta = np.stack([wi, wj, first,
+                     in_cut[wi, wj].astype(np.int64)]).astype(np.int32)
+    return FlatWorklist(meta=jnp.asarray(meta),
+                        lb=jnp.asarray(wl.astype(np.float32)),
+                        n_kept=len(wi), n_total=nbr * nbc)
+
+
+def worklist_stats(x, y, d_cut, *, block_n: int = BS_BLOCK_N,
+                   block_m: int = BS_BLOCK_M) -> dict:
+    """Pruning statistics for benchmarks: how much of the dense tile grid
+    the d_cut-bounded count sweep keeps (``benchmarks/scaling_dcut.py``
+    records this next to runtime so the sensitivity plot shows *why*)."""
+    wl = build_flat_worklist(x, y, d_cut, block_n=block_n, block_m=block_m,
+                             count=True)
+    return {"tiles_total": wl.n_total, "tiles_kept": wl.n_kept,
+            "pruned_tile_frac": wl.pruned_frac}

@@ -27,7 +27,7 @@ from .sweep import (DEFAULT_BLOCK_M, DEFAULT_BLOCK_N, PAD_COORD,  # noqa: F401
 def range_count(x: jnp.ndarray, y: jnp.ndarray, d_cut,
                 block_n: int = DEFAULT_BLOCK_N, block_m: int = DEFAULT_BLOCK_M,
                 interpret: bool = False,
-                precision: str = "f32") -> jnp.ndarray:
+                precision: str = "f32", worklist=None) -> jnp.ndarray:
     """For each row of x (n, d): |{j : ||x_i - y_j|| < d_cut}| over y (m, d).
 
     x and y must already be padded to multiples of block_n/block_m with
@@ -36,7 +36,10 @@ def range_count(x: jnp.ndarray, y: jnp.ndarray, d_cut,
     """
     spec = SweepSpec(block_n=block_n, block_m=block_m, count=True,
                      precision=precision)
-    (cnt,) = tile_sweep(spec, x, y, d_cut, interpret=interpret)
+    wm, wb = (worklist.meta, worklist.lb) if worklist is not None else (None,
+                                                                        None)
+    (cnt,) = tile_sweep(spec, x, y, d_cut, wl_meta=wm, wl_lb=wb,
+                        interpret=interpret)
     return cnt
 
 
@@ -44,7 +47,7 @@ def range_count_signed(x: jnp.ndarray, y: jnp.ndarray, signs: jnp.ndarray,
                        d_cut, block_n: int = DEFAULT_BLOCK_N,
                        block_m: int = DEFAULT_BLOCK_M,
                        interpret: bool = False,
-                       precision: str = "f32") -> jnp.ndarray:
+                       precision: str = "f32", worklist=None) -> jnp.ndarray:
     """For each row of x: sum_j signs[j] * [||x_i - y_j|| < d_cut], f32.
 
     The streaming rho-repair kernel — every surviving point's density changes
@@ -55,7 +58,10 @@ def range_count_signed(x: jnp.ndarray, y: jnp.ndarray, signs: jnp.ndarray,
     """
     spec = SweepSpec(block_n=block_n, block_m=block_m, count=True,
                      signed=True, precision=precision)
-    (cnt,) = tile_sweep(spec, x, y, d_cut, signs=signs, interpret=interpret)
+    wm, wb = (worklist.meta, worklist.lb) if worklist is not None else (None,
+                                                                        None)
+    (cnt,) = tile_sweep(spec, x, y, d_cut, signs=signs, wl_meta=wm, wl_lb=wb,
+                        interpret=interpret)
     return cnt
 
 
@@ -64,7 +70,7 @@ def range_count_halo(x: jnp.ndarray, window: jnp.ndarray,
                      block_n: int = DEFAULT_BLOCK_N,
                      block_m: int = DEFAULT_BLOCK_M,
                      interpret: bool = False,
-                     precision: str = "f32") -> jnp.ndarray:
+                     precision: str = "f32", worklist=None) -> jnp.ndarray:
     """Range count against per-row ragged [start, end) windows (halo tiles).
 
     The distributed halo layout: each x-row counts only the window columns
@@ -74,6 +80,8 @@ def range_count_halo(x: jnp.ndarray, window: jnp.ndarray,
     """
     spec = SweepSpec(block_n=block_n, block_m=block_m, count=True, span=True,
                      span_s=starts.shape[1], precision=precision)
+    wm, wb = (worklist.meta, worklist.lb) if worklist is not None else (None,
+                                                                        None)
     (cnt,) = tile_sweep(spec, x, window, d_cut, starts=starts, ends=ends,
-                        interpret=interpret)
+                        wl_meta=wm, wl_lb=wb, interpret=interpret)
     return cnt

@@ -41,12 +41,15 @@ def prefix_min_dist(pts: jnp.ndarray, block: int = DEFAULT_BLOCK,
 
 def masked_min_dist(x, x_key, y, y_key, block_n: int = 128,
                     block_m: int = DEFAULT_BLOCK, interpret: bool = False,
-                    refine_k: int = REFINE_TOPK, precision: str = "f32"):
+                    refine_k: int = REFINE_TOPK, precision: str = "f32",
+                    worklist=None):
     """NN among y-rows with y_key > x_key, per x-row (global fallback)."""
     spec = SweepSpec(block_n=block_n, block_m=block_m, nn="best1", key=True,
                      refine_k=refine_k, precision=precision)
+    wm, wb = (worklist.meta, worklist.lb) if worklist is not None else (None,
+                                                                       None)
     best, arg = tile_sweep(spec, x, y, x_key=x_key, y_key=y_key,
-                           interpret=interpret)
+                           wl_meta=wm, wl_lb=wb, interpret=interpret)
     return jnp.sqrt(best), arg
 
 
@@ -54,7 +57,7 @@ def masked_min_dist_halo(x, x_key, window, w_key, starts, ends, d_cut,
                          block_n: int = 128, block_m: int = DEFAULT_BLOCK,
                          interpret: bool = False,
                          refine_k: int = REFINE_TOPK,
-                         precision: str = "f32"):
+                         precision: str = "f32", worklist=None):
     """Strictly-denser NN within d_cut over per-row ragged halo windows.
 
     The distributed delta phase: candidates are the window columns inside the
@@ -66,6 +69,9 @@ def masked_min_dist_halo(x, x_key, window, w_key, starts, ends, d_cut,
     spec = SweepSpec(block_n=block_n, block_m=block_m, nn="best1", key=True,
                      span=True, span_s=starts.shape[1], nn_dcut=True,
                      refine_k=refine_k, precision=precision)
+    wm, wb = (worklist.meta, worklist.lb) if worklist is not None else (None,
+                                                                       None)
     best, arg = tile_sweep(spec, x, window, d_cut, x_key=x_key, y_key=w_key,
-                           starts=starts, ends=ends, interpret=interpret)
+                           starts=starts, ends=ends, wl_meta=wm, wl_lb=wb,
+                           interpret=interpret)
     return jnp.sqrt(best), arg

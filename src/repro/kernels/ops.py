@@ -39,7 +39,8 @@ DENSITY_BLOCK_M = 512
 def local_density_xy(x: jnp.ndarray, y: jnp.ndarray, d_cut, *,
                      block_n: int = DENSITY_BLOCK_N,
                      block_m: int = DENSITY_BLOCK_M,
-                     interpret: bool | None = None) -> jnp.ndarray:
+                     interpret: bool | None = None,
+                     worklist=None) -> jnp.ndarray:
     """Kernel-backed rectangular range count: per x-row count of y within
     d_cut (the backend-layer form of Def. 1; query != candidate set)."""
     if interpret is None:
@@ -48,7 +49,7 @@ def local_density_xy(x: jnp.ndarray, y: jnp.ndarray, d_cut, *,
     xp = pad_points(x.astype(jnp.float32), block_n)
     yp = pad_points(y.astype(jnp.float32), block_m)
     cnt = range_count(xp, yp, d_cut, block_n=block_n, block_m=block_m,
-                      interpret=interpret)
+                      interpret=interpret, worklist=worklist)
     return cnt[:n].astype(jnp.float32)
 
 
@@ -64,7 +65,8 @@ def local_density(points: jnp.ndarray, d_cut, *,
 def local_density_delta(x: jnp.ndarray, batch: jnp.ndarray,
                         signs: jnp.ndarray, d_cut, *,
                         block_n: int = DENSITY_BLOCK_N,
-                        interpret: bool | None = None) -> jnp.ndarray:
+                        interpret: bool | None = None,
+                        worklist=None) -> jnp.ndarray:
     """Kernel-backed signed range count over a delta batch (streaming rho
     repair): per x-row, (+1 per inserted / -1 per evicted) batch neighbor
     within d_cut, fused in a single tile sweep."""
@@ -75,7 +77,8 @@ def local_density_delta(x: jnp.ndarray, batch: jnp.ndarray,
     bp = pad_points(batch.astype(jnp.float32), DENSITY_BLOCK_M)
     sp = pad_vec(signs.astype(jnp.float32), DENSITY_BLOCK_M, 0.0)
     cnt = range_count_signed(xp, bp, sp, d_cut, block_n=block_n,
-                             block_m=DENSITY_BLOCK_M, interpret=interpret)
+                             block_m=DENSITY_BLOCK_M, interpret=interpret,
+                             worklist=worklist)
     return cnt[:n]
 
 
@@ -91,7 +94,8 @@ def dependent_prefix(points_sorted_desc: jnp.ndarray, *, block: int = 256,
 
 
 def dependent_masked(x, x_key, y, y_key, *, block_n: int = 128,
-                     block_m: int = 256, interpret: bool | None = None):
+                     block_m: int = 256, interpret: bool | None = None,
+                     worklist=None):
     """Kernel-backed masked NN fallback (strictly-denser candidates)."""
     if interpret is None:
         interpret = _on_cpu()
@@ -101,14 +105,16 @@ def dependent_masked(x, x_key, y, y_key, *, block_n: int = 128,
     yp = pad_points(y.astype(jnp.float32), block_m)
     yk = pad_vec(y_key.astype(jnp.float32), block_m, -jnp.inf)
     delta, parent = masked_min_dist(xp, xk, yp, yk, block_n=block_n,
-                                    block_m=block_m, interpret=interpret)
+                                    block_m=block_m, interpret=interpret,
+                                    worklist=worklist)
     return delta[:n], parent[:n]
 
 
 # ------------------------------------------------------ fused rho + delta
 def fused_sweep(x, y, d_cut, *, nn_sel=None, k: int = FUSED_TOPK,
                 block_n: int = DENSITY_BLOCK_N, block_m: int = DENSITY_BLOCK_M,
-                precision: str = "f32", interpret: bool | None = None):
+                precision: str = "f32", interpret: bool | None = None,
+                worklist=None):
     """One tile sweep: per x-row range count over y AND the k nearest
     candidates (expanded-form d2 + global index, unmasked by density — the
     denser-mask resolves in the caller's epilogue once the counts are
@@ -128,8 +134,10 @@ def fused_sweep(x, y, d_cut, *, nn_sel=None, k: int = FUSED_TOPK,
         sel = pad_vec(nn_sel.astype(jnp.float32), block_m, 0.0)
     spec = SweepSpec(block_n=block_n, block_m=block_m, count=True, nn="topk",
                      nn_sel=sel is not None, k=k, precision=precision)
+    wm, wb = (worklist.meta, worklist.lb) if worklist is not None else (None,
+                                                                       None)
     cnt, topv, topi = tile_sweep(spec, xp, yp, d_cut, nn_sel=sel,
-                                 interpret=interpret)
+                                 wl_meta=wm, wl_lb=wb, interpret=interpret)
     return cnt[:n].astype(jnp.float32), topv[:n], topi[:n]
 
 
@@ -137,7 +145,7 @@ def fused_sweep(x, y, d_cut, *, nn_sel=None, k: int = FUSED_TOPK,
 def halo_density(x, window, starts, ends, d_cut, *,
                  block_n: int = DENSITY_BLOCK_N,
                  block_m: int = DENSITY_BLOCK_M,
-                 interpret: bool | None = None):
+                 interpret: bool | None = None, worklist=None):
     """Kernel-backed halo range count: per x-row count of window columns
     inside the row's [start, end) spans and within d_cut."""
     if interpret is None:
@@ -148,13 +156,14 @@ def halo_density(x, window, starts, ends, d_cut, *,
     st = _pad_spans(starts, block_n)
     en = _pad_spans(ends, block_n)
     cnt = range_count_halo(xp, wp, st, en, d_cut, block_n=block_n,
-                           block_m=block_m, interpret=interpret)
+                           block_m=block_m, interpret=interpret,
+                           worklist=worklist)
     return cnt[:n].astype(jnp.float32)
 
 
 def halo_dependent(x, x_key, window, w_key, starts, ends, d_cut, *,
                    block_n: int = 128, block_m: int = DENSITY_BLOCK_M,
-                   interpret: bool | None = None):
+                   interpret: bool | None = None, worklist=None):
     """Kernel-backed halo strictly-denser NN within d_cut.  Returns
     (delta, parent_window_idx, found)."""
     if interpret is None:
@@ -168,7 +177,8 @@ def halo_dependent(x, x_key, window, w_key, starts, ends, d_cut, *,
     en = _pad_spans(ends, block_n)
     delta, parent = masked_min_dist_halo(xp, xk, wp, wk, st, en, d_cut,
                                          block_n=block_n, block_m=block_m,
-                                         interpret=interpret)
+                                         interpret=interpret,
+                                         worklist=worklist)
     found = jnp.isfinite(delta[:n])
     return delta[:n], parent[:n], found
 

@@ -35,6 +35,19 @@ precision           ``'f32'`` — expanded-form distances with an f32 MXU
 signatures as thin instantiations, and ``kernels/ops.py`` adds the padding
 wrappers for the new fused / halo / gathered entry points.
 
+Since the block-sparse mode landed, the sweep grid is **worklist-driven**: a
+1-D ``pallas_call`` grid iterates a scalar-prefetched (row-tile, col-tile,
+first-visit, in-cut) table plus a per-pair lower-bound vector
+(``kernels.blocksparse.FlatWorklist``), so a grid-pruned worklist visits
+only the tile pairs that can matter — the count accumulators honour the
+``in_cut`` flag (pairs within d_cut of the tile AABBs) and the NN
+accumulators skip pairs in-kernel whenever the pair's lower bound exceeds
+the accumulator's current prune radius (best-1: the worst current best;
+kept-k: the worst current kth candidate).  ``worklist=None`` degenerates to
+the dense all-pairs table (every flag live, all bounds zero), so every
+existing ``SweepSpec`` instantiation routes through this one engine
+unchanged.
+
 Also here: ``gather_nn`` — the fused-gather variant of the masked NN for the
 streaming repair path.  The query rows are gathered *inside* the kernel from
 the (VMEM-resident) window table via one-hot matmuls over a doubled column
@@ -47,6 +60,7 @@ from __future__ import annotations
 import functools
 from dataclasses import dataclass
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
@@ -155,24 +169,30 @@ def _extract_topk(d2, base_col: int, k: int):
 def _merge_topk(av, ai, bv, bi, k: int):
     """Merge two (bn, k) candidate lists, keeping the k smallest by (d2, idx).
 
-    ``a`` (the running list, lower global indices) is concatenated first, so
-    the iterated argmin's first-position tie-break preserves the sequential
-    sweep's lowest-index winner on exact distance ties.
+    The tie-break is *explicitly* lexicographic on the global index: each
+    round extracts the minimum value and, among equal-valued entries, the
+    lowest index.  For the dense sweep (tiles arriving in ascending column
+    order) this reproduces the historical first-position behaviour exactly;
+    for a block-sparse worklist (tiles arriving in ring order) it makes the
+    kept set independent of the visit order — the bit-parity contract.
     """
     allv = jnp.concatenate([av, bv], axis=1)                  # (bn, 2k)
     alli = jnp.concatenate([ai, bi], axis=1)
     bn, w = allv.shape
     pos = jax.lax.broadcasted_iota(jnp.int32, (bn, w), 1)
+    int_max = jnp.iinfo(jnp.int32).max
     vals, idxs = [], []
     work = allv
     for _ in range(k):
-        loc = jnp.argmin(work, axis=1).astype(jnp.int32)
-        vals.append(jnp.min(work, axis=1))
-        sel = pos == loc[:, None]
-        # one-hot select (no gather: Mosaic-friendly); exactly one hit
-        idxs.append(jnp.sum(jnp.where(sel, alli, jnp.int32(0)), axis=1,
-                            dtype=jnp.int32))
-        work = jnp.where(sel, jnp.inf, work)
+        m = jnp.min(work, axis=1)
+        hit_v = work == m[:, None]
+        sel_idx = jnp.min(jnp.where(hit_v, alli, int_max), axis=1)
+        vals.append(m)
+        idxs.append(sel_idx)
+        # retire exactly one entry: the first position carrying (m, sel_idx)
+        hit = hit_v & (alli == sel_idx[:, None])
+        first = jnp.min(jnp.where(hit, pos, int_max), axis=1)
+        work = jnp.where(pos == first[:, None], jnp.inf, work)
     return jnp.stack(vals, axis=1), jnp.stack(idxs, axis=1)
 
 
@@ -190,6 +210,8 @@ def _make_sweep_kernel(spec: SweepSpec):
 
     def kernel(*refs):
         it = iter(refs)
+        meta_ref = next(it)               # (4, W) scalar-prefetched worklist
+        lb_ref = next(it)                 # (W,) per-pair lower bounds
         d2s_ref = next(it) if spec.needs_dcut else None
         x_ref = next(it)
         xk_ref = next(it) if spec.key else None
@@ -205,10 +227,11 @@ def _make_sweep_kernel(spec: SweepSpec):
         elif spec.nn == "topk":
             topv_ref, topi_ref = next(it), next(it)
 
-        i = pl.program_id(0)
-        j = pl.program_id(1)
+        p = pl.program_id(0)
+        i = meta_ref[0, p]
+        j = meta_ref[1, p]
 
-        @pl.when(j == 0)
+        @pl.when(meta_ref[2, p] == 1)
         def _init():
             if spec.count:
                 cnt_ref[...] = jnp.zeros_like(cnt_ref[...])
@@ -219,6 +242,22 @@ def _make_sweep_kernel(spec: SweepSpec):
                 topv_ref[...] = jnp.full_like(topv_ref[...], jnp.inf)
                 topi_ref[...] = jnp.full_like(topi_ref[...], -1)
 
+        # per-accumulator liveness: the count honours the worklist's in-cut
+        # flag; the NN accumulators compare the pair's lower bound against
+        # their current prune radius (dense worklists carry lb = 0 and
+        # in_cut = 1 everywhere, so every pair stays live — the degenerate
+        # case reproduces the historical dense sweep bit-for-bit).
+        cnt_live = (meta_ref[3, p] == 1) if spec.count else False
+        if spec.nn == "best1":
+            nn_live = lb_ref[p] <= jnp.max(best_ref[...])
+        elif spec.nn == "topk":
+            nn_live = lb_ref[p] <= jnp.max(topv_ref[...])
+        else:
+            nn_live = False
+        live = cnt_live | nn_live if spec.count and spec.nn else \
+            (cnt_live if spec.count else nn_live)
+
+        @pl.when(live)
         def _compute():
             x = x_ref[...]
             y = y_ref[...]
@@ -236,7 +275,9 @@ def _make_sweep_kernel(spec: SweepSpec):
                                   axis=1)
                 else:
                     cnt = jnp.sum(cmask, axis=1).astype(jnp.int32)
-                cnt_ref[...] += cnt
+                live_cnt = jnp.where(cnt_live, cnt,
+                                     jnp.zeros_like(cnt))
+                cnt_ref[...] += live_cnt
 
             if spec.nn is None:
                 return
@@ -257,92 +298,127 @@ def _make_sweep_kernel(spec: SweepSpec):
 
             if spec.nn == "best1":
                 cand, loc = refine_topk_d2(x, y, d2m, spec.refine_k)
+                cand = jnp.where(nn_live, cand, jnp.inf)
+                gidx = j * bm + loc
+                # lexicographic (d2, col) update: ring-ordered worklists
+                # visit tiles out of column order, and on exact distance
+                # ties the dense sweep's winner is the lowest column
                 better = cand < best_ref[...]
-                best_ref[...] = jnp.where(better, cand, best_ref[...])
-                arg_ref[...] = jnp.where(better, j * bm + loc, arg_ref[...])
+                tie = ((cand == best_ref[...]) & jnp.isfinite(cand)
+                       & (gidx < arg_ref[...]))
+                upd = better | tie
+                best_ref[...] = jnp.where(upd, cand, best_ref[...])
+                arg_ref[...] = jnp.where(upd, gidx, arg_ref[...])
             else:
                 tv, ti = _extract_topk(d2m, j * bm, spec.k)
+                tv = jnp.where(nn_live, tv, jnp.inf)
+                ti = jnp.where(nn_live, ti, -1)
                 mv, mi = _merge_topk(topv_ref[...], topi_ref[...], tv, ti,
                                      spec.k)
                 topv_ref[...] = mv
                 topi_ref[...] = mi
 
-        if spec.prefix:
-            pl.when(j * bm < (i + 1) * bn)(_compute)  # triangular skip
-        else:
-            _compute()
-
     return kernel
+
+
+def _dense_worklist(nbr: int, nbc: int, prefix: bool, block_n: int,
+                    block_m: int):
+    """The worklist=None degenerate case: every pair, row-major, all flags
+    live, zero lower bounds.  Triangular specs pre-prune the upper tiles the
+    2-D grid used to skip with a ``pl.when`` guard (same pairs, same order).
+    Static shapes -> plain numpy, folded into the trace as constants."""
+    wi = np.repeat(np.arange(nbr), nbc)
+    wj = np.tile(np.arange(nbc), nbr)
+    if prefix:
+        kept = wj * block_m < (wi + 1) * block_n
+        wi, wj = wi[kept], wj[kept]
+    first = np.zeros(len(wi), np.int64)
+    first[np.unique(wi, return_index=True)[1]] = 1
+    meta = np.stack([wi, wj, first, np.ones(len(wi), np.int64)])
+    return (jnp.asarray(meta.astype(np.int32)),
+            jnp.zeros((len(wi),), jnp.float32))
 
 
 @functools.partial(jax.jit, static_argnames=("spec", "interpret"))
 def tile_sweep(spec: SweepSpec, x, y, d_cut=None, x_key=None, y_key=None,
-               signs=None, nn_sel=None, starts=None, ends=None, *,
-               interpret: bool = False):
+               signs=None, nn_sel=None, starts=None, ends=None,
+               wl_meta=None, wl_lb=None, *, interpret: bool = False):
     """Run the sweep described by ``spec`` over padded inputs.
 
     Shape contract (as for every kernel here): ``x`` is (n, d) padded to a
     multiple of ``spec.block_n`` with PAD_COORD rows, ``y`` (m, d) padded to
     ``spec.block_m``; per-row/per-column vectors padded to match (keys +inf
     on padded queries / -inf on padded candidates; signs 0; spans empty).
-    Returns the tuple of requested accumulators, in order:
+    ``wl_meta``/``wl_lb`` (``blocksparse.FlatWorklist`` arrays) select the
+    block-sparse tile-pair worklist; ``None`` runs the dense all-pairs
+    sweep.  Returns the tuple of requested accumulators, in order:
     ``count`` (n,), then ``nn`` — (best_d2, arg) or (topv, topi).
     """
     n, d = x.shape
     m, _ = y.shape
     assert n % spec.block_n == 0 and m % spec.block_m == 0
-    grid = (n // spec.block_n, m // spec.block_m)
     bn, bm = spec.block_n, spec.block_m
+    if wl_meta is None:
+        wl_meta, wl_lb = _dense_worklist(n // bn, m // bm, spec.prefix,
+                                         bn, bm)
+    W = wl_meta.shape[1]
 
     args, in_specs = [], []
     if spec.needs_dcut:
         d2cut = (jnp.asarray(d_cut, jnp.float32) ** 2).reshape((1,))
         args.append(d2cut)
-        in_specs.append(pl.BlockSpec((1,), lambda i, j: (0,),
+        in_specs.append(pl.BlockSpec((1,), lambda p, mt, lb: (0,),
                                      memory_space=pltpu.SMEM))
     args.append(x)
-    in_specs.append(pl.BlockSpec((bn, d), lambda i, j: (i, 0)))
+    in_specs.append(pl.BlockSpec((bn, d), lambda p, mt, lb: (mt[0, p], 0)))
     if spec.key:
         args.append(x_key)
-        in_specs.append(pl.BlockSpec((bn,), lambda i, j: (i,)))
+        in_specs.append(pl.BlockSpec((bn,), lambda p, mt, lb: (mt[0, p],)))
     args.append(y)
-    in_specs.append(pl.BlockSpec((bm, d), lambda i, j: (j, 0)))
+    in_specs.append(pl.BlockSpec((bm, d), lambda p, mt, lb: (mt[1, p], 0)))
     if spec.key:
         args.append(y_key)
-        in_specs.append(pl.BlockSpec((bm,), lambda i, j: (j,)))
+        in_specs.append(pl.BlockSpec((bm,), lambda p, mt, lb: (mt[1, p],)))
     if spec.signed:
         args.append(signs.astype(jnp.float32))
-        in_specs.append(pl.BlockSpec((bm,), lambda i, j: (j,)))
+        in_specs.append(pl.BlockSpec((bm,), lambda p, mt, lb: (mt[1, p],)))
     if spec.nn_sel:
         args.append(nn_sel.astype(jnp.float32))
-        in_specs.append(pl.BlockSpec((bm,), lambda i, j: (j,)))
+        in_specs.append(pl.BlockSpec((bm,), lambda p, mt, lb: (mt[1, p],)))
     if spec.span:
         S = spec.span_s
         args += [starts.astype(jnp.int32), ends.astype(jnp.int32)]
-        in_specs += [pl.BlockSpec((bn, S), lambda i, j: (i, 0))] * 2
+        in_specs += [pl.BlockSpec((bn, S),
+                                  lambda p, mt, lb: (mt[0, p], 0))] * 2
 
     out_specs, out_shape = [], []
+    row_spec = pl.BlockSpec((bn,), lambda p, mt, lb: (mt[0, p],))
     if spec.count:
-        out_specs.append(pl.BlockSpec((bn,), lambda i, j: (i,)))
+        out_specs.append(row_spec)
         out_shape.append(jax.ShapeDtypeStruct(
             (n,), jnp.float32 if spec.signed else jnp.int32))
     if spec.nn == "best1":
-        out_specs += [pl.BlockSpec((bn,), lambda i, j: (i,))] * 2
+        out_specs += [row_spec] * 2
         out_shape += [jax.ShapeDtypeStruct((n,), jnp.float32),
                       jax.ShapeDtypeStruct((n,), jnp.int32)]
     elif spec.nn == "topk":
-        out_specs += [pl.BlockSpec((bn, spec.k), lambda i, j: (i, 0))] * 2
+        out_specs += [pl.BlockSpec((bn, spec.k),
+                                   lambda p, mt, lb: (mt[0, p], 0))] * 2
         out_shape += [jax.ShapeDtypeStruct((n, spec.k), jnp.float32),
                       jax.ShapeDtypeStruct((n, spec.k), jnp.int32)]
 
-    out = pl.pallas_call(
-        _make_sweep_kernel(spec),
-        grid=grid,
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(W,),
         in_specs=in_specs,
         out_specs=out_specs if len(out_specs) > 1 else out_specs[0],
+    )
+    out = pl.pallas_call(
+        _make_sweep_kernel(spec),
+        grid_spec=grid_spec,
         out_shape=out_shape if len(out_shape) > 1 else out_shape[0],
         interpret=interpret,
-    )(*args)
+    )(wl_meta, wl_lb, *args)
     return out if isinstance(out, (tuple, list)) else (out,)
 
 

@@ -21,6 +21,14 @@ state the Approx-DPC rules actually consume — the *grouping-cell partition*
   indexed box — ``apply`` raises :class:`CellOverflow` and the caller falls
   back to a full ``rebuild``.  A rebuild re-derives bookkeeping only; rho is
   partition-independent and survives untouched.
+* **Per-cell dirty tracking**: ``apply`` records the grouping-cell coords the
+  batch touched (inserted + evicted points), and ``dirty_near`` answers
+  which query points sit within a Chebyshev cell radius of any of them.  A
+  cell maximum whose answer could have changed must be within 2*d_cut of a
+  touched point (its own key, a candidate's key, or a candidate's existence
+  can only change there — see ``stream_dpc``), so ``StreamDPC`` skips the
+  maxima NN re-query for everything farther away.  A rebuild clears the
+  record (``None`` = treat everything dirty — apply may have part-mutated).
 * ``repair_rho`` is the density repair: one signed range count over the
   insert/evict delta batch (each surviving neighbor's rho changes by +-1 per
   batch point) plus fresh counts for the inserted rows — O(n * batch)
@@ -59,6 +67,9 @@ class IncrementalGrid:
         self.extent_margin = int(extent_margin)
         self.rebuilds = 0
         self._built = False
+        # grouping-cell coords touched by the last successful apply();
+        # None = unknown (fresh build / rebuild) -> treat everything dirty
+        self.last_touched: np.ndarray | None = None
 
     # ------------------------------------------------------------- helpers
     def _coords(self, pts: np.ndarray) -> np.ndarray:
@@ -105,6 +116,7 @@ class IncrementalGrid:
         self.seg_dev = jnp.asarray(self.seg_np)
         self.rebuilds += 1 if self._built else 0
         self._built = True
+        self.last_touched = None        # apply may have part-mutated
 
     # --------------------------------------------------------------- apply
     def apply(self, slots: np.ndarray, new_pts: np.ndarray,
@@ -118,9 +130,12 @@ class IncrementalGrid:
         resets everything from the window)."""
         assert self._built
         if r == 0:
+            self.last_touched = np.zeros((0, self.dim), np.int64)
             return
-        old_keys = self._pack(self._coords(old_pts[:r]))
-        new_keys = self._pack(self._coords(new_pts[:r]))     # may raise
+        old_coords = self._coords(old_pts[:r])
+        new_coords = self._coords(new_pts[:r])
+        old_keys = self._pack(old_coords)
+        new_keys = self._pack(new_coords)                    # may raise
         # evictions first: emptied ids return to the free list before the
         # insert loop allocates, so ids never exceed the live-cell bound
         for k in old_keys:
@@ -150,6 +165,20 @@ class IncrementalGrid:
         ids_p[:r] = ids
         self.seg_dev = self.seg_dev.at[jnp.asarray(slots)].set(
             jnp.asarray(ids_p), mode="drop")
+        self.last_touched = np.concatenate([old_coords, new_coords])
+
+    # --------------------------------------------------------------- dirty
+    def dirty_near(self, coords: np.ndarray, radius_cells: int) -> np.ndarray:
+        """(len(coords),) bool: within ``radius_cells`` (Chebyshev, grouping
+        cells) of any cell the last batch touched.  ``None`` record (fresh
+        build / rebuild / overflow) conservatively reports all-dirty."""
+        if self.last_touched is None:
+            return np.ones(len(coords), bool)
+        if len(self.last_touched) == 0:
+            return np.zeros(len(coords), bool)
+        cheb = np.max(np.abs(coords[:, None, :].astype(np.int64)
+                             - self.last_touched[None, :, :]), axis=-1)
+        return (cheb <= radius_cells).any(axis=1)
 
 
 # ------------------------------------------------------------- rho repair

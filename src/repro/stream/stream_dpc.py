@@ -16,6 +16,20 @@ micro-batch ``ingest``:
   re-queried with one ``denser_nn_update`` pass.  Found within d_cut ->
   rule 2; otherwise the query IS the rule-3 exact root answer, exactly as in
   the dense Approx-DPC branch.
+* **per-cell dirty tracking** (``cfg.dirty_tracking``, default on): a cell
+  maximum's answer can only change when something within 2*d_cut of it
+  changed — its own key changes within d_cut of a batch point; a candidate
+  appears/disappears within its current nn_delta < d_cut; or its current
+  parent (within d_cut) has *its* key changed by a batch point within
+  another d_cut.  Maxima of cells outside that halo of the batch
+  (``incremental.dirty_near``: Chebyshev ceil(2*sqrt(d))+1 grouping cells)
+  reuse the previous tick's cached raw NN answer verbatim — except rule-3
+  roots (cached answer not < d_cut), whose parent can live arbitrarily far
+  and which are always re-queried.  The dirty query set pads to a power of
+  two instead of ``maxima_cap``, so small batches into many-cell windows
+  re-query a handful of rows, not every maximum (bit-parity preserved —
+  the cached answer is provably unchanged, and the parity suite ingests
+  both localized and scattered streams to prove it).
 * **full-rebuild fallback**: when a batch overflows the measured cell
   capacities (density collapse or drift out of the indexed box) the grid
   bookkeeping rebuilds from the window; rho is partition-independent and
@@ -73,6 +87,8 @@ class StreamDPCConfig:
     extent_margin: int = 4              # indexed-box margin, in cells
     continuity_radius: float | None = None  # center matching (default 2*d_cut)
     data_axis: str = "data"             # sharded-ingest mesh axis name
+    layout: str | None = None           # full-tick engine layout (DPCConfig)
+    dirty_tracking: bool = True         # skip clean-cell maxima NN re-query
 
     def __post_init__(self):
         if self.batch_cap > self.capacity:
@@ -153,6 +169,12 @@ class StreamDPC:
         self._ticks = 0
         self._full_recomputes = 0
         self._last: StreamTick | None = None
+        # raw (nn_delta, nn_parent) cache by slot for clean-cell maxima
+        self._nn_delta_cache: np.ndarray | None = None
+        self._nn_parent_cache: np.ndarray | None = None
+        self._nn_valid: np.ndarray | None = None
+        self._nn_maxima_total = 0
+        self._nn_queries = 0
 
     # ------------------------------------------------------------- public
     def initialize(self, points: np.ndarray) -> StreamTick:
@@ -215,6 +237,8 @@ class StreamDPC:
             "live_cells": 0 if self.grid is None else self.grid.live_cells,
             "maxima_cap": 0 if self.grid is None else self.grid.maxima_cap,
             "clusters": 0 if self._last is None else self._last.num_clusters,
+            "nn_maxima_total": self._nn_maxima_total,
+            "nn_queries": self._nn_queries,
         }
 
     # ------------------------------------------------------------ phases
@@ -228,6 +252,10 @@ class StreamDPC:
             if self.mesh is not None:
                 self._sharded = make_sharded_repair(
                     self.mesh, self.cfg.data_axis, self.be, self.cfg.d_cut)
+            cap = self.cfg.capacity
+            self._nn_delta_cache = np.full(cap, np.inf, np.float32)
+            self._nn_parent_cache = np.full(cap, -1, np.int32)
+            self._nn_valid = np.zeros(cap, bool)
 
     def _warmup(self, chunk: np.ndarray) -> StreamTick:
         """Below capacity: append and recompute from scratch (the density
@@ -248,8 +276,11 @@ class StreamDPC:
         """Full recompute of the current window (warm-up / bulk load)."""
         w = self.window
         res = run_approxdpc(jnp.asarray(w.contents()), self.cfg.d_cut,
-                            backend=self.be)
+                            backend=self.be, layout=self.cfg.layout)
         self._full_recomputes += 1
+        # the full tick stamps rule-2 deltas (not raw NN answers), so the
+        # raw cache restarts empty — the next steady tick re-queries all
+        self._nn_valid[:] = False
         if w.full:
             # steady state starts: freeze rho at full window shape and
             # derive the incremental bookkeeping
@@ -289,20 +320,53 @@ class StreamDPC:
 
     def _incremental_result(self) -> DPCResult:
         """Rules 1-3 from maintained state: segment ops for every point, one
-        denser-NN pass for the cell maxima only."""
+        denser-NN pass for the *dirty* cell maxima only (clean-cell maxima
+        reuse their cached raw answer — see the module docstring)."""
         cfg = self.cfg
         cap = cfg.capacity
         rho_key = self._rho + self._jitter
         is_max, parent1 = _rule1(rho_key, self.grid.seg_dev, cap)
         q = np.nonzero(np.asarray(is_max))[0]
         assert len(q) <= self.grid.maxima_cap   # apply() enforces the budget
+
+        if cfg.dirty_tracking:
+            cached = self._nn_valid[q]
+            # rule-3 roots (no denser point within d_cut): their parent can
+            # be arbitrarily far, so any batch anywhere may flip it
+            roots = ~(self._nn_delta_cache[q] < cfg.d_cut)
+            rc = int(np.ceil(2.0 * np.sqrt(self.window.dim))) + 1
+            near = self.grid.dirty_near(
+                self.grid._coords(self.window.host[q]), rc)
+            dirty = (~cached) | roots | near
+        else:
+            dirty = np.ones(len(q), bool)
+        dq = q[dirty]
+        self._nn_maxima_total += len(q)
+        self._nn_queries += len(dq)
+
+        if len(dq):
+            # pad the dirty set to a power of two (few shape buckets), not
+            # to maxima_cap — the whole point is a smaller NN pass
+            pad = 1
+            while pad < len(dq):
+                pad *= 2
+            dq_slots = np.full(pad, cap, np.int64)
+            dq_slots[: len(dq)] = dq
+            nn_d, nn_p = self.be.denser_nn_update(
+                self.window.device, rho_key, jnp.asarray(dq_slots))
+            self._nn_delta_cache[dq] = np.asarray(nn_d)[: len(dq)]
+            self._nn_parent_cache[dq] = np.asarray(nn_p)[: len(dq)]
+            self._nn_valid[dq] = True
+
         q_slots = np.full(self.grid.maxima_cap, cap, np.int64)
         q_slots[: len(q)] = q
-        q_slots = jnp.asarray(q_slots)
-        nn_delta, nn_parent = self.be.denser_nn_update(
-            self.window.device, rho_key, q_slots)
-        delta, parent = _assemble(parent1, q_slots, nn_delta, nn_parent,
-                                  cfg.d_cut)
+        nn_delta = np.full(self.grid.maxima_cap, np.inf, np.float32)
+        nn_parent = np.full(self.grid.maxima_cap, -1, np.int32)
+        nn_delta[: len(q)] = self._nn_delta_cache[q]
+        nn_parent[: len(q)] = self._nn_parent_cache[q]
+        delta, parent = _assemble(parent1, jnp.asarray(q_slots),
+                                  jnp.asarray(nn_delta),
+                                  jnp.asarray(nn_parent), cfg.d_cut)
         return DPCResult(rho=self._rho, rho_key=rho_key, delta=delta,
                          parent=parent)
 

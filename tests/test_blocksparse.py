@@ -1,0 +1,338 @@
+"""Block-sparse tile-sweep parity: grid-pruned == dense, bit for bit.
+
+The acceptance contract of the block-sparse execution mode (ISSUE 4): for
+every accumulator x mask x backend x precision combination the worklist-
+driven sweep must reproduce the dense sweep of the same backend exactly.
+Lattice data (integer coords x power-of-two scale) makes every distance
+exact in f32 *and* makes duplicate points — exact distance ties — frequent,
+so the pruning bounds' conservative slack and the explicit lexicographic NN
+tie-breaks are both exercised where they can actually flip answers.
+
+Also here: the adversarial all-in-one-cell case (nothing prunes — the
+worklist degenerates to the dense pair set and must still be correct), the
+worklist statistics sanity checks, driver/distributed-level layout parity
+on tie-free data, and the streaming dirty-tracking contract (queries
+actually skipped, parity preserved).
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import DPCConfig, compute_dpc
+from repro.core.dpc_types import density_jitter
+from repro.core.grid import build_grid
+from repro.kernels import get_backend
+from repro.kernels.blocksparse import (build_flat_worklist, worklist_stats,
+                                       BS_BLOCK_N, BS_BLOCK_M)
+
+BACKENDS = ["jnp", "pallas-interpret"]
+SEED_MATRIX = [(17, 2, 0, 0), (96, 3, 3, 1), (64, 4, 6, 2), (2, 2, 0, 3),
+               (33, 2, 1, 4), (300, 3, 2, 7)]
+
+
+def _lattice(n, d, sexp, seed):
+    """Integer-lattice data (see tests/test_sweep_fused.py): distances are
+    exact in every arithmetic, ties are frequent, and the grid sort gives
+    the worklist real structure to prune."""
+    rng = np.random.default_rng(seed)
+    pts = rng.integers(0, 13, (n, d)).astype(np.float32) * (2.0 ** sexp)
+    d2cut = (float(rng.integers(1, 3 * 13 ** 2)) + 0.5) * (2.0 ** (2 * sexp))
+    d_cut = float(np.sqrt(d2cut))
+    grid = build_grid(jnp.asarray(pts), d_cut)
+    return grid.points, d_cut
+
+
+def _eq(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    if a.dtype.kind == "f":
+        return bool(np.all((a == b) | (np.isinf(a) & np.isinf(b))))
+    return bool(np.all(a == b))
+
+
+class TestEngineParity:
+    """backend primitive x layout: block-sparse == dense, bit for bit."""
+
+    @pytest.mark.parametrize("n,d,sexp,seed", SEED_MATRIX)
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_range_count(self, backend, n, d, sexp, seed):
+        pts, d_cut = _lattice(n, d, sexp, seed)
+        be = get_backend(backend)
+        dense = be.range_count(pts, pts, d_cut)
+        bs = be.range_count(pts, pts, d_cut, layout="block-sparse")
+        assert _eq(dense, bs)
+
+    @pytest.mark.parametrize("n,d,sexp,seed", SEED_MATRIX[:4])
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_range_count_delta_signed(self, backend, n, d, sexp, seed):
+        pts, d_cut = _lattice(n, d, sexp, seed)
+        rng = np.random.default_rng(seed)
+        signs = jnp.asarray(rng.choice([-1.0, 0.0, 1.0], n)
+                            .astype(np.float32))
+        be = get_backend(backend)
+        dense = be.range_count_delta(pts, pts, signs, d_cut)
+        bs = be.range_count_delta(pts, pts, signs, d_cut,
+                                  layout="block-sparse")
+        assert _eq(dense, bs)
+
+    @pytest.mark.parametrize("n,d,sexp,seed", SEED_MATRIX)
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_denser_nn(self, backend, n, d, sexp, seed):
+        """best-1 + strictly-denser key mask, runtime ring pruning; the
+        lattice duplicates force the lexicographic (d2, col) tie-break."""
+        pts, d_cut = _lattice(n, d, sexp, seed)
+        rng = np.random.default_rng(seed + 1)
+        rk = jnp.asarray(rng.permutation(n).astype(np.float32))
+        be = get_backend(backend)
+        dd, dp = be.denser_nn(pts, rk, pts, rk)
+        sd, sp = be.denser_nn(pts, rk, pts, rk, layout="block-sparse")
+        assert _eq(dp, sp)
+        assert _eq(dd, sd)
+
+    @pytest.mark.parametrize("n,d,sexp,seed", SEED_MATRIX)
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_rho_delta_fused(self, backend, n, d, sexp, seed):
+        pts, d_cut = _lattice(n, d, sexp, seed)
+        be = get_backend(backend)
+        jit_ = density_jitter(n)
+        dense = be.rho_delta(pts, pts, d_cut, jitter=jit_)
+        bs = be.rho_delta(pts, pts, d_cut, jitter=jit_,
+                          layout="block-sparse")
+        for a, b, name in zip(dense, bs, ("rho", "rho_key", "delta",
+                                          "parent")):
+            assert _eq(a, b), f"fused {name} differs under block-sparse"
+
+    @pytest.mark.parametrize("n,d,sexp,seed", SEED_MATRIX[:3])
+    def test_rho_delta_fused_bf16(self, n, d, sexp, seed):
+        """precision axis: the bf16 inner-product path prunes identically
+        (bounds compare against f32 values; winners are f32-refined)."""
+        pts, d_cut = _lattice(n, d, sexp, seed)
+        be = get_backend("pallas-interpret")
+        jit_ = density_jitter(n)
+        dense = be.rho_delta(pts, pts, d_cut, jitter=jit_, precision="bf16")
+        bs = be.rho_delta(pts, pts, d_cut, jitter=jit_, precision="bf16",
+                          layout="block-sparse")
+        for a, b in zip(dense, bs):
+            assert _eq(a, b)
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_rho_delta_rep_subset(self, backend):
+        """nn_sel mask (S-Approx representatives): the static kept-k ring
+        must count only admissible columns, or it would over-prune."""
+        rng = np.random.default_rng(7)
+        n, m = 60, 200
+        y_np = rng.integers(0, 13, (m, 3)).astype(np.float32) * 8
+        d_cut = float(np.sqrt(100.5)) * 8
+        y = build_grid(jnp.asarray(y_np), d_cut).points
+        slots = jnp.asarray(np.sort(rng.choice(m, n, replace=False)))
+        x = y[slots]
+        be = get_backend(backend)
+        jit_ = density_jitter(n)
+        dense = be.rho_delta(x, y, d_cut, jitter=jit_, y_sel_slots=slots)
+        bs = be.rho_delta(x, y, d_cut, jitter=jit_, y_sel_slots=slots,
+                          layout="block-sparse")
+        for a, b in zip(dense, bs):
+            assert _eq(a, b)
+
+
+class TestHaloParity:
+    """span-masked primitives: worklist pruning by span reach AND d_cut."""
+
+    @staticmethod
+    def _case(seed, W=256, m=300, S=3, d=3):
+        rng = np.random.default_rng(seed)
+        window = jnp.asarray(rng.integers(0, 50, (W, d))
+                             .astype(np.float32) * 64)
+        x = jnp.asarray(rng.integers(0, 50, (m, d)).astype(np.float32) * 64)
+        xk = jnp.asarray(rng.uniform(0, W, m).astype(np.float32))
+        wk = jnp.asarray(rng.permutation(W).astype(np.float32))
+        cuts = np.sort(rng.integers(0, W, (m, 2 * S)), axis=1)
+        st = cuts[:, 0::2].astype(np.int32)
+        en = cuts[:, 1::2].astype(np.int32)
+        st[:3] = en[:3] = 0
+        st[3] = en[3] = -9
+        return (window, x, xk, wk, jnp.asarray(st), jnp.asarray(en),
+                int(max((en - st).max(), 1)))
+
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_halo_count(self, seed):
+        window, x, _, _, st, en, cap = self._case(seed)
+        be = get_backend("pallas-interpret")
+        d_cut = 900.0
+        dense = be.range_count_halo(x, window, st, en, d_cut, span_cap=cap)
+        bs = be.range_count_halo(x, window, st, en, d_cut, span_cap=cap,
+                                 layout="block-sparse")
+        assert _eq(dense, bs)
+
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_halo_nn(self, seed):
+        window, x, xk, wk, st, en, cap = self._case(seed + 10)
+        be = get_backend("pallas-interpret")
+        d_cut = 900.0
+        dense = be.denser_nn_halo(x, xk, window, wk, st, en, d_cut,
+                                  span_cap=cap)
+        bs = be.denser_nn_halo(x, xk, window, wk, st, en, d_cut,
+                               span_cap=cap, layout="block-sparse")
+        for a, b in zip(dense, bs):
+            assert _eq(a, b)
+
+
+class TestDegenerateWorklists:
+    """All points in one grouping cell: nothing prunes, the worklist is the
+    dense pair set, and the engine must behave exactly as worklist=None."""
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_single_cell_parity(self, backend):
+        rng = np.random.default_rng(2)
+        n = 400
+        # spread << cell side: one grouping cell, every tile pair kept
+        pts_np = rng.integers(0, 4, (n, 3)).astype(np.float32)
+        d_cut = float(np.sqrt(3 * 16 + 0.5)) * 4
+        grid = build_grid(jnp.asarray(pts_np), d_cut)
+        assert grid.num_cells == 1
+        pts = grid.points
+        be = get_backend(backend)
+        jit_ = density_jitter(n)
+        dense = be.rho_delta(pts, pts, d_cut, jitter=jit_)
+        bs = be.rho_delta(pts, pts, d_cut, jitter=jit_,
+                          layout="block-sparse")
+        for a, b in zip(dense, bs):
+            assert _eq(a, b)
+
+    def test_single_cell_worklist_is_dense(self):
+        rng = np.random.default_rng(2)
+        pts = rng.integers(0, 4, (400, 3)).astype(np.float32)
+        wl = build_flat_worklist(pts, pts, 1e6, block_n=128, block_m=128,
+                                 count=True)
+        assert wl.n_kept == wl.n_total
+        assert wl.pruned_frac == 0.0
+
+    def test_separated_clusters_prune(self):
+        """Far-apart clusters with a small d_cut: the count worklist must
+        actually drop cross-cluster tile pairs."""
+        rng = np.random.default_rng(3)
+        a = rng.normal(0, 1, (512, 3)).astype(np.float32)
+        b = rng.normal(0, 1, (512, 3)).astype(np.float32) + 1000.0
+        pts = np.concatenate([a, b])
+        stats = worklist_stats(pts, pts, 5.0, block_n=128, block_m=128)
+        assert stats["pruned_tile_frac"] >= 0.4
+        # and the pruned sweep still counts correctly
+        be = get_backend("jnp")
+        dense = be.range_count(jnp.asarray(pts), jnp.asarray(pts), 5.0)
+        bs = be.range_count(jnp.asarray(pts), jnp.asarray(pts), 5.0,
+                            layout="block-sparse")
+        assert _eq(dense, bs)
+
+    def test_worklist_always_initializes_rows(self):
+        """Row tiles with nothing in range still appear once (their output
+        blocks must initialize): counts are exact zeros, not garbage."""
+        pts = np.zeros((300, 2), np.float32)
+        pts[200:] = 1e6                 # far tile: nothing within d_cut
+        be = get_backend("pallas-interpret")
+        dense = be.range_count(jnp.asarray(pts), jnp.asarray(pts[:200]), 1.0)
+        bs = be.range_count(jnp.asarray(pts), jnp.asarray(pts[:200]), 1.0,
+                            layout="block-sparse")
+        assert _eq(dense, bs)
+
+
+class TestTraceability:
+    def test_jnp_worklists_are_jit_safe(self):
+        import jax
+        be = get_backend("jnp")
+        assert be.worklist_traceable
+        pts = jnp.asarray(np.random.default_rng(0)
+                          .uniform(0, 100, (200, 3)).astype(np.float32))
+        f = jax.jit(lambda p: be.range_count(p, p, 10.0,
+                                             layout="block-sparse"))
+        assert _eq(f(pts), be.range_count(pts, pts, 10.0))
+
+    def test_pallas_worklists_require_host(self):
+        import jax
+        be = get_backend("pallas-interpret")
+        assert not be.worklist_traceable
+        pts = jnp.zeros((64, 2), jnp.float32)
+        with pytest.raises(ValueError, match="host"):
+            jax.jit(lambda p: be.range_count(p, p, 1.0,
+                                             layout="block-sparse"))(pts)
+
+    def test_unknown_layout_rejected(self):
+        pts = jnp.zeros((8, 2), jnp.float32)
+        with pytest.raises(ValueError, match="layout"):
+            get_backend("jnp").range_count(pts, pts, 1.0, layout="sparse")
+
+
+class TestDriverParity:
+    """Driver-level layout parity on tie-free data (random floats: parents
+    are unique, so original-order vs sorted-order tie-breaks coincide)."""
+
+    @pytest.mark.parametrize("algo", ["scan", "exdpc", "approxdpc",
+                                      "sapproxdpc"])
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_algorithms(self, algo, backend):
+        rng = np.random.default_rng(3)
+        pts = rng.uniform(0, 50 * 900.0, (500, 3)).astype(np.float32)
+        base = DPCConfig(d_cut=4000.0, algorithm=algo, backend=backend)
+        a = compute_dpc(pts, base)
+        b = compute_dpc(pts, DPCConfig(d_cut=4000.0, algorithm=algo,
+                                       backend=backend,
+                                       layout="block-sparse"))
+        assert _eq(a.rho, b.rho)
+        assert _eq(a.parent, b.parent)
+        assert _eq(a.delta, b.delta)
+
+    def test_distributed(self):
+        from jax.sharding import Mesh
+        import jax
+        from repro.distributed.dpc import DistDPCConfig, distributed_dpc
+        rng = np.random.default_rng(5)
+        pts = rng.uniform(0, 20000.0, (400, 3)).astype(np.float32)
+        mesh = Mesh(np.array(jax.devices()), ("data",))
+        a = distributed_dpc(pts, DistDPCConfig(d_cut=2500.0, backend="jnp"),
+                            mesh)
+        b = distributed_dpc(pts, DistDPCConfig(d_cut=2500.0, backend="jnp",
+                                               layout="block-sparse"), mesh)
+        assert _eq(a.rho, b.rho)
+        assert _eq(a.parent, b.parent)
+        assert _eq(a.delta, b.delta)
+
+
+class TestStreamDirtyTracking:
+    """Per-cell dirty tracking: clean-cell maxima reuse cached NN answers —
+    parity must hold AND queries must actually be skipped."""
+
+    @staticmethod
+    def _drive(dirty_tracking, rng):
+        from repro.stream import StreamDPC, StreamDPCConfig
+        cfg = StreamDPCConfig(d_cut=2.0, capacity=512, batch_cap=16,
+                              dirty_tracking=dirty_tracking)
+        s = StreamDPC(cfg)
+        centers = rng.uniform(0, 120, (12, 2))
+        pts = (centers[rng.integers(0, 12, 512)]
+               + rng.normal(0, 0.5, (512, 2))).astype(np.float32)
+        s.initialize(pts)
+        for t in range(8):
+            c = centers[t % 12]
+            batch = (c + rng.normal(0, 0.5, (16, 2))).astype(np.float32)
+            s.ingest(batch)
+        return s
+
+    def test_parity_and_savings(self):
+        rng = np.random.default_rng(0)
+        s = self._drive(True, rng)
+        # parity vs a from-scratch solve of the final window
+        from repro.core.approxdpc import run_approxdpc
+        ref = run_approxdpc(jnp.asarray(s.window_points()), s.cfg.d_cut,
+                            backend=s.be)
+        assert _eq(s.result.rho, ref.rho)
+        assert _eq(s.result.parent, ref.parent)
+        assert _eq(s.result.delta, ref.delta)
+        st = s.stats()
+        assert st["nn_queries"] < st["nn_maxima_total"], \
+            "dirty tracking never skipped a maxima query"
+
+    def test_matches_undirtied_stream(self):
+        """Tick-for-tick label equality with tracking off."""
+        a = self._drive(True, np.random.default_rng(1))
+        b = self._drive(False, np.random.default_rng(1))
+        assert np.array_equal(a._last.labels, b._last.labels)
+        assert _eq(a.result.delta, b.result.delta)
+        assert _eq(a.result.parent, b.result.parent)
