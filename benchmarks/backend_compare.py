@@ -45,6 +45,7 @@ import jax.numpy as jnp
 from repro.core.dpc_types import density_jitter
 from repro.core.grid import build_grid
 from repro.core.tuning import pick_dcut
+from repro.engine import ExecSpec, as_plan
 from repro.kernels.backend import get_backend
 
 from .util import CSV
@@ -312,8 +313,15 @@ if __name__ == "__main__":
     ap.add_argument("--n", type=int, default=4096)
     ap.add_argument("--d", type=int, default=3)
     ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--exec", dest="exec_spec", default=None,
+                    help="uniform execution flag backend:layout:precision "
+                         "(repro.engine.ExecSpec.parse): bench that one "
+                         "backend — layout/precision are validated against "
+                         "it (every run still records the dense AND "
+                         "block-sparse fused rows; that pairing IS the "
+                         "layout comparison)")
     ap.add_argument("--backends", default=None,
-                    help="comma-separated (default: platform pair)")
+                    help="comma-separated (legacy; prefer --exec)")
     ap.add_argument("--out", default="experiments/backends")
     ap.add_argument("--smoke", action="store_true",
                     help="CI gate vs the committed BENCH_core.json")
@@ -322,7 +330,14 @@ if __name__ == "__main__":
                     help="rewrite the committed baseline, including the "
                          "n=64k block-sparse acceptance record")
     a = ap.parse_args()
+    backends = a.backends.split(",") if a.backends else None
+    if a.exec_spec:
+        if backends:
+            ap.error("--exec and --backends are mutually exclusive")
+        # plan once: resolves the backend name and fail-fasts on bad
+        # names / impossible combos before any timing runs
+        backends = [as_plan(ExecSpec.parse(a.exec_spec)).backend_name]
     main(n=a.n, d=a.d, repeats=a.repeats,
-         backends=a.backends.split(",") if a.backends else None, out=a.out,
+         backends=backends, out=a.out,
          smoke=a.smoke, baseline=a.baseline,
          refresh_baseline=a.refresh_baseline)

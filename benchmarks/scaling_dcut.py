@@ -23,6 +23,7 @@ from repro.core.grid import build_grid
 from repro.core.sapproxdpc import run_sapproxdpc
 from repro.core.scan import run_scan
 from repro.data.points import real_proxy
+from repro.engine import ExecSpec
 from repro.kernels.blocksparse import worklist_stats
 from .util import CSV, pick_dcut, timeit
 
@@ -40,7 +41,7 @@ def main(n=10_000, dataset="household"):
         csv.add(dcut_mult=mult, d_cut=d_cut,
                 scan_s=timeit(run_scan, pts, d_cut, repeats=2),
                 bs_scan_s=timeit(run_scan, pts, d_cut, repeats=2,
-                                 layout="block-sparse"),
+                                 exec_spec=ExecSpec(layout="block-sparse")),
                 exdpc_s=timeit(run_exdpc, pts, d_cut, repeats=2),
                 approxdpc_s=timeit(run_approxdpc, pts, d_cut, repeats=2),
                 sapproxdpc_s=timeit(run_sapproxdpc, pts, d_cut, repeats=2),

@@ -27,14 +27,21 @@ from repro.core.lsh_ddp import run_lsh_ddp
 from repro.core.sapproxdpc import run_sapproxdpc
 from repro.core.scan import run_scan
 from repro.data.points import real_proxy
-from repro.kernels.backend import get_backend
+from repro.engine import ExecSpec, as_plan
 from repro.kernels.blocksparse import worklist_stats
 from .util import CSV, pick_dcut, timeit
 
+# the four engine-driven algorithms accept the unified exec_spec; the
+# LSH-DDP baseline always runs its own reference math
+_ENGINE_ALGOS = ("exdpc", "approxdpc", "sapproxdpc", "scan")
 
-def main(n_max=32_000, dataset="household", include_scan=True):
+
+def main(n_max=32_000, dataset="household", include_scan=True,
+         exec_spec: ExecSpec | None = None):
+    spec = exec_spec or ExecSpec()
     csv = CSV("fig7_scaling_n")
-    csv.header(f"time vs n ({dataset}, n_max={n_max})")
+    csv.header(f"time vs n ({dataset}, n_max={n_max}, "
+               f"exec={spec.describe()})")
     ns = [n_max // 8, n_max // 4, n_max // 2, n_max]
     pts_full, _ = real_proxy(dataset, n_max, seed=6)
     d_cut = pick_dcut(pts_full, target_rho=min(30.0, n_max / 200))
@@ -51,7 +58,8 @@ def main(n_max=32_000, dataset="household", include_scan=True):
         pts = pts_full[:n]
         row = {"n": n}
         for algo, fn in algos.items():
-            t = timeit(fn, pts, d_cut, repeats=2)
+            kw = {"exec_spec": spec} if algo in _ENGINE_ALGOS else {}
+            t = timeit(fn, pts, d_cut, repeats=2, **kw)
             times[algo].append(t)
             row[f"{algo}_s"] = t
         csv.add(**row)
@@ -63,17 +71,19 @@ def main(n_max=32_000, dataset="household", include_scan=True):
     return exps
 
 
-def layout_scaling(n_max=32_000, d=3, backend="jnp", seed=11):
+def layout_scaling(n_max=32_000, d=3, exec_spec: ExecSpec | None = None,
+                   seed=11):
     """Dense vs block-sparse fused rho_delta pairs/s at fixed d_cut vs n."""
+    pl = as_plan(exec_spec)
     csv = CSV("fig7b_layout")
-    csv.header(f"dense vs block-sparse engine (backend={backend}, "
+    csv.header(f"dense vs block-sparse engine (backend={pl.backend_name}, "
                f"n_max={n_max})")
     rng = np.random.default_rng(seed)
     pts_full = rng.uniform(0, 6 * 900.0, (n_max, d)).astype(np.float32)
     # paper-style d_cut picked at n_max, then held FIXED across n: the
     # pruning (and with it pairs/s) must strengthen as n grows
     d_cut = float(pick_dcut(pts_full, target_rho=min(30.0, n_max / 200)))
-    be = get_backend(backend)
+    be = pl.backend
     ns = [n_max // 8, n_max // 4, n_max // 2, n_max]
     rates = {"dense": [], "bs": []}
     for n in ns:
@@ -106,10 +116,15 @@ def layout_scaling(n_max=32_000, d=3, backend="jnp", seed=11):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--n-max", type=int, default=32_000)
+    ap.add_argument("--exec", dest="exec_spec", default=None,
+                    help="uniform execution flag backend:layout:precision "
+                         "(repro.engine.ExecSpec.parse) applied to every "
+                         "engine-driven algorithm")
     ap.add_argument("--layouts", action="store_true",
                     help="run the dense vs block-sparse engine scaling")
     a = ap.parse_args()
+    spec = ExecSpec.parse(a.exec_spec) if a.exec_spec else None
     if a.layouts:
-        layout_scaling(a.n_max)
+        layout_scaling(a.n_max, exec_spec=spec)
     else:
-        main(a.n_max)
+        main(a.n_max, exec_spec=spec)

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from repro.core.approxdpc import run_approxdpc
 from repro.core.labels import assign_labels
 from repro.data.points import gaussian_mixture
+from repro.engine import ExecSpec
 from repro.stream import StreamDPC, StreamDPCConfig
 
 from .util import CSV
@@ -43,7 +44,8 @@ def main(n: int = 65536, batch: int = 256, d: int = 2, d_cut: float = 2000.0,
     csv.header(f"n={n} batch={batch} backend={backend}")
     pts, _ = gaussian_mixture(n + (ticks + 1) * batch, k=15, d=d, seed=0)
     cfg = StreamDPCConfig(d_cut=d_cut, capacity=n, batch_cap=batch,
-                          rho_min=rho_min, backend=backend)
+                          rho_min=rho_min,
+                          exec_spec=ExecSpec(backend=backend))
     s = StreamDPC(cfg)
 
     t0 = time.perf_counter()
@@ -66,7 +68,7 @@ def main(n: int = 65536, batch: int = 256, d: int = 2, d_cut: float = 2000.0,
     w = jnp.asarray(s.window_points())
 
     def full():
-        res = run_approxdpc(w, d_cut, backend=backend)
+        res = run_approxdpc(w, d_cut, exec_spec=ExecSpec(backend=backend))
         return assign_labels(res, rho_min, cfg.resolved_delta_min())
 
     fresh = _block(full())

@@ -1,29 +1,40 @@
-"""Quickstart: cluster a 2-D Gaussian mixture with every DPC algorithm and
-print the decision graph peaks (paper Fig. 1) + Rand agreement.
+"""Quickstart: cluster a 2-D Gaussian mixture with every DPC algorithm via
+the unified DPCEngine and print the decision graph peaks (paper Fig. 1) +
+Rand agreement.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--n 8000] [--exec jnp:dense]
+
+``--exec backend:layout:precision`` is the uniform execution flag
+(repro.engine.ExecSpec.parse): e.g. ``--exec jnp:block-sparse`` runs every
+algorithm through the grid-pruned worklist engine.  CI runs this script as
+an executable smoke doc with a small ``--n``.
 """
+import argparse
+
 import numpy as np
 
-from repro.core import DPCConfig, cluster, decision_graph, rand_index
+from repro.core import rand_index
 from repro.data.points import gaussian_mixture
+from repro.engine import DPCEngine, ExecSpec
 
-def main():
-    n, k = 8000, 15
+
+def main(n=8000, exec_spec=None):
+    k = 15
     pts, true_labels = gaussian_mixture(n, k=k, d=2, overlap=0.015, seed=0)
     # d_cut: ~1.5% distance quantile (the paper's rule of thumb)
     from repro.core.tuning import pick_dcut
-    d_cut = pick_dcut(pts, target_rho=40)
-    print(f"n={n}, k={k}, d_cut={d_cut:.1f}")
+    d_cut = pick_dcut(pts, target_rho=max(min(40, n // 200), 5))
+    spec = exec_spec or ExecSpec()
+    print(f"n={n}, k={k}, d_cut={d_cut:.1f}, exec={spec.describe()}")
 
-    ref_labels = None
+    ref_labels = ref_eng = None
     for algo in ("exdpc", "approxdpc", "sapproxdpc", "scan", "lsh_ddp"):
-        out, res = cluster(pts, DPCConfig(d_cut=d_cut, rho_min=8,
-                                          algorithm=algo))
-        labels = np.asarray(out.labels)
+        eng = DPCEngine(d_cut=d_cut, rho_min=8, algorithm=algo,
+                        exec_spec=spec).fit(pts)
+        labels = eng.labels_
         if ref_labels is None:          # exdpc = reference
-            ref_labels = labels
-            dg = np.asarray(decision_graph(res))
+            ref_labels, ref_eng = labels, eng
+            dg = np.asarray(eng.decision_graph())
             gamma = dg[:, 0] * np.where(np.isfinite(dg[:, 1]), dg[:, 1],
                                         dg[np.isfinite(dg[:, 1]), 1].max())
             top = np.sort(gamma)[-k - 3:]
@@ -31,8 +42,23 @@ def main():
                   f"next {top[2]:.3g} (clear gap = easy center selection)")
         ri = rand_index(ref_labels, labels)
         vs_true = rand_index(true_labels, labels)
-        print(f"  {algo:12s} clusters={int(out.num_clusters):3d} "
+        print(f"  {algo:12s} clusters={int(eng.clustering.num_clusters):3d} "
               f"rand_vs_exdpc={ri:.4f} rand_vs_truth={vs_true:.4f}")
 
+    # the engine's serve-side read path: label unseen points without refit
+    # (on the exact reference engine, not whichever baseline ran last)
+    probe, _ = gaussian_mixture(64, k=k, d=2, overlap=0.015, seed=1)
+    q = ref_eng.predict(probe)
+    hits = int((q.status == 0).sum())
+    print(f"  predict: {hits}/{len(probe)} probes HIT within d_cut "
+          f"(rest fall back to the nearest center)")
+
+
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=8000)
+    ap.add_argument("--exec", dest="exec_spec", default=None,
+                    help="backend:layout:precision (ExecSpec.parse)")
+    a = ap.parse_args()
+    main(n=a.n, exec_spec=ExecSpec.parse(a.exec_spec)
+         if a.exec_spec else None)

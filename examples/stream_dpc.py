@@ -1,34 +1,40 @@
-"""Streaming DPC under drift: sliding-window clustering with stable ids.
+"""Streaming DPC under drift: sliding-window clustering with stable ids,
+driven through the unified ``DPCEngine.partial_fit``.
 
 A ``drifting_batches`` stream (random-walk cluster centers that keep moving
-each tick) feeds ``StreamDPC``: the window fills, steady-state incremental
+each tick) feeds the engine: the window fills, steady-state incremental
 ingest takes over, and the per-tick output shows cluster *continuity* —
 stable center ids surviving drift, fresh ids for clusters that wander into
 the window, and the full-rebuild fallback firing when the walk leaves the
-indexed box.
+indexed box.  ``predict`` labels probe points read-only between ticks.
 
-    PYTHONPATH=src python examples/stream_dpc.py
+    PYTHONPATH=src python examples/stream_dpc.py [--ticks 40] [--exec jnp:dense]
+
+CI runs this script as an executable smoke doc with a small ``--ticks``.
 """
+import argparse
+
 import numpy as np
 
 from repro.data.points import drifting_batches
-from repro.stream import StreamDPC, StreamDPCConfig
+from repro.engine import DPCEngine, ExecSpec
 
 
-def main():
+def main(extra_ticks=24, exec_spec=None):
     cap, batch, k = 4096, 256, 6
-    cfg = StreamDPCConfig(d_cut=3500.0, capacity=cap, batch_cap=batch,
-                          rho_min=8.0, extent_margin=2)
-    s = StreamDPC(cfg)
-    stream = drifting_batches(batch=batch, ticks=cap // batch + 24, k=k,
-                              d=2, seed=1, sigma=0.012, drift=0.03)
+    spec = exec_spec or ExecSpec()
+    eng = DPCEngine(d_cut=3500.0, rho_min=8.0, window_capacity=cap,
+                    batch_cap=batch, exec_spec=spec,
+                    stream_options={"extent_margin": 2})
+    stream = drifting_batches(batch=batch, ticks=cap // batch + extra_ticks,
+                              k=k, d=2, seed=1, sigma=0.012, drift=0.03)
 
     prev_ids: set[int] = set()
-    print(f"window={cap} batch={batch} d_cut={cfg.d_cut:.0f} "
-          f"(drifting {k}-cluster walk)")
+    print(f"window={cap} batch={batch} d_cut={eng.d_cut:.0f} "
+          f"exec={spec.describe()} (drifting {k}-cluster walk)")
     for t, (pts, _, centers) in enumerate(stream):
-        tick = s.ingest(pts)
-        if not s.window.full:
+        tick = eng.partial_fit(pts)
+        if not eng.stream.window.full:
             continue
         ids = set(int(x) for x in tick.stable_ids)
         born, died = sorted(ids - prev_ids), sorted(prev_ids - ids)
@@ -39,14 +45,24 @@ def main():
         print(f"tick {t:3d}  clusters={tick.num_clusters:2d} "
               f"ids={sorted(ids)} born={born or '-'} died={died or '-'} "
               f"noise={noise:4d} {flags}")
-    st = s.stats()
+    st = eng.stream.stats()
+    q = eng.predict(pts)                 # read-only: label the last batch
     print(f"\n{st['ticks']} ticks, {st['rebuilds']} grid rebuilds, "
           f"{st['full_recomputes']} full recomputes, "
           f"{st['live_cells']} live cells "
           f"(budget {st['maxima_cap']})")
+    print(f"predict on the last batch: {int((q.status == 0).sum())}"
+          f"/{len(q.labels)} HIT")
     print("stable ids persisted across drift; fresh ids only when a "
           "cluster entered/left the window")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--ticks", type=int, default=24,
+                    help="steady-state ticks after the window fills")
+    ap.add_argument("--exec", dest="exec_spec", default=None,
+                    help="backend:layout:precision (ExecSpec.parse)")
+    a = ap.parse_args()
+    main(extra_ticks=a.ticks, exec_spec=ExecSpec.parse(a.exec_spec)
+         if a.exec_spec else None)

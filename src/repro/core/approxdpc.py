@@ -28,7 +28,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.backend import get_backend
+from repro.engine.planner import as_plan
 
 from .dpc_types import DPCResult, density_jitter, with_jitter
 from .exdpc import resolve_fallback
@@ -45,24 +45,23 @@ def _group_segments(grid: Grid):
 
 
 def run_approxdpc(points, d_cut: float, *, g: int | None = None,
-                  cell_block: int = 32, block: int = 256,
-                  fallback_block: int = 4096,
-                  grid: Grid | None = None, backend=None,
-                  layout: str | None = None) -> DPCResult:
-    be = get_backend(backend)
+                  cell_block: int = 32, fallback_block: int = 4096,
+                  grid: Grid | None = None, exec_spec=None) -> DPCResult:
     points = jnp.asarray(points, jnp.float32)
+    pl = as_plan(exec_spec, points)
     n = points.shape[0]
+    block = pl.block or 256     # stencil row-tile default (jnp path)
     if grid is None:
         grid = build_grid(points, d_cut, g=g)
 
     seg = _group_segments(grid)
-    sparse = layout == "block-sparse"
+    sparse = pl.sparse
 
     # --- exact local density: joint per-cell range count (§4.2) on the
     #     reference backend, fused rho+delta tile sweep on pallas (or any
     #     backend in the grid-pruned block-sparse layout) ---
     nn_delta_all = nn_parent_all = None
-    use_engine = be.mxu_dense or sparse
+    use_engine = pl.backend.mxu_dense or sparse
     if sparse:
         def _maxima_mask_sorted(rk_s):
             # the engine ran on the grid-sorted table, so the interest
@@ -70,10 +69,10 @@ def run_approxdpc(points, d_cut: float, *, g: int | None = None,
             seg_max = jax.ops.segment_max(rk_s, seg, num_segments=n)
             return rk_s == seg_max[seg]
 
-        rho_s, rk_s, nnd_s, nnp_s = be.rho_delta(
+        rho_s, rk_s, nnd_s, nnp_s = pl.rho_delta(
             grid.points, grid.points, d_cut,
             jitter=density_jitter(n)[grid.order],
-            fallback_interest=_maxima_mask_sorted, layout=layout)
+            fallback_interest=_maxima_mask_sorted)
         rho, rho_key, nn_delta_all, nn_parent_all = unsort_dpc(
             grid, rho_s, rk_s, nnd_s, nnp_s)
     elif use_engine:
@@ -87,7 +86,7 @@ def run_approxdpc(points, d_cut: float, *, g: int | None = None,
 
         # one engine invocation answers Def. 1 for every row AND Def. 2 for
         # the rows that will need it (the cell maxima, picked below)
-        rho, rho_key, nn_delta_all, nn_parent_all = be.rho_delta(
+        rho, rho_key, nn_delta_all, nn_parent_all = pl.rho_delta(
             points, points, d_cut, jitter=density_jitter(n),
             fallback_interest=_maxima_mask)
     else:
@@ -144,6 +143,7 @@ def run_approxdpc(points, d_cut: float, *, g: int | None = None,
 
     # --- rule 3: exact fallback for the stem roots ---
     delta, parent = resolve_fallback(points, rho_key, delta, parent, resolved,
-                                     block=fallback_block, backend=be)
+                                     block=fallback_block,
+                                     backend=pl.backend)
     return DPCResult(rho=rho, rho_key=rho_key, delta=delta,
                      parent=parent.astype(jnp.int32))

@@ -1,10 +1,21 @@
-"""Public DPC API: one config, one entry point, all algorithms."""
+"""Public DPC API: one config, one entry point, all algorithms.
+
+.. deprecated:: the execution axes of :class:`DPCConfig` (``backend`` /
+   ``layout`` / ``block``) are legacy shims over one
+   :class:`repro.engine.ExecSpec` — pass ``exec_spec=ExecSpec(...)``
+   instead, or use the :class:`repro.engine.DPCEngine` facade, which also
+   covers streaming (``partial_fit``) and read-only ``predict`` queries.
+   The algorithm-selection fields (``d_cut`` / ``algorithm`` / ``rho_min``
+   ...) are not deprecated.
+"""
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Literal
 
 import jax.numpy as jnp
+
+from repro.engine.spec import ExecSpec, merge_legacy
 
 from .approxdpc import run_approxdpc
 from .cfsfdp_a import run_cfsfdp_a
@@ -18,33 +29,27 @@ from .scan import run_scan
 Algorithm = Literal["scan", "exdpc", "approxdpc", "sapproxdpc",
                     "lsh_ddp", "cfsfdp_a"]
 
+_ALGORITHMS = ("scan", "exdpc", "approxdpc", "sapproxdpc", "lsh_ddp",
+               "cfsfdp_a")
+
 
 @dataclass(frozen=True)
 class DPCConfig:
     """One config for every DPC algorithm.
 
-    ``backend`` selects the kernel backend for the two hot primitives
-    (range count / denser-NN, see repro.kernels.backend):
-
-    * ``None`` (default) — platform auto-detection: the Pallas MXU kernels
-      on TPU, the pure-jnp stencil/scan reference elsewhere.
-    * ``"jnp"`` — force the blocked direct-difference reference.
-    * ``"pallas"`` — force the Mosaic TPU kernels (dense tiled formulation).
-    * ``"pallas-interpret"`` — the same kernels under the Pallas interpreter
-      (CPU CI; slow, correctness only).
+    Execution is configured by ``exec_spec`` (a
+    :class:`repro.engine.ExecSpec`: backend x layout x precision x block x
+    data_axis — see that class for the axes).  The ``backend`` / ``layout``
+    / ``block`` fields are the legacy spellings of the same axes; they fold
+    into one ExecSpec with a ``DeprecationWarning`` and may not conflict
+    with an explicitly-passed ``exec_spec``.
 
     Applies to ``scan``/``exdpc``/``approxdpc``/``sapproxdpc``; the LSH-DDP
     and CFSFDP-A baselines always run their own reference math.
 
-    ``layout`` selects the dense-engine execution mode:
-
-    * ``None`` / ``"dense"`` — the all-pairs tile sweep.
-    * ``"block-sparse"`` — the grid-pruned worklist mode: the driver runs
-      the fused primitive on the grid-sorted table and only tile pairs
-      within d_cut of each other's bounding boxes (plus the NN ring) touch
-      the hardware.  Bit-identical results, sub-quadratic tile work under
-      the paper's d_cut assumption; forces the dense-engine path even on
-      the ``jnp`` backend (whose worklists are jit-built).
+    Validation is fail-fast: unknown algorithm names, non-positive
+    ``d_cut``, and ``eps <= 0`` for S-Approx-DPC raise ``ValueError`` here,
+    not deep inside the kernel layer.
     """
 
     d_cut: float
@@ -53,9 +58,26 @@ class DPCConfig:
     algorithm: Algorithm = "approxdpc"
     eps: float = 0.8                    # S-Approx-DPC only
     grid_dims: int | None = None        # candidate-grid dims (default min(d,3))
-    block: int = 256
-    backend: str | None = None          # kernel backend (see class docstring)
-    layout: str | None = None           # dense | block-sparse (see docstring)
+    exec_spec: ExecSpec | None = None   # the unified execution axes
+    block: int | None = None            # deprecated -> ExecSpec.block
+    backend: str | None = None          # deprecated -> ExecSpec.backend
+    layout: str | None = None           # deprecated -> ExecSpec.layout
+
+    def __post_init__(self):
+        if self.algorithm not in _ALGORITHMS:
+            raise ValueError(f"unknown algorithm {self.algorithm!r}; "
+                             f"expected one of {_ALGORITHMS}")
+        if not self.d_cut > 0.0:
+            raise ValueError(f"d_cut must be positive, got {self.d_cut!r}")
+        if self.algorithm == "sapproxdpc" and self.eps <= 0.0:
+            raise ValueError(f"S-Approx-DPC needs eps > 0 (coarse-grid side "
+                             f"eps*d_cut/sqrt(d)); got {self.eps!r}")
+        object.__setattr__(self, "exec_spec", merge_legacy(
+            self.exec_spec, owner="DPCConfig", backend=self.backend,
+            layout=self.layout, block=self.block))
+
+    def resolved_exec(self) -> ExecSpec:
+        return self.exec_spec
 
     def resolved_delta_min(self) -> float:
         dm = 2.0 * self.d_cut if self.delta_min is None else self.delta_min
@@ -65,25 +87,22 @@ class DPCConfig:
 
 
 _RUNNERS = {
-    "scan": lambda p, c: run_scan(p, c.d_cut, block=max(c.block, 256),
-                                  backend=c.backend, layout=c.layout),
-    "exdpc": lambda p, c: run_exdpc(p, c.d_cut, g=c.grid_dims, block=c.block,
-                                    backend=c.backend, layout=c.layout),
-    "approxdpc": lambda p, c: run_approxdpc(p, c.d_cut, g=c.grid_dims,
-                                            block=c.block, backend=c.backend,
-                                            layout=c.layout),
-    "sapproxdpc": lambda p, c: run_sapproxdpc(p, c.d_cut, eps=c.eps,
-                                              g=c.grid_dims, block=c.block,
-                                              backend=c.backend,
-                                              layout=c.layout),
-    "lsh_ddp": lambda p, c: run_lsh_ddp(p, c.d_cut),
-    "cfsfdp_a": lambda p, c: run_cfsfdp_a(p, c.d_cut),
+    "scan": lambda p, c, x: run_scan(p, c.d_cut, exec_spec=x),
+    "exdpc": lambda p, c, x: run_exdpc(p, c.d_cut, g=c.grid_dims,
+                                       exec_spec=x),
+    "approxdpc": lambda p, c, x: run_approxdpc(p, c.d_cut, g=c.grid_dims,
+                                               exec_spec=x),
+    "sapproxdpc": lambda p, c, x: run_sapproxdpc(p, c.d_cut, eps=c.eps,
+                                                 g=c.grid_dims, exec_spec=x),
+    "lsh_ddp": lambda p, c, x: run_lsh_ddp(p, c.d_cut),
+    "cfsfdp_a": lambda p, c, x: run_cfsfdp_a(p, c.d_cut),
 }
 
 
 def compute_dpc(points, config: DPCConfig) -> DPCResult:
     """rho/delta/dependent-point computation with the configured algorithm."""
-    return _RUNNERS[config.algorithm](jnp.asarray(points, jnp.float32), config)
+    return _RUNNERS[config.algorithm](jnp.asarray(points, jnp.float32),
+                                      config, config.resolved_exec())
 
 
 def cluster(points, config: DPCConfig) -> tuple[Clustering, DPCResult]:

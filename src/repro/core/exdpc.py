@@ -24,6 +24,7 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
+from repro.engine.planner import as_plan
 from repro.kernels.backend import get_backend
 
 from .dpc_types import DPCResult, density_jitter, with_jitter
@@ -60,46 +61,44 @@ def resolve_fallback(points, rho_key, delta, parent, resolved, block=4096,
     return jnp.asarray(delta), jnp.asarray(parent)
 
 
-def _run_exdpc_dense(points, d_cut: float, be, block: int,
-                     layout: str | None = None,
+def _run_exdpc_dense(points, d_cut: float, pl,
                      grid: Grid | None = None,
                      g: int | None = None) -> DPCResult:
     """Dense-engine path: the fused rho+delta tile sweep.
 
     One engine invocation computes the range count and the denser-NN
     accumulator over the same distance tiles (kernels/sweep.py) — no
-    density sort, no second sweep.  With ``layout="block-sparse"`` the
-    sweep runs on the grid-sorted table (compact tile AABBs -> grid-pruned
-    worklist) and results map back through ``grid.unsort_dpc``.  The
-    triangular ``prefix_nn`` form remains available on the backend for
+    density sort, no second sweep.  With the plan's block-sparse layout
+    the sweep runs on the grid-sorted table (compact tile AABBs ->
+    grid-pruned worklist) and results map back through ``grid.unsort_dpc``.
+    The triangular ``prefix_nn`` form remains available on the backend for
     schedule experiments (benchmarks/backend_compare.py still times it)."""
     n = points.shape[0]
-    if layout == "block-sparse":
+    if pl.grid_sort:
         if grid is None:
             grid = build_grid(points, d_cut, g=g)
-        rho_s, rk_s, dd_s, pp_s = be.rho_delta(
+        rho_s, rk_s, dd_s, pp_s = pl.rho_delta(
             grid.points, grid.points, d_cut,
-            jitter=density_jitter(n)[grid.order], block=block, layout=layout)
+            jitter=density_jitter(n)[grid.order])
         rho, rho_key, delta, parent = unsort_dpc(grid, rho_s, rk_s, dd_s,
                                                  pp_s)
         return DPCResult(rho=rho, rho_key=rho_key, delta=delta,
                          parent=parent)
-    rho, rho_key, delta, parent = be.rho_delta(
-        points, points, d_cut, jitter=density_jitter(n), block=block)
+    rho, rho_key, delta, parent = pl.rho_delta(
+        points, points, d_cut, jitter=density_jitter(n))
     return DPCResult(rho=rho, rho_key=rho_key, delta=delta,
                      parent=parent.astype(jnp.int32))
 
 
 def run_exdpc(points, d_cut: float, *, g: int | None = None,
-              block: int = 256, fallback_block: int = 4096,
-              grid: Grid | None = None, backend=None,
-              layout: str | None = None) -> DPCResult:
-    be = get_backend(backend)
+              fallback_block: int = 4096,
+              grid: Grid | None = None, exec_spec=None) -> DPCResult:
     points = jnp.asarray(points, jnp.float32)
-    if be.mxu_dense or layout == "block-sparse":
-        return _run_exdpc_dense(points, d_cut, be, block, layout=layout,
-                                grid=grid, g=g)
+    pl = as_plan(exec_spec, points)
+    if pl.backend.mxu_dense or pl.sparse:
+        return _run_exdpc_dense(points, d_cut, pl, grid=grid, g=g)
 
+    block = pl.block or 256     # stencil row-tile default (jnp path)
     if grid is None:
         grid = build_grid(points, d_cut, g=g)
 
@@ -116,6 +115,7 @@ def run_exdpc(points, d_cut: float, *, g: int | None = None,
     resolved = resolved_s[grid.inv_order]
 
     delta, parent = resolve_fallback(points, rho_key, delta, parent, resolved,
-                                     block=fallback_block, backend=be)
+                                     block=fallback_block,
+                                     backend=pl.backend)
     return DPCResult(rho=rho, rho_key=rho_key, delta=delta,
                      parent=parent.astype(jnp.int32))

@@ -25,7 +25,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.backend import get_backend
+from repro.engine.planner import as_plan
 
 from .dpc_types import DPCResult, density_jitter, with_jitter
 from .exdpc import _pow2_pad
@@ -44,14 +44,16 @@ def coarse_cell_key(points: jnp.ndarray, d_cut: float, eps: float) -> jnp.ndarra
 
 
 def run_sapproxdpc(points, d_cut: float, eps: float = 0.8, *,
-                   g: int | None = None, block: int = 256,
-                   fallback_block: int = 4096,
-                   grid: Grid | None = None, backend=None,
-                   layout: str | None = None) -> DPCResult:
-    be = get_backend(backend)
+                   g: int | None = None, fallback_block: int = 4096,
+                   grid: Grid | None = None, exec_spec=None) -> DPCResult:
+    if eps <= 0.0:
+        raise ValueError(f"S-Approx-DPC needs eps > 0 (the coarse-grid "
+                         f"side is eps*d_cut/sqrt(d)); got {eps!r}")
     points = jnp.asarray(points, jnp.float32)
+    pl = as_plan(exec_spec, points)
     n = points.shape[0]
-    use_engine = be.mxu_dense or layout == "block-sparse"
+    block = pl.block or 256     # stencil row-tile default (jnp path)
+    use_engine = pl.backend.mxu_dense or pl.sparse
     if grid is None:
         grid = build_grid(points, d_cut, g=g)
 
@@ -80,10 +82,9 @@ def run_sapproxdpc(points, d_cut: float, eps: float = 0.8, *,
         # (rep slots ascend in grid-sorted order, so the block-sparse layout
         # sees compact query tiles with no extra sort)
         rep_jit = density_jitter(n)[grid.order[jnp.asarray(rep_slots)]]
-        rep_rho, _, nn_d, nn_p = be.rho_delta(
+        rep_rho, _, nn_d, nn_p = pl.rho_delta(
             grid.points[jnp.asarray(rep_slots)], grid.points, d_cut,
-            jitter=rep_jit, y_sel_slots=jnp.asarray(rep_slots),
-            layout=layout)
+            jitter=rep_jit, y_sel_slots=jnp.asarray(rep_slots))
     else:
         rep_rho = density_for_slots(grid, rep_slots_p, block=block)[:num_reps]
 
@@ -134,8 +135,8 @@ def run_sapproxdpc(points, d_cut: float, eps: float = 0.8, *,
         if unresolved.size:
             mq = _pow2_pad(unresolved.size)
             qs = np.pad(unresolved, (0, mq - unresolved.size))
-            fd, fp = be.denser_nn(rep_pts[qs], rep_rk[qs], rep_pts, rep_rk,
-                                  block=fallback_block)
+            fd, fp = pl.denser_nn(rep_pts[qs], rep_rk[qs], rep_pts, rep_rk,
+                                  block=fallback_block, layout=None)
             fd = np.asarray(fd)[: unresolved.size]
             fp = np.asarray(fp)[: unresolved.size]        # rep-index space
             p2_delta[unresolved] = np.where(np.isfinite(fd), fd, np.inf)

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.engine.planner import as_plan
 from repro.kernels.backend import get_backend
 
 from .dpc_types import DPCResult, density_jitter
@@ -43,29 +44,29 @@ def dependent_scan(points: jnp.ndarray, rho_key: jnp.ndarray,
                                         block=block)
 
 
-def run_scan(points, d_cut: float, block: int = 512,
-             backend=None, layout: str | None = None) -> DPCResult:
-    """O(n^2) DPC through the kernel backend (``None`` -> platform default;
-    the ``jnp`` default on CPU is the bit-exact oracle).
+def run_scan(points, d_cut: float, *, exec_spec=None) -> DPCResult:
+    """O(n^2) DPC through the planned kernel backend (``exec_spec``: an
+    :class:`repro.engine.ExecSpec` or prepared :class:`~repro.engine.DPCPlan`;
+    ``None`` -> platform default, the bit-exact ``jnp`` oracle on CPU).
 
-    ``layout="block-sparse"`` grid-sorts the points and runs the fused
-    primitive in the grid-pruned worklist mode — sub-quadratic tile work
-    under the paper's d_cut assumption, same outputs (Scan then is no
+    ``ExecSpec(layout="block-sparse")`` grid-sorts the points and runs the
+    fused primitive in the grid-pruned worklist mode — sub-quadratic tile
+    work under the paper's d_cut assumption, same outputs (Scan then is no
     longer "the straightforward algorithm", but it is the same function).
     """
-    be = get_backend(backend)
     points = jnp.asarray(points, jnp.float32)
+    pl = as_plan(exec_spec, points)
     n = points.shape[0]
-    if layout == "block-sparse":
+    if pl.grid_sort:
         grid = build_grid(points, d_cut)
-        rho_s, rk_s, dd_s, pp_s = be.rho_delta(
+        rho_s, rk_s, dd_s, pp_s = pl.rho_delta(
             grid.points, grid.points, d_cut,
-            jitter=density_jitter(n)[grid.order], block=block, layout=layout)
+            jitter=density_jitter(n)[grid.order])
         rho, rho_key, delta, parent = unsort_dpc(grid, rho_s, rk_s, dd_s,
                                                  pp_s)
         return DPCResult(rho=rho, rho_key=rho_key, delta=delta,
                          parent=parent)
-    rho, rho_key, delta, parent = be.rho_delta(
-        points, points, d_cut, jitter=density_jitter(n), block=block)
+    rho, rho_key, delta, parent = pl.rho_delta(
+        points, points, d_cut, jitter=density_jitter(n))
     return DPCResult(rho=rho, rho_key=rho_key, delta=delta,
                      parent=parent.astype(jnp.int32))

@@ -40,37 +40,69 @@ from jax.experimental.shard_map import shard_map
 
 from repro.core.dpc_types import DPCResult, with_jitter
 from repro.core.grid import build_grid, point_span_bounds
-from repro.kernels.backend import get_backend
+from repro.engine.planner import as_plan
+from repro.engine.spec import ExecSpec, merge_legacy
 from repro.launch.mesh import flatten_mesh
+
+_STRATEGIES = ("gather", "halo")
 
 
 @dataclass(frozen=True)
 class DistDPCConfig:
+    """Distributed-phase parameters.
+
+    Execution (backend / layout / precision / block / mesh axis) is one
+    :class:`repro.engine.ExecSpec` on ``exec_spec``; the ``backend`` /
+    ``layout`` / ``block`` / ``data_axis`` fields are the legacy spellings
+    and fold into it with a ``DeprecationWarning`` (see ``repro.engine``).
+
+    Execution-axis semantics here:
+
+    * backend — per-shard kernel backend.  With a pallas backend +
+      'gather', the rho/delta phases run the dense MXU kernels per shard
+      (my rows x gathered table) and the delta phase is already globally
+      exact, so the fallback phase is skipped.  With 'halo', both phases
+      run the backend's span-masked halo primitives.
+    * layout 'block-sparse' — grid-pruned worklists for the per-shard
+      gather-strategy phases: each shard owns a contiguous chunk of the
+      space-sorted table, so its row tiles have compact AABBs against the
+      gathered table and most tile pairs prune away.  Requires a backend
+      whose worklists are jit-built (``worklist_traceable`` — the jnp
+      backend): pallas worklists are host-built and cannot be constructed
+      inside shard_map, so pallas shards keep the dense MXU tiles.
+      Currently honored on single-partition meshes only: the pinned
+      jax-0.4.37 XLA CPU SPMD pipeline miscompiles the ring walk's
+      order-gather on multi-device meshes, so those degrade to the dense
+      per-shard tiles (exact results; see the guard in
+      :func:`distributed_dpc`).
+    """
+
     d_cut: float
-    block: int = 256            # row block inside each shard
-    data_axis: str = "data"
     fallback_cap_factor: float = 0.05   # static cap: fraction of n (padded)
     # 'gather': replicate the sorted table per shard (baseline; traffic =
     #   n*d per device).  'halo': ring-ppermute only the blocks that
     #   intersect each shard's stencil window (traffic = (W+m)*d — the
     #   space-sorted layout makes candidate windows narrow; §Perf).
     strategy: str = "gather"
-    # Kernel backend for the per-shard tiles (repro.kernels.backend).  With
-    # a pallas backend + 'gather', the rho/delta phases run the dense MXU
-    # kernels per shard (my rows x gathered table) and the delta phase is
-    # already globally exact, so the fallback phase is skipped.  With
-    # 'halo', both phases run the backend's span-masked halo primitives
-    # (pallas tiles when dense — the ring windows feed the Mosaic kernels
-    # directly; jnp gathers otherwise).
-    backend: str | None = None
-    # 'block-sparse' runs the per-shard gather-strategy phases in the
-    # grid-pruned worklist mode: each shard owns a contiguous chunk of the
-    # space-sorted table, so its row tiles have compact AABBs against the
-    # gathered table and most tile pairs prune away.  Requires a backend
-    # whose worklists are jit-built (``worklist_traceable`` — the jnp
-    # backend): pallas worklists are host-built and cannot be constructed
-    # inside shard_map, so pallas shards keep the dense MXU tiles.
-    layout: str | None = None
+    exec_spec: ExecSpec | None = None
+    block: int | None = None            # deprecated -> ExecSpec.block
+    data_axis: str = "data"             # deprecated -> ExecSpec.data_axis
+    backend: str | None = None          # deprecated -> ExecSpec.backend
+    layout: str | None = None           # deprecated -> ExecSpec.layout
+
+    def __post_init__(self):
+        if not self.d_cut > 0.0:
+            raise ValueError(f"d_cut must be positive, got {self.d_cut!r}")
+        if self.strategy not in _STRATEGIES:
+            raise ValueError(f"unknown strategy {self.strategy!r}; "
+                             f"expected one of {_STRATEGIES}")
+        ex = merge_legacy(self.exec_spec, owner="DistDPCConfig",
+                          backend=self.backend, layout=self.layout,
+                          block=self.block, data_axis=self.data_axis)
+        object.__setattr__(self, "exec_spec", ex)
+
+    def resolved_exec(self) -> ExecSpec:
+        return self.exec_spec
 
 
 def _pad_rows(x, m, value):
@@ -261,13 +293,47 @@ def _make_delta_dense(axis, block, be, layout=None):
     return delta
 
 
-def distributed_dpc(points, cfg: DistDPCConfig, mesh: Mesh) -> DPCResult:
+def distributed_dpc(points, cfg: DistDPCConfig | None = None,
+                    mesh: Mesh | None = None, *, d_cut: float | None = None,
+                    exec_spec=None, strategy: str | None = None,
+                    fallback_cap_factor: float | None = None) -> DPCResult:
     """Exact DPC (Ex-DPC semantics) on a device mesh.  Host-orchestrated
-    phases, each an SPMD shard_map over cfg.data_axis."""
+    phases, each an SPMD shard_map over the exec spec's data axis.
+
+    Two spellings — mutually exclusive, never silently merged: the legacy
+    ``distributed_dpc(points, cfg, mesh)`` with a :class:`DistDPCConfig`,
+    or the unified-engine form ``distributed_dpc(points, mesh=mesh,
+    d_cut=..., exec_spec=ExecSpec(...), strategy=...)``.
+    """
+    if cfg is None:
+        if d_cut is None:
+            raise ValueError("distributed_dpc needs a DistDPCConfig or an "
+                             "explicit d_cut=")
+        cfg = DistDPCConfig(d_cut=d_cut,
+                            strategy=strategy or "gather",
+                            fallback_cap_factor=0.05
+                            if fallback_cap_factor is None
+                            else fallback_cap_factor,
+                            exec_spec=as_plan(exec_spec).spec
+                            if exec_spec is not None else None)
+    else:
+        clashes = [n for n, v in (("d_cut", d_cut), ("exec_spec", exec_spec),
+                                  ("strategy", strategy),
+                                  ("fallback_cap_factor",
+                                   fallback_cap_factor)) if v is not None]
+        if clashes:
+            raise ValueError(f"pass {clashes} either on the DistDPCConfig "
+                             f"or as kwargs, not both")
+    if mesh is None:
+        raise ValueError("distributed_dpc needs a mesh")
     points = jnp.asarray(points, jnp.float32)
-    be = get_backend(cfg.backend)
+    pl = as_plan(cfg.resolved_exec(), points)
+    be = pl.backend
+    # one resolved row-block for every distributed phase (legacy default
+    # 256 — the per-shard chunk loops and halo tiles were tuned to it)
+    block = pl.block if pl.block is not None else 256
     n_orig, d = points.shape
-    axis = cfg.data_axis
+    axis = pl.data_axis
     # flatten every mesh axis into the data dimension for DPC: a dedicated
     # 1-axis view keeps specs simple (launch.mesh.flatten_mesh).
     flat_mesh = flatten_mesh(mesh, axis)
@@ -280,8 +346,18 @@ def distributed_dpc(points, cfg: DistDPCConfig, mesh: Mesh) -> DPCResult:
     pts_s = _pad_rows(grid.points, m, 1e9)
 
     halo = cfg.strategy == "halo"
-    # per-shard block-sparse needs jit-built worklists (inside shard_map)
-    shard_layout = cfg.layout if be.worklist_traceable else None
+    # Per-shard block-sparse needs jit-built worklists (inside shard_map),
+    # AND a single-partition module: on multi-device meshes the pinned
+    # jax 0.4.37 XLA CPU SPMD pipeline miscompiles the ring walk's
+    # order-gather (`ord_i[p]` degrades to `p`, silently skipping kept
+    # tiles — reproduced with identical wrong outputs on 2- and 4-device
+    # meshes, exact on 1 device, and "fixed" by merely adding the order
+    # array to the module outputs).  Until the repo moves off the pinned
+    # XLA, multi-shard phases keep the dense per-shard tiles: correct
+    # results always beat pruned tile counts (tests/test_distributed_dpc.py
+    # pins this with a 4-device block-sparse == exdpc subprocess check).
+    shard_layout = ("block-sparse" if pl.sparse and be.worklist_traceable
+                    and S_data == 1 else None)
     dense = (be.mxu_dense or shard_layout == "block-sparse") and not halo
     if halo or not dense:   # the dense kernel tiles never read the spans
         starts, ends = point_span_bounds(grid)      # (n, S_spans)
@@ -310,7 +386,7 @@ def distributed_dpc(points, cfg: DistDPCConfig, mesh: Mesh) -> DPCResult:
                        // rows_per)))
         lo_arr = jnp.asarray(lo_s[:, None].astype(np.int64))  # (S, 1)
 
-        rho_fn = _make_rho_halo(axis, cfg.d_cut, cfg.block, span_w,
+        rho_fn = _make_rho_halo(axis, cfg.d_cut, block, span_w,
                                 S_data, W, hf, hb, be)
         sm_rho = shard_map(rho_fn, mesh=flat_mesh,
                            in_specs=(P(axis),) * 5, out_specs=P(axis),
@@ -318,14 +394,14 @@ def distributed_dpc(points, cfg: DistDPCConfig, mesh: Mesh) -> DPCResult:
         rho_sorted = jax.jit(sm_rho)(pts_s, starts_p, ends_p, pts_s,
                                      lo_arr)[:n]
     elif dense:
-        rho_fn = _make_rho_dense(axis, cfg.d_cut, cfg.block, be,
+        rho_fn = _make_rho_dense(axis, cfg.d_cut, block, be,
                                  layout=shard_layout)
         sm_rho = shard_map(rho_fn, mesh=flat_mesh,
                            in_specs=(P(axis), P(axis)), out_specs=P(axis),
                            check_rep=False)   # pallas_call lacks a rep rule
         rho_sorted = jax.jit(sm_rho)(pts_s, pts_s)[:n]
     else:
-        rho_fn = _make_rho(axis, cfg.d_cut, cfg.block, span_w)
+        rho_fn = _make_rho(axis, cfg.d_cut, block, span_w)
         sm_rho = shard_map(rho_fn, mesh=flat_mesh,
                            in_specs=(P(axis), P(axis), P(axis), P(axis)),
                            out_specs=P(axis))
@@ -337,7 +413,7 @@ def distributed_dpc(points, cfg: DistDPCConfig, mesh: Mesh) -> DPCResult:
     # queries must carry +inf keys on padded rows so they never match
     rk_query = _pad_rows(rho_key[grid.order], m, jnp.inf)
     if halo:
-        delta_fn = _make_delta_halo(axis, cfg.d_cut, cfg.block, span_w,
+        delta_fn = _make_delta_halo(axis, cfg.d_cut, block, span_w,
                                     S_data, W, hf, hb, be)
         sm_delta = shard_map(delta_fn, mesh=flat_mesh,
                              in_specs=(P(axis),) * 7,
@@ -347,7 +423,7 @@ def distributed_dpc(points, cfg: DistDPCConfig, mesh: Mesh) -> DPCResult:
             pts_s, rk_query, starts_p, ends_p, pts_s, rk_sorted_full,
             lo_arr)
     elif dense:
-        delta_fn = _make_delta_dense(axis, cfg.block, be,
+        delta_fn = _make_delta_dense(axis, block, be,
                                      layout=shard_layout)
         sm_delta = shard_map(delta_fn, mesh=flat_mesh,
                              in_specs=(P(axis),) * 4,
@@ -356,7 +432,7 @@ def distributed_dpc(points, cfg: DistDPCConfig, mesh: Mesh) -> DPCResult:
         dlt_s, par_s, ok_s = jax.jit(sm_delta)(
             pts_s, rk_query, pts_s, rk_sorted_full)
     else:
-        delta_fn = _make_delta(axis, cfg.d_cut, cfg.block, span_w)
+        delta_fn = _make_delta(axis, cfg.d_cut, block, span_w)
         sm_delta = shard_map(delta_fn, mesh=flat_mesh,
                              in_specs=(P(axis),) * 6,
                              out_specs=(P(axis), P(axis), P(axis)))
@@ -378,7 +454,7 @@ def distributed_dpc(points, cfg: DistDPCConfig, mesh: Mesh) -> DPCResult:
         # kernels (winners direct-diff refined), so the fallback uses the
         # same backend — no silent jnp detour on the optimized path
         fb_be = be
-        fb_fn = _make_fallback(axis, max(cfg.block, 1024), fb_be,
+        fb_fn = _make_fallback(axis, max(block, 1024), fb_be,
                                layout=shard_layout)
         sm_fb = shard_map(fb_fn, mesh=flat_mesh,
                           in_specs=(P(axis), P(axis), P(axis), P(axis)),

@@ -1,0 +1,231 @@
+"""The planner: resolve an ExecSpec once, reuse it for every call.
+
+``plan(points_spec, exec_spec) -> DPCPlan`` resolves the execution axes a
+single time — the :class:`~repro.kernels.backend.KernelBackend` instance,
+the layout (and with it the worklist strategy: none for dense, jit-built
+for the jnp ring worklists, host-built scalar-prefetch tables for pallas),
+the grid-sort requirement, the precision, and the sweep block size — and
+hands back a plan object whose primitive wrappers inject all of that into
+every kernel call.  Drivers stop re-threading ``backend=/layout=/block=``
+kwargs; they take a plan (or an ExecSpec, via :func:`as_plan`) and call
+``plan.rho_delta(...)``.
+
+Two caches make repeated ``fit`` / ``partial_fit`` calls cheap:
+
+* the **plan cache**: ``plan()`` memoizes on ``(PointsSpec, ExecSpec)``
+  (both frozen/hashable), so a re-fit on same-shaped input gets the *same*
+  plan object back — and with it every jit trace keyed off the plan's
+  resolved static arguments (no re-trace; asserted in
+  tests/test_engine.py).
+* the **worklist cache**: each plan owns a small LRU of host-built pallas
+  worklists (``kernels.blocksparse.FlatWorklist``), keyed by a content
+  fingerprint of the inputs.  A re-fit on the same data skips the host
+  worklist rebuild entirely (the jnp worklists are jit-built and already
+  ride the jax trace cache).
+
+Block-size resolution (the one documented default): ``spec.block`` when
+set; otherwise each backend's native tile default (jnp: 512, pallas: the
+Mosaic tile constants in ``kernels.ops``).  This replaces the old silent
+per-call-site defaults (``run_scan``'s 512 vs ``dpc_api``'s
+``max(block, 256)``); results are block-independent on every backend, so
+the resolution is a throughput knob only.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass
+
+from repro.kernels import blocksparse
+from repro.kernels.backend import KernelBackend, get_backend
+
+from .spec import ExecSpec
+
+__all__ = ["PointsSpec", "DPCPlan", "plan", "as_plan", "plan_cache_info",
+           "plan_cache_clear"]
+
+_PLAN = object()          # sentinel: "use the plan's resolved value"
+_WL_CACHE_MAX = 8         # host worklists kept per plan (LRU)
+_PLAN_CACHE_MAX = 64
+
+
+@dataclass(frozen=True)
+class PointsSpec:
+    """Static shape of a point table: what the planner needs to size pads."""
+
+    n: int
+    d: int
+
+    @classmethod
+    def of(cls, points) -> "PointsSpec":
+        return cls(n=int(points.shape[0]), d=int(points.shape[1]))
+
+
+class DPCPlan:
+    """A resolved execution plan: backend + layout + precision + block,
+    with primitive wrappers that inject them (and the worklist cache) into
+    every kernel call.
+
+    ``worklist_strategy``: ``"dense"`` (no worklists), ``"traced"``
+    (jit-built jnp ring worklists — legal inside jit/shard_map), or
+    ``"host"`` (host-built pallas scalar-prefetch tables, cached per plan).
+    ``grid_sort`` tells drivers the points must be laid out grid-sorted
+    (block-sparse pruning quality depends on it).  ``resolved_block`` is
+    the count-sweep row-tile size the wrappers actually pass.
+    """
+
+    def __init__(self, pspec: PointsSpec | None, spec: ExecSpec):
+        self.spec = spec
+        self.pspec = pspec
+        self.backend: KernelBackend = get_backend(spec.backend)
+        self.backend_name: str = self.backend.name
+        self.layout: str = spec.resolved_layout
+        self.sparse: bool = spec.sparse
+        self.precision: str = spec.resolved_precision
+        self.data_axis: str = spec.data_axis
+        if self.precision == "bf16" and not self.backend.mxu_dense:
+            raise ValueError(
+                f"precision='bf16' needs a pallas backend; resolved "
+                f"backend is {self.backend_name!r} (the f32 reference)")
+        self.block: int | None = spec.block
+        # THE resolved sweep row-block (the satellite's one documented
+        # default): spec.block when set, else the backend's native
+        # count-sweep tile (jnp 512, pallas DENSITY_BLOCK_N).  The
+        # count-sweep wrappers below pass exactly this value; the NN /
+        # halo wrappers keep per-primitive native defaults when spec.block
+        # is unset (their tiles are tuned separately).
+        self.resolved_block: int = spec.block if spec.block is not None \
+            else self._native_block()
+        # drivers consult this to lay points out grid-sorted before the
+        # sweep (block-sparse pruning quality depends on the layout)
+        self.grid_sort: bool = self.sparse
+        if not self.sparse:
+            self.worklist_strategy = "dense"
+        elif self.backend.worklist_traceable:
+            self.worklist_strategy = "traced"
+        else:
+            self.worklist_strategy = "host"
+        self._wl: OrderedDict = OrderedDict()   # host-worklist LRU
+
+    def _native_block(self) -> int:
+        if self.backend.mxu_dense:
+            from repro.kernels import ops
+            return ops.DENSITY_BLOCK_N
+        return 512
+
+    # ------------------------------------------------------- introspection
+    def describe(self) -> str:
+        shape = "" if self.pspec is None \
+            else f" n={self.pspec.n} d={self.pspec.d}"
+        return (f"DPCPlan[{self.backend_name}:{self.layout}:"
+                f"{self.precision} block={self.block or 'native'} "
+                f"worklists={self.worklist_strategy}{shape}]")
+
+    __repr__ = describe
+
+    def worklist_cache_info(self) -> dict:
+        return {"entries": len(self._wl), "max": _WL_CACHE_MAX}
+
+    # ------------------------------------------------------ value helpers
+    def _layout(self, override):
+        if override is _PLAN:
+            return "block-sparse" if self.sparse else None
+        return override
+
+    def _block(self, override):
+        return self.block if override is _PLAN else override
+
+    def _ctx(self):
+        """Activate this plan's host-worklist cache for the wrapped call."""
+        if self.worklist_strategy == "host":
+            return blocksparse.worklist_cache(self._wl, max_entries=_WL_CACHE_MAX)
+        import contextlib
+        return contextlib.nullcontext()
+
+    # -------------------------------------------------- primitive wrappers
+    # Thin forms of the two DRIVER-facing primitives with the plan's
+    # resolved layout / precision / block injected (each overridable per
+    # call for the few sites that intentionally diverge, e.g. dense
+    # fallbacks).  Only the primitives the unified drivers actually route
+    # through the plan live here; subsystems with bespoke orchestration —
+    # the distributed halo phases, the stream repair primitives — consume
+    # ``plan.backend`` directly with their own tuned parameters (their
+    # call sites say so), rather than carrying dead wrapper surface.
+
+    def _sweep_block(self, override):
+        return self.resolved_block if override is _PLAN else override
+
+    def denser_nn(self, x, x_key, y, y_key, *, block=_PLAN, layout=_PLAN):
+        with self._ctx():
+            return self.backend.denser_nn(
+                x, x_key, y, y_key, block=self._block(block),
+                layout=self._layout(layout))
+
+    def rho_delta(self, x, y, d_cut, *, jitter=None, y_sel_slots=None,
+                  fallback_interest=None, block=_PLAN, layout=_PLAN,
+                  precision=_PLAN):
+        with self._ctx():
+            return self.backend.rho_delta(
+                x, y, d_cut, jitter=jitter, y_sel_slots=y_sel_slots,
+                fallback_interest=fallback_interest,
+                block=self._sweep_block(block),
+                precision=self.precision if precision is _PLAN else precision,
+                layout=self._layout(layout))
+
+
+# ------------------------------------------------------------- plan cache
+_PLANS: OrderedDict = OrderedDict()
+_HITS = 0
+_MISSES = 0
+
+
+def plan(points_spec: PointsSpec | tuple | None,
+         exec_spec: ExecSpec | None = None) -> DPCPlan:
+    """Resolve (points_spec, exec_spec) -> DPCPlan, memoized.
+
+    ``points_spec`` may be a PointsSpec, an ``(n, d)`` tuple, or ``None``
+    for shape-independent plans (e.g. a stream driver before its window
+    exists).  Same inputs return the *same object*, carrying its caches.
+    """
+    global _HITS, _MISSES
+    if isinstance(points_spec, tuple):
+        points_spec = PointsSpec(*points_spec)
+    spec = exec_spec if exec_spec is not None else ExecSpec()
+    key = (points_spec, spec)
+    hit = _PLANS.get(key)
+    if hit is not None:
+        _HITS += 1
+        _PLANS.move_to_end(key)
+        return hit
+    _MISSES += 1
+    pl = DPCPlan(points_spec, spec)
+    _PLANS[key] = pl
+    while len(_PLANS) > _PLAN_CACHE_MAX:
+        _PLANS.popitem(last=False)
+    return pl
+
+
+def as_plan(exec_spec, points=None) -> DPCPlan:
+    """Coerce a driver's ``exec_spec`` argument (ExecSpec | DPCPlan | None)
+    into a plan for ``points`` (re-planning a shape-mismatched plan's spec;
+    the plan cache makes that free)."""
+    pspec = None if points is None else PointsSpec.of(points)
+    if isinstance(exec_spec, DPCPlan):
+        if pspec is None or exec_spec.pspec == pspec:
+            return exec_spec
+        return plan(pspec, exec_spec.spec)
+    if exec_spec is not None and not isinstance(exec_spec, ExecSpec):
+        raise TypeError(
+            f"exec_spec must be an ExecSpec, DPCPlan or None, got "
+            f"{type(exec_spec).__name__} (legacy backend=/layout=/block= "
+            f"kwargs moved onto repro.engine.ExecSpec)")
+    return plan(pspec, exec_spec)
+
+
+def plan_cache_info() -> dict:
+    return {"hits": _HITS, "misses": _MISSES, "entries": len(_PLANS)}
+
+
+def plan_cache_clear() -> None:
+    global _HITS, _MISSES
+    _PLANS.clear()
+    _HITS = _MISSES = 0

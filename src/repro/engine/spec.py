@@ -1,0 +1,161 @@
+"""ExecSpec: one execution plan for every DPC subsystem.
+
+After the kernel layer grew a backend axis (PR 1), a precision axis (PR 3)
+and a layout axis (PR 4), each subsystem re-threaded those knobs through its
+own config (``DPCConfig`` / ``DistDPCConfig`` / ``StreamDPCConfig`` /
+``DPCKVConfig``) and its own ``run_*`` kwargs.  ``ExecSpec`` is the single
+carrier for the *how-to-execute* axes —
+
+    backend x layout x precision x block x data_axis
+
+— validated eagerly at construction (unknown names and impossible combos
+fail here, not deep inside the kernel layer), resolved **once** by
+:func:`repro.engine.planner.plan` into a :class:`~repro.engine.planner.DPCPlan`
+that every subsystem entry point accepts.  The four legacy configs survive
+as thin shims that build one of these.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, fields
+
+from repro.kernels.backend import available_backends
+
+__all__ = ["ExecSpec", "LAYOUTS", "PRECISIONS"]
+
+LAYOUTS = ("dense", "block-sparse")
+PRECISIONS = ("f32", "bf16")
+
+
+@dataclass(frozen=True)
+class ExecSpec:
+    """The execution axes shared by batch / distributed / stream / serve.
+
+    * ``backend`` — kernel backend name (``repro.kernels.backend`` registry:
+      ``"jnp"``, ``"pallas"``, ``"pallas-interpret"``); ``None``/``"auto"``
+      selects by platform (pallas on TPU, jnp elsewhere).
+    * ``layout`` — ``"dense"`` (all-pairs tile sweep, the default) or
+      ``"block-sparse"`` (grid-pruned worklist mode).
+    * ``precision`` — ``"f32"`` (default) or ``"bf16"`` (mixed-precision
+      fused ``rho_delta``: bf16 inner product, f32 winner refinement;
+      requires a pallas backend — validated here when the backend is
+      explicit, at plan time when auto-detected).
+    * ``block`` — row-tile size for the sweep primitives.  ``None`` (the
+      default) resolves to each backend's native tile default at plan time
+      (jnp: 512; pallas: the Mosaic tile constants) — ONE documented
+      resolution, replacing the old per-call-site defaults (``run_scan``'s
+      512 vs ``dpc_api``'s ``max(block, 256)``).  Results are independent
+      of ``block`` on every backend (order-independent accumulators,
+      lexicographic NN tie-breaks); only throughput changes.
+    * ``data_axis`` — mesh axis name for the sharded paths (distributed
+      phases, sharded stream ingest).
+
+    Frozen and hashable, so a spec can ride inside jitted-static configs
+    (DPC-KV) and key the plan cache.
+    """
+
+    backend: str | None = None
+    layout: str | None = None
+    precision: str | None = None
+    block: int | None = None
+    data_axis: str = "data"
+
+    def __post_init__(self):
+        if self.backend not in (None, "auto") \
+                and self.backend not in available_backends():
+            raise ValueError(
+                f"unknown kernel backend {self.backend!r}; available: "
+                f"{available_backends()} (or None/'auto' to detect)")
+        if self.layout not in (None, *LAYOUTS):
+            raise ValueError(f"unknown layout {self.layout!r}; "
+                             f"expected one of {LAYOUTS}")
+        if self.precision not in (None, *PRECISIONS):
+            raise ValueError(f"unknown precision {self.precision!r}; "
+                             f"expected one of {PRECISIONS}")
+        if self.precision == "bf16" and self.backend == "jnp":
+            raise ValueError(
+                "precision='bf16' needs a pallas backend: the jnp backend "
+                "is the f32 direct-difference reference")
+        if self.block is not None and (not isinstance(self.block, int)
+                                       or self.block < 1):
+            raise ValueError(f"block must be a positive int or None, "
+                             f"got {self.block!r}")
+        if not self.data_axis or not isinstance(self.data_axis, str):
+            raise ValueError(f"data_axis must be a non-empty mesh-axis "
+                             f"name, got {self.data_axis!r}")
+
+    # ------------------------------------------------------------ helpers
+    @property
+    def sparse(self) -> bool:
+        return self.layout == "block-sparse"
+
+    @property
+    def resolved_layout(self) -> str:
+        return self.layout or "dense"
+
+    @property
+    def resolved_precision(self) -> str:
+        return self.precision or "f32"
+
+    @classmethod
+    def parse(cls, text: str, **overrides) -> "ExecSpec":
+        """Build a spec from the uniform CLI form ``backend:layout:precision``
+        (trailing segments optional; empty / ``-`` / ``auto`` segments mean
+        default) — e.g. ``jnp:block-sparse``, ``pallas::bf16``, ``:dense``.
+        """
+        parts = (text or "").split(":")
+        if len(parts) > 3:
+            raise ValueError(f"--exec takes backend:layout:precision, "
+                             f"got {text!r}")
+        parts += [""] * (3 - len(parts))
+        norm = [None if p in ("", "-", "auto") else p for p in parts]
+        return cls(backend=norm[0], layout=norm[1], precision=norm[2],
+                   **overrides)
+
+    def replace(self, **kw) -> "ExecSpec":
+        from dataclasses import replace
+        return replace(self, **kw)
+
+    def describe(self) -> str:
+        return (f"{self.backend or 'auto'}:{self.resolved_layout}:"
+                f"{self.resolved_precision}")
+
+
+# per-field "not set" sentinel for legacy kwargs: every exec axis is
+# Optional except data_axis, whose unset spelling is its default name
+_UNSET = {"data_axis": "data"}
+
+
+def merge_legacy(exec_spec: ExecSpec | None, *, owner: str,
+                 **legacy) -> ExecSpec:
+    """Fold legacy per-config exec kwargs into one ExecSpec (shim support).
+
+    ``legacy`` maps ExecSpec field names to the values a legacy config was
+    constructed with (field-specific unset sentinel = not set: ``None``
+    for most axes, ``"data"`` for ``data_axis``).  Passing both an
+    ``exec_spec`` and a conflicting legacy kwarg is an error — fail fast
+    rather than silently prefer one.  Emits a DeprecationWarning naming
+    the owner config when any legacy kwarg is in use.
+    """
+    import warnings
+
+    used = {k: v for k, v in legacy.items() if v != _UNSET.get(k)}
+    if not used:
+        return exec_spec if exec_spec is not None else ExecSpec()
+    names = sorted(used)
+    # stacklevel: warn -> merge_legacy -> __post_init__ -> generated
+    # __init__ -> the user's construction site
+    warnings.warn(
+        f"{owner}({', '.join(names)}=...) is deprecated: build a "
+        f"repro.engine.ExecSpec({', '.join(names)}=...) and pass it as "
+        f"exec_spec= (see repro.engine)", DeprecationWarning, stacklevel=4)
+    if exec_spec is not None:
+        clash = [k for k, v in used.items()
+                 if getattr(exec_spec, k) != _UNSET.get(k)
+                 and getattr(exec_spec, k) != v]
+        if clash:
+            raise ValueError(f"{owner}: {clash} given both on exec_spec and "
+                             f"as legacy kwargs with different values")
+        return exec_spec.replace(**used)
+    valid = {f.name for f in fields(ExecSpec)}
+    assert set(used) <= valid, f"unknown legacy exec kwargs: {used}"
+    return ExecSpec(**used)

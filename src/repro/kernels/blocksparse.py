@@ -42,6 +42,7 @@ worklist (nothing prunes; the engine behaves exactly as ``worklist=None``).
 """
 from __future__ import annotations
 
+from contextlib import contextmanager
 from dataclasses import dataclass
 from functools import partial
 
@@ -365,6 +366,63 @@ def _knn_radius(ub: np.ndarray, col_counts: np.ndarray, k: int) -> np.ndarray:
     return np.where(enough, radius, np.inf).astype(np.float32)
 
 
+# --------------------------------------------------------------------------
+# Host-worklist caching.  Building a flat worklist is host work proportional
+# to the tile-pair grid; a DPCPlan (repro.engine.planner) activates a small
+# LRU here so repeated fits on the same data skip the rebuild.  Keys are
+# content fingerprints (blake2b over the input bytes + every build knob), so
+# same-shape-different-data inputs can never collide.  With no active cache
+# (direct backend calls) every build runs, exactly as before.
+_WL_CACHE_STACK: list[tuple[dict, int]] = []
+_WL_BUILDS = 0          # total real builds (tests assert reuse with this)
+_WL_CACHE_HITS = 0
+
+
+@contextmanager
+def worklist_cache(cache, max_entries: int = 8,
+                   max_bytes: int = 64 << 20):
+    """Activate ``cache`` (a MutableMapping, LRU-trimmed to ``max_entries``
+    AND to ``max_bytes`` of worklist table data — dense-degenerate
+    worklists can reach tens of MB, so the cap is size-aware) for
+    build_flat_worklist calls inside the context."""
+    _WL_CACHE_STACK.append((cache, max_entries, max_bytes))
+    try:
+        yield cache
+    finally:
+        _WL_CACHE_STACK.pop()
+
+
+def _wl_nbytes(wl: "FlatWorklist") -> int:
+    return int(wl.meta.nbytes) + int(wl.lb.nbytes)
+
+
+def worklist_build_count() -> int:
+    return _WL_BUILDS
+
+
+def worklist_cache_hits() -> int:
+    return _WL_CACHE_HITS
+
+
+def _wl_fingerprint(x, y, d_cut, block_n, block_m, count, nn, k, nn_dcut,
+                    nn_col_counts, starts, ends) -> bytes:
+    import hashlib
+
+    h = hashlib.blake2b(digest_size=16)
+    for arr in (x, y, nn_col_counts, starts, ends):
+        if arr is None:
+            h.update(b"\x00none")
+        else:
+            a = np.ascontiguousarray(np.asarray(arr))
+            h.update(str(a.shape).encode())
+            h.update(str(a.dtype).encode())
+            h.update(a.tobytes())
+    h.update(repr((None if d_cut is None else float(d_cut), block_n,
+                   block_m, bool(count), nn, int(k),
+                   bool(nn_dcut))).encode())
+    return h.digest()
+
+
 def build_flat_worklist(x, y, d_cut=None, *, block_n: int, block_m: int,
                         count: bool = True, nn: str | None = None,
                         k: int = 0, nn_dcut: bool = False,
@@ -381,9 +439,26 @@ def build_flat_worklist(x, y, d_cut=None, *, block_n: int, block_m: int,
     radius does the remaining pruning.  ``starts``/``ends`` (halo spans)
     additionally drop col tiles no row span reaches.  At least one pair per
     row tile is force-kept so output blocks always initialize.
+
+    Inside a :func:`worklist_cache` context (a DPCPlan primitive wrapper)
+    results are memoized by content fingerprint — same data, same knobs,
+    no rebuild.
     """
+    global _WL_BUILDS, _WL_CACHE_HITS
     x = np.asarray(x, np.float32)
     y = np.asarray(y, np.float32)
+    key = None
+    if _WL_CACHE_STACK:
+        cache, max_entries, max_bytes = _WL_CACHE_STACK[-1]
+        key = _wl_fingerprint(x, y, d_cut, block_n, block_m, count, nn, k,
+                              nn_dcut, nn_col_counts, starts, ends)
+        hit = cache.get(key)
+        if hit is not None:
+            _WL_CACHE_HITS += 1
+            if hasattr(cache, "move_to_end"):
+                cache.move_to_end(key)
+            return hit
+    _WL_BUILDS += 1
     n, _ = x.shape
     m = y.shape[0]
     nbr, nbc = -(-n // block_n), -(-m // block_m)
@@ -441,9 +516,16 @@ def build_flat_worklist(x, y, d_cut=None, *, block_n: int, block_m: int,
     first[np.unique(wi, return_index=True)[1]] = 1
     meta = np.stack([wi, wj, first,
                      in_cut[wi, wj].astype(np.int64)]).astype(np.int32)
-    return FlatWorklist(meta=jnp.asarray(meta),
-                        lb=jnp.asarray(wl.astype(np.float32)),
-                        n_kept=len(wi), n_total=nbr * nbc)
+    out = FlatWorklist(meta=jnp.asarray(meta),
+                       lb=jnp.asarray(wl.astype(np.float32)),
+                       n_kept=len(wi), n_total=nbr * nbc)
+    if key is not None:
+        cache[key] = out
+        while len(cache) > 1 and (
+                len(cache) > max_entries
+                or sum(map(_wl_nbytes, cache.values())) > max_bytes):
+            cache.pop(next(iter(cache)))    # oldest entry (insertion order)
+    return out
 
 
 def worklist_stats(x, y, d_cut, *, block_n: int = BS_BLOCK_N,

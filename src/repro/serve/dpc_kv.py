@@ -28,19 +28,64 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.dpc_types import density_jitter, with_jitter
+from repro.engine.planner import as_plan
+from repro.engine.spec import ExecSpec, merge_legacy
 from repro.kernels.backend import get_backend
 
 
 @dataclass(frozen=True)
 class DPCKVConfig:
+    """DPC-KV compression parameters.
+
+    Execution is one :class:`repro.engine.ExecSpec` on ``exec_spec`` —
+    the kernel backend for the rho / denser-NN primitives (None = platform
+    default; the per-head d_cut is a traced scalar, which the kernels
+    accept as an SMEM threshold), the sweep block, and the layout
+    (``"block-sparse"`` is legal on ``worklist_traceable`` backends whose
+    jit-built worklists survive the jit+vmap this module runs under; the
+    host-built pallas worklists are rejected *here*, at construction).
+    The ``backend`` / ``block`` fields are the legacy spellings and fold
+    into the spec with a ``DeprecationWarning`` (see ``repro.engine``).
+    """
+
     budget: int = 256          # M: kept (k, v) pairs per head
     d_cut_quantile: float = 0.05   # d_cut = this quantile of pair distances
     proj_dim: int = 4
-    block: int = 512
-    # Kernel backend for the rho / denser-NN primitives (None = platform
-    # default: pallas on TPU, jnp reference elsewhere).  The per-head d_cut
-    # is a traced scalar, which the kernels accept (SMEM threshold).
-    backend: str | None = None
+    exec_spec: ExecSpec | None = None
+    block: int | None = None       # deprecated -> ExecSpec.block
+    backend: str | None = None     # deprecated -> ExecSpec.backend
+
+    def __post_init__(self):
+        if self.budget < 1:
+            raise ValueError(f"budget must be >= 1, got {self.budget!r}")
+        ex = merge_legacy(self.exec_spec, owner="DPCKVConfig",
+                          backend=self.backend, block=self.block)
+        object.__setattr__(self, "exec_spec", ex)
+        # THE plan-resolved sweep block (not a field: derived, so equal
+        # configs still hash/compare equal as jit static args).  The
+        # compression itself is traced code and cannot hold the plan's
+        # host-worklist context, but its block default is the planner's.
+        pl = as_plan(ex)
+        object.__setattr__(self, "resolved_block", pl.resolved_block)
+        # fail fast on combos that cannot run under this module's jit+vmap:
+        # the whole compression is one traced function per head.
+        be = pl.backend
+        if ex.sparse and not be.worklist_traceable:
+            raise ValueError(
+                f"DPC-KV runs under jit; layout='block-sparse' on the "
+                f"{be.name!r} backend builds host-side worklists, which "
+                f"cannot be constructed in traced code — use the 'jnp' "
+                f"backend (jit-built worklists) or the dense layout")
+        if ex.resolved_precision == "bf16" and not (be.fused_traceable
+                                                    and be.mxu_dense):
+            raise ValueError(
+                f"DPC-KV precision='bf16' needs a backend whose fused "
+                f"rho_delta is both jit-safe and MXU-dense; {be.name!r} "
+                f"is not (jnp is the f32 reference, the pallas fused "
+                f"epilogue is host-orchestrated)")
+
+    def resolved_exec(self) -> ExecSpec:
+        return self.exec_spec
 
 
 def _project(keys, proj_dim: int, seed: int = 0):
@@ -75,23 +120,29 @@ def _compress_head(k_head, v_head, valid, cfg: DPCKVConfig):
     pts = jnp.where(valid[:, None], pts, 1e9 + jnp.arange(S)[:, None] * 1e3)
     d_cut = _dcut_estimate(jnp.where(valid[:, None], pts, 0.0),
                            cfg.d_cut_quantile)
-    be = get_backend(cfg.backend)
+    ex = cfg.resolved_exec()
+    be = get_backend(ex.backend)
+    block = min(cfg.resolved_block, S)
+    layout = "block-sparse" if ex.sparse else None
     if be.fused_traceable:
         # fused rho+delta in one backend call (this whole function runs
-        # under jit+vmap, so only jit-safe fused paths qualify).  A -inf
-        # jitter on invalid rows makes their keys -inf exactly as the
-        # two-pass formulation's masking does.
+        # under jit+vmap, so only jit-safe fused paths qualify; the
+        # construction-time validation guarantees the layout/precision
+        # axes are jit-legal here).  A -inf jitter on invalid rows makes
+        # their keys -inf exactly as the two-pass formulation's masking
+        # does.
         jit_mask = jnp.where(valid, density_jitter(S), -jnp.inf)
         rho, rho_key, delta, parent = be.rho_delta(
-            pts, pts, d_cut, jitter=jit_mask, block=min(cfg.block, S))
+            pts, pts, d_cut, jitter=jit_mask, block=block,
+            precision=ex.precision, layout=layout)
         rho = jnp.where(valid, rho, 0.0)
     else:
-        rho = be.range_count(pts, pts, d_cut, block=min(cfg.block, S))
+        rho = be.range_count(pts, pts, d_cut, block=block, layout=layout)
         rho = jnp.where(valid, rho, 0.0)
         rho_key = with_jitter(rho)
         rho_key = jnp.where(valid, rho_key, -jnp.inf)
         delta, parent = be.denser_nn(pts, rho_key, pts, rho_key,
-                                     block=min(cfg.block, S))
+                                     block=block, layout=layout)
     # global peak: delta = inf -> cap at the domain diameter for gamma
     delta = jnp.where(jnp.isfinite(delta), delta, 2.0 * d_cut * 10.0)
     gamma = jnp.where(valid, rho * delta, -jnp.inf)

@@ -28,7 +28,7 @@ class ServeConfig:
     seed: int = 0
     # Optional DPC-KV compression of the prompt cache (dense-attention archs
     # only; SSM/hybrid caches are already O(1)).  The DPC primitives inside
-    # run on dpc_kv.backend — the kernel backend threading for serving.
+    # run on dpc_kv.exec_spec — one repro.engine.ExecSpec for serving too.
     dpc_kv: DPCKVConfig | None = None
 
 

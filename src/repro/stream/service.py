@@ -48,6 +48,53 @@ class QueryResult(NamedTuple):
     status: np.ndarray   # (m,) int8 QueryStatus values
 
 
+def nearest_label_query(backend, points, d_cut: float, ref_table,
+                        ref_labels, center_ids, center_pos,
+                        pad_multiple: int) -> QueryResult:
+    """The serve layer's read-only label query, shared by
+    ``StreamService.query`` and ``repro.engine.DPCEngine.predict``.
+
+    ``ref_table``: (N, d) labeled reference points (device array; padded
+    rows hold ``PAD_COORD`` and can never be a finite NN).  ``ref_labels``:
+    (N,) labels aligned to the table (-1 = noise).  ``center_ids`` /
+    ``center_pos``: the current cluster centers for the miss fallback.
+    Queries pad to a multiple of ``pad_multiple`` (fixed request shapes).
+    A query within ``d_cut`` of its nearest reference point adopts that
+    point's label (``HIT``); otherwise it falls back to the nearest
+    center's id (``MISS_FALLBACK``), or -1/``MISS`` when no centers exist.
+    The NN runs through the backend's ``denser_nn`` with a -inf query key —
+    every reference row is "denser", so the masked NN degenerates to a
+    plain NN on the same kernels the write path uses.
+    """
+    points = np.atleast_2d(np.asarray(points, np.float32))
+    m = len(points)
+    B = max(int(pad_multiple), 1)
+    mp = -(-m // B) * B                       # fixed-shape request pad
+    q = np.full((mp, points.shape[1]), PAD_COORD, np.float32)
+    q[:m] = points
+    qk = np.full(mp, np.inf, np.float32)      # +inf key: padding inert
+    qk[:m] = -np.inf                          # -inf key: plain NN
+    wkey = jnp.zeros((ref_table.shape[0],), jnp.float32)
+    dist, parent = backend.denser_nn(jnp.asarray(q), jnp.asarray(qk),
+                                     ref_table, wkey)
+    dist = np.asarray(dist)[:m]
+    parent = np.asarray(parent)[:m]
+    ref_labels = np.asarray(ref_labels)
+    labels = np.full(m, -1, np.int64)
+    status = np.full(m, int(QueryStatus.MISS), np.int8)
+    ok = (np.isfinite(dist) & (dist < d_cut)
+          & (parent >= 0) & (parent < len(ref_labels)))
+    labels[ok] = ref_labels[parent[ok]]
+    status[ok] = int(QueryStatus.HIT)
+    miss = ~ok
+    if miss.any() and len(center_ids):
+        d2 = ((points[miss][:, None, :].astype(np.float64)
+               - np.asarray(center_pos)[None]) ** 2).sum(-1)
+        labels[miss] = np.asarray(center_ids)[np.argmin(d2, axis=1)]
+        status[miss] = int(QueryStatus.MISS_FALLBACK)
+    return QueryResult(labels=labels, status=status)
+
+
 @dataclass(frozen=True)
 class StreamServeConfig:
     """Endpoint config: ``stream`` is the clustering config; ``micro_batch``
@@ -106,35 +153,11 @@ class StreamService:
         """
         last = self.engine._last
         assert last is not None, "query before any ingest tick"
-        points = np.atleast_2d(np.asarray(points, np.float32))
-        m = len(points)
-        B = self.cfg.resolved_micro_batch()
-        mp = -(-m // B) * B                       # fixed-shape request pad
-        q = np.full((mp, points.shape[1]), PAD_COORD, np.float32)
-        q[:m] = points
-        qk = np.full(mp, np.inf, np.float32)      # +inf key: padding inert
-        qk[:m] = -np.inf                          # -inf key: plain NN
-        w = self.engine.window
-        wkey = jnp.zeros((self.cfg.stream.capacity,), jnp.float32)
-        dist, parent = self.engine.be.denser_nn(
-            jnp.asarray(q), jnp.asarray(qk), w.device, wkey)
-        dist = np.asarray(dist)[:m]
-        parent = np.asarray(parent)[:m]
-        labels = np.full(m, -1, np.int64)
-        status = np.full(m, int(QueryStatus.MISS), np.int8)
-        ok = (np.isfinite(dist) & (dist < self.cfg.stream.d_cut)
-              & (parent >= 0) & (parent < len(last.labels)))
-        labels[ok] = last.labels[parent[ok]]
-        status[ok] = int(QueryStatus.HIT)
-        miss = ~ok
-        if miss.any():
-            ids, pos = self.engine.center_positions()
-            if len(ids):
-                d2 = ((points[miss][:, None, :].astype(np.float64)
-                       - pos[None]) ** 2).sum(-1)
-                labels[miss] = ids[np.argmin(d2, axis=1)]
-                status[miss] = int(QueryStatus.MISS_FALLBACK)
-        return QueryResult(labels=labels, status=status)
+        ids, pos = self.engine.center_positions()
+        return nearest_label_query(
+            self.engine.be, points, self.cfg.stream.d_cut,
+            self.engine.window.device, last.labels, ids, pos,
+            pad_multiple=self.cfg.resolved_micro_batch())
 
     def stats(self) -> dict:
         return {**self.engine.stats(), "buffered": self._buffered,

@@ -58,7 +58,8 @@ import jax.numpy as jnp
 from repro.core.approxdpc import run_approxdpc
 from repro.core.dpc_types import DPCResult, density_jitter
 from repro.core.labels import Clustering, assign_labels
-from repro.kernels.backend import get_backend
+from repro.engine.planner import plan
+from repro.engine.spec import ExecSpec, merge_legacy
 from repro.kernels.density import PAD_COORD
 
 from .incremental import CellOverflow, IncrementalGrid, make_sharded_repair, \
@@ -71,10 +72,14 @@ class StreamDPCConfig:
     """Streaming DPC configuration (mirrors ``DPCConfig`` where shared).
 
     ``capacity`` is the sliding-window size (fixed shapes; steady state
-    keeps it full), ``batch_cap`` the static micro-batch pad.  ``backend``
-    selects the kernel backend exactly as in ``DPCConfig``; streaming rides
-    the same registry/auto-detection via the two batched primitives
-    (``range_count_delta`` / ``denser_nn_update``).
+    keeps it full), ``batch_cap`` the static micro-batch pad.  Execution
+    (kernel backend, full-tick engine layout, sweep block, sharded-ingest
+    mesh axis) is one :class:`repro.engine.ExecSpec` on ``exec_spec``;
+    streaming rides the same registry/auto-detection via the two batched
+    primitives (``range_count_delta`` / ``denser_nn_update``).  The
+    ``backend`` / ``layout`` / ``data_axis`` fields are the legacy
+    spellings and fold into the spec with a ``DeprecationWarning``
+    (see ``repro.engine``; ``DPCEngine.partial_fit`` is the facade).
     """
 
     d_cut: float
@@ -82,17 +87,27 @@ class StreamDPCConfig:
     batch_cap: int = 256
     rho_min: float = 10.0
     delta_min: float | None = None      # default 2 * d_cut (must be > d_cut)
-    backend: str | None = None
     cell_slack: float = 2.0             # live-cell budget over measured count
     extent_margin: int = 4              # indexed-box margin, in cells
     continuity_radius: float | None = None  # center matching (default 2*d_cut)
-    data_axis: str = "data"             # sharded-ingest mesh axis name
-    layout: str | None = None           # full-tick engine layout (DPCConfig)
     dirty_tracking: bool = True         # skip clean-cell maxima NN re-query
+    exec_spec: ExecSpec | None = None   # the unified execution axes
+    backend: str | None = None          # deprecated -> ExecSpec.backend
+    data_axis: str = "data"             # deprecated -> ExecSpec.data_axis
+    layout: str | None = None           # deprecated -> ExecSpec.layout
 
     def __post_init__(self):
+        if not self.d_cut > 0.0:
+            raise ValueError(f"d_cut must be positive, got {self.d_cut!r}")
         if self.batch_cap > self.capacity:
             raise ValueError("batch_cap cannot exceed the window capacity")
+        ex = merge_legacy(self.exec_spec, owner="StreamDPCConfig",
+                          backend=self.backend, layout=self.layout,
+                          data_axis=self.data_axis)
+        object.__setattr__(self, "exec_spec", ex)
+
+    def resolved_exec(self) -> ExecSpec:
+        return self.exec_spec
 
     def resolved_delta_min(self) -> float:
         dm = 2.0 * self.d_cut if self.delta_min is None else self.delta_min
@@ -155,7 +170,10 @@ class StreamDPC:
 
     def __init__(self, cfg: StreamDPCConfig, mesh=None):
         self.cfg = cfg
-        self.be = get_backend(cfg.backend)
+        # shape-independent plan: resolves the backend + layout once; the
+        # full-tick driver re-plans per window shape through the plan cache
+        self.plan = plan(None, cfg.resolved_exec())
+        self.be = self.plan.backend
         self.mesh = mesh
         self.window: SlidingWindow | None = None
         self.grid: IncrementalGrid | None = None
@@ -251,7 +269,7 @@ class StreamDPC:
                 extent_margin=self.cfg.extent_margin)
             if self.mesh is not None:
                 self._sharded = make_sharded_repair(
-                    self.mesh, self.cfg.data_axis, self.be, self.cfg.d_cut)
+                    self.mesh, self.plan.data_axis, self.be, self.cfg.d_cut)
             cap = self.cfg.capacity
             self._nn_delta_cache = np.full(cap, np.inf, np.float32)
             self._nn_parent_cache = np.full(cap, -1, np.int32)
@@ -276,7 +294,7 @@ class StreamDPC:
         """Full recompute of the current window (warm-up / bulk load)."""
         w = self.window
         res = run_approxdpc(jnp.asarray(w.contents()), self.cfg.d_cut,
-                            backend=self.be, layout=self.cfg.layout)
+                            exec_spec=self.plan.spec)
         self._full_recomputes += 1
         # the full tick stamps rule-2 deltas (not raw NN answers), so the
         # raw cache restarts empty — the next steady tick re-queries all

@@ -321,7 +321,7 @@ class TestStreamDirtyTracking:
         # parity vs a from-scratch solve of the final window
         from repro.core.approxdpc import run_approxdpc
         ref = run_approxdpc(jnp.asarray(s.window_points()), s.cfg.d_cut,
-                            backend=s.be)
+                            exec_spec=s.plan.spec)
         assert _eq(s.result.rho, ref.rho)
         assert _eq(s.result.parent, ref.parent)
         assert _eq(s.result.delta, ref.delta)

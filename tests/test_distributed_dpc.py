@@ -61,6 +61,39 @@ out["pallas"] = {
 print("RESULT" + json.dumps(out))
 """
 
+# Regression pin (runs in CI — deliberately NOT slow-marked): block-sparse
+# exec on a MULTI-device mesh must stay exact.  The pinned jax-0.4.37 XLA
+# CPU SPMD pipeline miscompiles the ring walk's order-gather inside
+# shard_map on >1 partition (kept tiles silently skipped), so
+# distributed_dpc degrades per-shard phases to dense tiles there — this
+# check fails if that guard is ever lifted without fixing the underlying
+# miscompile (see distributed/dpc.py).
+_BS_GUARD_SCRIPT = r"""
+import warnings, json
+warnings.filterwarnings("ignore")
+import numpy as np, jax, jax.numpy as jnp
+from repro.distributed import distributed_dpc
+from repro.core.exdpc import run_exdpc
+from repro.data.points import gaussian_mixture
+from repro.engine import ExecSpec
+
+mesh = jax.make_mesh((4,), ("data",))
+pts, _ = gaussian_mixture(1024, k=5, d=2, overlap=0.03, seed=3)
+res = distributed_dpc(pts, mesh=mesh, d_cut=2500.0,
+                      exec_spec=ExecSpec(backend="jnp",
+                                         layout="block-sparse"))
+ref = run_exdpc(pts, 2500.0, exec_spec=ExecSpec(backend="jnp"))
+binf = jnp.isinf(res.delta) & jnp.isinf(ref.delta)
+out = {"bs_multidev": {
+    "rho_eq_ex": bool(jnp.all(res.rho == ref.rho)),
+    "rho_eq_scan": True,
+    "delta_close": bool(jnp.all((res.delta == ref.delta) | binf)),
+    "parent_eq": float((np.asarray(res.parent)
+                        == np.asarray(ref.parent)).mean()),
+}}
+print("RESULT" + json.dumps(out))
+"""
+
 
 def _run_subprocess(script: str):
     env = dict(os.environ)
@@ -83,6 +116,16 @@ def test_distributed_matches_exact():
         assert r["rho_eq_scan"], (key, r)
         assert r["delta_close"], (key, r)
         assert r["parent_eq"] == 1.0, (key, r)
+
+
+def test_multidev_block_sparse_stays_exact():
+    """The XLA-SPMD-miscompile guard (see distributed/dpc.py): per-shard
+    block-sparse on a 4-device mesh must produce exact results — today by
+    degrading to dense tiles.  Not slow-marked on purpose: CI must catch
+    the guard being lifted without the upstream fix."""
+    out = _run_subprocess(_BS_GUARD_SCRIPT)
+    r = out["bs_multidev"]
+    assert r["rho_eq_ex"] and r["delta_close"] and r["parent_eq"] == 1.0, r
 
 
 _HALO_SCRIPT = r"""

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.core.approxdpc import run_approxdpc
 from repro.core.labels import assign_labels
 from repro.data.points import drifting_batches, gaussian_mixture
+from repro.engine import ExecSpec
 from repro.stream import (StreamDPC, StreamDPCConfig, StreamServeConfig,
                           StreamService)
 from repro.stream.window import SlidingWindow
@@ -24,14 +25,15 @@ CAP, B, D_CUT, RHO_MIN = 512, 64, 8000.0, 3.0
 
 def _cfg(backend="jnp", **kw):
     base = dict(d_cut=D_CUT, capacity=CAP, batch_cap=B, rho_min=RHO_MIN,
-                backend=backend)
+                exec_spec=ExecSpec(backend=backend))
     base.update(kw)
     return StreamDPCConfig(**base)
 
 
 def _assert_parity(s: StreamDPC, backend):
     w = jnp.asarray(s.window_points())
-    fresh = run_approxdpc(w, s.cfg.d_cut, backend=backend)
+    fresh = run_approxdpc(w, s.cfg.d_cut,
+                          exec_spec=ExecSpec(backend=backend))
     res = s.result
     assert bool(jnp.all(fresh.rho == res.rho)), "rho diverged"
     assert bool(jnp.all(fresh.parent == res.parent)), "parent diverged"
@@ -156,6 +158,7 @@ warnings.filterwarnings("ignore")
 import numpy as np, jax, jax.numpy as jnp
 from repro.core.approxdpc import run_approxdpc
 from repro.data.points import gaussian_mixture
+from repro.engine import ExecSpec
 from repro.stream import StreamDPC, StreamDPCConfig
 
 assert jax.device_count() == 4
@@ -163,13 +166,15 @@ cap, B, d_cut = 512, 64, 8000.0
 pts, _ = gaussian_mixture(cap + 3 * B, k=4, d=2, overlap=0.05, seed=2)
 mesh = jax.make_mesh((2, 2), ("data", "model"))   # flattens to 4 shards
 s = StreamDPC(StreamDPCConfig(d_cut=d_cut, capacity=cap, batch_cap=B,
-                              rho_min=3.0, backend="jnp"), mesh=mesh)
+                              rho_min=3.0,
+                              exec_spec=ExecSpec(backend="jnp")),
+              mesh=mesh)
 s.initialize(pts[:cap])
 ok = True
 for t in range(3):
     s.ingest(pts[cap + t * B: cap + (t + 1) * B])
     fresh = run_approxdpc(jnp.asarray(s.window_points()), d_cut,
-                          backend="jnp")
+                          exec_spec=ExecSpec(backend="jnp"))
     ok &= bool(jnp.all(fresh.rho == s.result.rho))
     ok &= bool(jnp.all(fresh.parent == s.result.parent))
 print("RESULT" + json.dumps({"parity": ok}))
