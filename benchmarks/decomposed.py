@@ -6,13 +6,11 @@ import argparse
 
 import jax.numpy as jnp
 
-from repro.core.cfsfdp_a import run_cfsfdp_a, kmeans_pivots, _density
-from repro.core.approxdpc import run_approxdpc
-from repro.core.exdpc import run_exdpc
+from repro.core.cfsfdp_a import run_cfsfdp_a
 from repro.core.grid import build_grid
 from repro.core.lsh_ddp import run_lsh_ddp
 from repro.core.sapproxdpc import run_sapproxdpc
-from repro.core.scan import dependent_scan, local_density_scan, run_scan
+from repro.core.scan import dependent_scan, local_density_scan
 from repro.core.stencil import (dependent_stencil, density_per_cell,
                                 density_per_point)
 from repro.core.dpc_types import with_jitter

@@ -11,7 +11,6 @@ from __future__ import annotations
 
 import argparse
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.grid import build_grid, point_span_bounds

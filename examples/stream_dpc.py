@@ -14,8 +14,6 @@ CI runs this script as an executable smoke doc with a small ``--ticks``.
 """
 import argparse
 
-import numpy as np
-
 from repro.data.points import drifting_batches
 from repro.engine import DPCEngine, ExecSpec
 

@@ -1,0 +1,60 @@
+"""repro.analysis: jaxpr-level static analysis for the DPC engine.
+
+Born from PR 4/5's silently-wrong distributed block-sparse results (the
+pinned jax-0.4.37 XLA CPU SPMD pipeline miscompiles sort-derived gathers
+inside multi-partition ``shard_map`` bodies): the class of bug that passes
+every unit test on one device and corrupts results on four deserves a
+static check, not a memory.  Five rules walk traced computations and the
+source tree:
+
+=====================  =====================================================
+R1-spmd-gather         sort-tainted dynamic indices feeding gather /
+                       dynamic_slice inside multi-partition shard_map — the
+                       miscompile class itself; also the re-enablement gate
+                       for distributed block-sparse (``spmd_gather_safe``)
+R2-check-rep-audit     every ``check_rep=False`` shard_map body carries an
+                       ``@audit_check_rep`` replication-safety annotation
+R3-precision-flow      bf16 dot_general accumulations reach the f32
+                       direct-diff refinement epilogue
+R4-pallas-legality     pallas_call grid/block divisibility, SMEM scalar
+                       prefetch placement, host-static grids
+R5-spec-coverage       ExecSpec axes x validation x dispatch x tests stay
+                       mutually exhaustive
+=====================  =====================================================
+
+Rules run (a) at plan time — ``repro.engine.planner.plan`` analyzes each
+fresh plan's canonical traces (``REPRO_ANALYSIS=0`` bypasses) — and (b) in
+the CLI sweep, ``python -m repro.analysis``, which CI gates on.
+
+This top level stays jax-free (audit + rule vocabulary only); everything
+that traces loads lazily via ``__getattr__``.
+"""
+from __future__ import annotations
+
+from .audit import CheckRepAudit, all_audits, audit_check_rep, audit_of
+from .rules import (AnalysisError, Finding, Rule, all_rules, analyze_jaxpr,
+                    jaxpr_rules, project_rules, register_rule)
+
+__all__ = [
+    "AnalysisError", "CheckRepAudit", "Finding", "Rule",
+    "all_audits", "all_rules", "analyze_jaxpr", "analyze_plan",
+    "audit_check_rep", "audit_of", "jaxpr_rules", "project_rules",
+    "register_rule", "run_sweep", "spmd_gather_safe",
+]
+
+_LAZY = {
+    "spmd_gather_safe": ("r1_spmd_gather", "spmd_gather_safe"),
+    "analyze_plan": ("targets", "analyze_plan"),
+    "plan_targets": ("targets", "plan_targets"),
+    "run_sweep": ("report", "run_sweep"),
+}
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        import importlib
+
+        mod_name, attr = _LAZY[name]
+        mod = importlib.import_module(f".{mod_name}", __name__)
+        return getattr(mod, attr)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,64 @@
+"""``python -m repro.analysis``: the full static-analysis sweep, as CI runs it.
+
+Environment is pinned *before* any jax computation (jax initializes its
+backend lazily, so setting these after ``import repro`` but before first
+device use still works): CPU platform, 4 host devices — the distributed
+and stream shard_map targets need a multi-partition mesh to mean anything.
+
+Exit status 1 iff error-severity findings exist (warn-only reports pass).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _pin_environment() -> None:
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = \
+            (flags + " --xla_force_host_platform_device_count=4").strip()
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="jaxpr-level static analysis sweep over every ExecSpec "
+                    "combo and subsystem entry point")
+    parser.add_argument("--out", default="-",
+                        help="write the JSON report here ('-' = stdout)")
+    parser.add_argument("--pretty", action="store_true",
+                        help="indent the JSON report")
+    parser.add_argument("--root", default=None,
+                        help="repo root for the project rules "
+                             "(default: derived from the package location)")
+    args = parser.parse_args(argv)
+
+    _pin_environment()
+    from .report import run_sweep
+
+    report = run_sweep(args.root)
+    text = json.dumps(report, indent=2 if args.pretty else None,
+                      sort_keys=True)
+    if args.out == "-":
+        print(text)
+    else:
+        with open(args.out, "w", encoding="utf-8") as fh:
+            fh.write(text + "\n")
+
+    errors = [f for f in report["findings"] if f["severity"] == "error"]
+    warns = [f for f in report["findings"] if f["severity"] != "error"]
+    print(f"analysis: {len(report['targets'])} targets, "
+          f"{len(report['skipped'])} skipped, {len(errors)} error(s), "
+          f"{len(warns)} warning(s)", file=sys.stderr)
+    for f in errors:
+        print(f"  [{f['rule']}] {f['target']} @ {f['where']}: "
+              f"{f['message']}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

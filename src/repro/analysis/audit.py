@@ -1,0 +1,74 @@
+"""Audit annotations for ``check_rep=False`` shard_map bodies.
+
+``shard_map(..., check_rep=False)`` switches off JAX's replication checking
+— the mechanism that would catch a body producing different values on
+different mesh members.  Every such body in this tree exists because a
+primitive inside it (``pallas_call``) has no replication rule, not because
+the body is actually replication-unsafe; but that argument lives in the
+author's head unless it is written down where a tool can see it.
+
+:func:`audit_check_rep` is that writing-down: it attaches a structured
+record — *why* the body is replication-safe and *which collectives* make it
+so — to the body function and registers it in a process-wide table.  The
+decorator returns the function unchanged (one attribute set, no wrapper),
+so decorated bodies trace exactly as before.
+
+Rule R2 (``repro.analysis.r2_check_rep``) fails any ``check_rep=False``
+shard_map whose body does not carry one of these annotations.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class CheckRepAudit:
+    """One audited ``check_rep=False`` body: the replication-safety argument."""
+
+    qualname: str
+    module: str
+    reason: str
+    collectives: tuple[str, ...] = field(default=())
+
+    @property
+    def key(self) -> str:
+        return f"{self.module}.{self.qualname}"
+
+
+_REGISTRY: dict[str, CheckRepAudit] = {}
+
+_AUDIT_ATTR = "__check_rep_audit__"
+
+
+def audit_check_rep(reason: str, *, collectives: tuple[str, ...] | list[str] = ()):
+    """Annotate a shard_map body as audited for ``check_rep=False``.
+
+    ``reason`` states why the body is replication-safe; ``collectives``
+    names the collective primitives (``all_gather``, ``psum``, ``ppermute``,
+    ...) whose semantics the argument rests on.  The decorated function is
+    returned unchanged.
+    """
+    if not reason or not reason.strip():
+        raise ValueError("audit_check_rep needs a non-empty reason: the "
+                         "annotation exists to record the safety argument")
+
+    def deco(fn):
+        rec = CheckRepAudit(qualname=fn.__qualname__, module=fn.__module__,
+                            reason=" ".join(reason.split()),
+                            collectives=tuple(collectives))
+        setattr(fn, _AUDIT_ATTR, rec)
+        _REGISTRY[rec.key] = rec
+        return fn
+
+    return deco
+
+
+def audit_of(fn) -> CheckRepAudit | None:
+    """The audit record attached to ``fn``, or None."""
+    return getattr(fn, _AUDIT_ATTR, None)
+
+
+def all_audits() -> dict[str, CheckRepAudit]:
+    """Every audit registered so far (importing a module registers its
+    decorated bodies); keys are ``module.qualname``."""
+    return dict(_REGISTRY)

@@ -1,0 +1,108 @@
+"""R3 precision-flow: bf16 matmul accumulations must reach an f32
+direct-difference refinement before their winners are consumed.
+
+The mixed-precision sweep (``kernels/sweep.py``) evaluates expanded-form
+squared distances with a bf16 inner product — absolute error
+~eps*(|x|^2+|y|^2), which is a *large relative* error for small distances
+and flips near-tie argmins.  The contract (PR 3) is that every bf16 path
+re-evaluates its kept candidates in direct-difference f32
+(``refine_topk_d2`` / ``_fused_resolve``: ``sum((x - y_sel)**2)``) so the
+winner and its value are exact whenever the true NN is within the kept k.
+
+A refactor that drops the refinement epilogue changes no shapes and no
+tests on well-separated data — exactly the silent-regression class a
+static check catches.  R3 fires when a traced computation contains a
+``dot_general`` with bf16 operands but no f32 direct-diff square-sum
+chain (``sub`` -> ``integer_pow(2)``/``mul(x,x)`` -> ``reduce_sum``)
+anywhere in the program (pallas kernel bodies included — the walker
+descends into ``pallas_call`` jaxprs).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .rules import Finding, Rule, register_rule
+
+RULE_NAME = "R3-precision-flow"
+
+
+def _is_bf16(var) -> bool:
+    aval = getattr(var, "aval", None)
+    return str(getattr(aval, "dtype", "")) == "bfloat16"
+
+
+def _is_wide(var) -> bool:
+    """f32-or-wider: the refinement contract says *direct-diff in at least
+    f32*; under x64 mode the same epilogue traces as f64."""
+    aval = getattr(var, "aval", None)
+    return str(getattr(aval, "dtype", "")) in ("float32", "float64")
+
+
+def _jaxpr_has_refinement(jaxpr) -> bool:
+    """One jaxpr level: sub -> square -> reduce_sum in f32-or-wider?"""
+    producer = {}
+    for eqn in jaxpr.eqns:
+        for v in eqn.outvars:
+            producer[v] = eqn
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name != "reduce_sum" \
+                or not _is_wide(eqn.outvars[0]):
+            continue
+        src = producer.get(eqn.invars[0])
+        if src is None:
+            continue
+        sq = src.primitive.name == "integer_pow" \
+            and src.params.get("y") == 2
+        sq = sq or (src.primitive.name == "mul"
+                    and src.invars[0] is src.invars[1])
+        if not sq:
+            continue
+        diff = producer.get(src.invars[0])
+        if diff is not None and diff.primitive.name == "sub":
+            return True
+    return False
+
+
+@dataclass(frozen=True)
+class PrecisionFlowRule(Rule):
+    name: str = RULE_NAME
+    description: str = ("bf16 dot_general accumulations must be followed by "
+                        "an f32 direct-diff refinement (sub -> square -> "
+                        "reduce_sum) before winners are consumed")
+    kind: str = "jaxpr"
+
+    def check_jaxpr(self, target, closed_jaxpr):
+        from .walker import iter_sites, sub_jaxprs, unwrap
+
+        bf16_dot = None
+        refined = False
+        seen_jaxprs = []
+
+        def collect(jaxpr):
+            seen_jaxprs.append(unwrap(jaxpr))
+            for eqn in unwrap(jaxpr).eqns:
+                for _k, sub in sub_jaxprs(eqn):
+                    collect(sub)
+
+        collect(closed_jaxpr)
+        for jaxpr in seen_jaxprs:
+            if not refined and _jaxpr_has_refinement(jaxpr):
+                refined = True
+        for site in iter_sites(closed_jaxpr):
+            if site.eqn.primitive.name == "dot_general" \
+                    and any(_is_bf16(v) for v in site.eqn.invars[:2]):
+                bf16_dot = site
+                break
+        if bf16_dot is None or refined:
+            return []
+        return [Finding(
+            rule=self.name, severity="error", target=target,
+            message=("bf16 dot_general accumulation with no f32 direct-"
+                     "diff refinement epilogue in the traced computation "
+                     "— expanded-form d2 error flips near-tie NN winners "
+                     "(the refine_topk_d2 / _fused_resolve contract, "
+                     "kernels/sweep.py)"),
+            where=bf16_dot.where)]
+
+
+register_rule(PrecisionFlowRule())

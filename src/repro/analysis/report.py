@@ -1,0 +1,100 @@
+"""The full analysis sweep: every ExecSpec combo x every subsystem target,
+plus the project rules, folded into one JSON-able report.
+
+``run_sweep`` is what ``python -m repro.analysis`` (and CI) runs.  Shape::
+
+    {"ok": bool,                  # no error-severity findings
+     "findings": [Finding.to_dict(), ...],
+     "targets": ["<spec>:<target>", ...],   # every trace analyzed
+     "skipped": ["<reason>", ...],          # impossible combos, with why
+     "audits":  {key: {...}, ...}}          # registered check_rep audits
+
+Plan-time analysis is suspended for the duration (``REPRO_ANALYSIS=0``):
+the sweep runs the same jaxpr rules itself over a superset of the
+plan-time targets, and a plan-time :class:`AnalysisError` mid-sweep would
+surface as an untraceable-target warning instead of the real findings.
+"""
+from __future__ import annotations
+
+import os
+
+from .rules import project_rules
+
+
+def _repo_root() -> str:
+    # .../src/repro/analysis/report.py -> repo root
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.dirname(os.path.dirname(os.path.dirname(here)))
+
+
+def run_sweep(repo_root: str | None = None) -> dict:
+    from repro.engine.planner import plan
+
+    from .audit import all_audits
+    from .rules import analyze_jaxpr
+    from .targets import (analyze_plan, distributed_targets, serve_targets,
+                          stream_targets, sweep_specs)
+
+    root = repo_root or _repo_root()
+    findings: list = []
+    targets_run: list[str] = []
+    skipped: list[str] = []
+
+    prev = os.environ.get("REPRO_ANALYSIS")
+    os.environ["REPRO_ANALYSIS"] = "0"
+    try:
+        for spec in sweep_specs():
+            label = spec.describe()
+            pl = plan(None, spec)
+
+            plan_findings = analyze_plan(pl)
+            findings.extend(plan_findings)
+            targets_run.append(f"{label}:batch")
+
+            for name, thunk in _collect(
+                    (distributed_targets, pl), (stream_targets, pl),
+                    skipped=skipped, label=label):
+                target = f"{label}:{name}"
+                targets_run.append(target)
+                findings.extend(_analyze_one(target, thunk, analyze_jaxpr))
+
+            serve_t, serve_skip = serve_targets(spec)
+            skipped.extend(serve_skip)
+            for name, thunk in serve_t:
+                target = f"{label}:{name}"
+                targets_run.append(target)
+                findings.extend(_analyze_one(target, thunk, analyze_jaxpr))
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_ANALYSIS", None)
+        else:
+            os.environ["REPRO_ANALYSIS"] = prev
+
+    for rule in project_rules():
+        findings.extend(rule.check_project(root))
+
+    audits = {k: {"reason": a.reason, "collectives": list(a.collectives)}
+              for k, a in sorted(all_audits().items())}
+    errors = [f for f in findings if f.severity == "error"]
+    return {"ok": not errors,
+            "findings": [f.to_dict() for f in findings],
+            "targets": sorted(set(targets_run)),
+            "skipped": sorted(set(skipped)),
+            "audits": audits}
+
+
+def _collect(*sources, skipped: list, label: str):
+    for fn, pl in sources:
+        tgts, skip = fn(pl)
+        skipped.extend(f"{label}:{s}" for s in skip)
+        yield from tgts
+
+
+def _analyze_one(target: str, thunk, analyze_jaxpr) -> list:
+    from .targets import _trace_failure
+
+    try:
+        closed = thunk()
+    except Exception as exc:                 # noqa: BLE001
+        return [_trace_failure(target, exc)]
+    return analyze_jaxpr(target, closed)

@@ -1,0 +1,110 @@
+"""Rule base + registry for the jaxpr static analyzer.
+
+Two rule kinds share one :class:`Finding` vocabulary:
+
+* **jaxpr rules** (``kind = "jaxpr"``) check one traced computation at a
+  time — they run at plan time (``repro.engine.planner.plan``) on each
+  plan's canonical traces, and in the CLI sweep on every target the
+  subsystems expose.
+* **project rules** (``kind = "project"``) check the source tree or the
+  spec/dispatch tables once per sweep (R2's audit scan, R5's coverage
+  cross-check); they have no single jaxpr to anchor to.
+
+This module is deliberately jax-free: importing it (e.g. via
+``repro.analysis.audit`` from a kernel module, or ``python -m
+repro.analysis`` before XLA flags are finalized) must not initialize any
+backend.  Rule implementations that need jaxpr machinery import
+``repro.analysis.walker`` lazily.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One analyzer result: a rule violation at a location.
+
+    ``severity`` is ``"error"`` (fails the sweep and plan-time checks) or
+    ``"warn"`` (reported, never fatal — used for skipped/untraceable
+    targets, not for rule violations).
+    """
+
+    rule: str                  # e.g. "R1-spmd-gather"
+    severity: str              # "error" | "warn"
+    target: str                # traced target or file being checked
+    message: str
+    where: str = ""            # jaxpr path or file:line
+
+    def to_dict(self) -> dict:
+        return {"rule": self.rule, "severity": self.severity,
+                "target": self.target, "message": self.message,
+                "where": self.where}
+
+
+class AnalysisError(ValueError):
+    """Raised by plan-time analysis when error-severity findings exist."""
+
+    def __init__(self, findings):
+        self.findings = tuple(findings)
+        lines = [f"static analysis found {len(self.findings)} problem(s):"]
+        lines += [f"  [{f.rule}] {f.target} @ {f.where}: {f.message}"
+                  for f in self.findings]
+        lines.append("  (set REPRO_ANALYSIS=0 to bypass while debugging)")
+        super().__init__("\n".join(lines))
+
+
+@dataclass(frozen=True)
+class Rule:
+    """A registered analyzer rule.  Subclasses override one ``check_*``."""
+
+    name: str = ""
+    description: str = ""
+    kind: str = "jaxpr"        # "jaxpr" | "project"
+
+    def check_jaxpr(self, target: str, closed_jaxpr) -> list[Finding]:
+        return []
+
+    def check_project(self, repo_root: str) -> list[Finding]:
+        return []
+
+
+_RULES: list[Rule] = []
+_LOADED = False
+
+
+def register_rule(rule: Rule) -> Rule:
+    _RULES.append(rule)
+    return rule
+
+
+def _load() -> None:
+    """Import the rule modules once (lazy: they pull in jax)."""
+    global _LOADED
+    if _LOADED:
+        return
+    from . import r1_spmd_gather, r2_check_rep, r3_precision  # noqa: F401
+    from . import r4_pallas, r5_coverage                       # noqa: F401
+    _LOADED = True
+
+
+def all_rules() -> tuple[Rule, ...]:
+    _load()
+    return tuple(_RULES)
+
+
+def jaxpr_rules() -> tuple[Rule, ...]:
+    return tuple(r for r in all_rules() if r.kind == "jaxpr")
+
+
+def project_rules() -> tuple[Rule, ...]:
+    return tuple(r for r in all_rules() if r.kind == "project")
+
+
+def analyze_jaxpr(target: str, closed_jaxpr,
+                  rules: tuple[Rule, ...] | None = None) -> list[Finding]:
+    """Run every (or the given) jaxpr rule over one traced computation."""
+    out: list[Finding] = []
+    for rule in (jaxpr_rules() if rules is None else rules):
+        out.extend(rule.check_jaxpr(target, closed_jaxpr))
+    return out

@@ -30,14 +30,14 @@ Everything is exact: output equals core.run_exdpc / run_scan (tested).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.analysis.audit import audit_check_rep
 from repro.core.dpc_types import DPCResult, with_jitter
 from repro.core.grid import build_grid, point_span_bounds
 from repro.engine.planner import as_plan
@@ -154,6 +154,11 @@ def _halo_window(tbl_my, lo_my, axis, n_shards: int, W: int,
 
 
 def _make_rho_halo(axis, d_cut, block, span_w, n_shards, W, hf, hb, be):
+    @audit_check_rep(
+        "window rows arrive via the ppermute ring and axis_index-gated "
+        "selects; every output row is P(axis)-local (my rows' counts), "
+        "nothing is claimed replicated",
+        collectives=("ppermute", "axis_index"))
     def rho(my_pts, my_starts, my_ends, tbl_my, lo_my):
         """Halo rho phase: ring-assemble the window, then the backend's
         span-masked range-count primitive (pallas tiles when the backend is
@@ -169,6 +174,10 @@ def _make_rho_halo(axis, d_cut, block, span_w, n_shards, W, hf, hb, be):
 
 
 def _make_delta_halo(axis, d_cut, block, span_w, n_shards, W, hf, hb, be):
+    @audit_check_rep(
+        "same ppermute-ring window assembly as the rho phase; outputs "
+        "(delta, parent, found) are all P(axis)-local per-row results",
+        collectives=("ppermute", "axis_index"))
     def delta(my_pts, my_rk, my_starts, my_ends, tbl_my, rk_my, lo_my):
         """Halo delta phase: strictly-denser NN within d_cut over the halo
         window, through the backend's span-masked NN primitive."""
@@ -257,6 +266,10 @@ def _make_delta(axis, d_cut, block, span_w):
 
 
 def _make_fallback(axis, block, be, layout=None):
+    @audit_check_rep(
+        "the table and its keys are made identical on every member by "
+        "all_gather(tiled) before use; outputs are P(axis)-local query "
+        "rows", collectives=("all_gather",))
     def fallback(q_pts, q_rk, tbl_my, rk_my):
         """Dense denser-NN for unresolved rows (padded, rk=+inf rows inert):
         the backend's Def.-2 primitive over my queries x gathered table."""
@@ -269,6 +282,10 @@ def _make_fallback(axis, block, be, layout=None):
 
 
 def _make_rho_dense(axis, d_cut, block, be, layout=None):
+    @audit_check_rep(
+        "the gathered table is replicated by all_gather(tiled); the range "
+        "count reads it and writes P(axis)-local per-row counts only",
+        collectives=("all_gather",))
     def rho(my_pts, tbl_my):
         """Engine tiles: my rows x gathered table (kernel range count;
         grid-pruned worklist when layout='block-sparse' — the shard rows
@@ -281,6 +298,10 @@ def _make_rho_dense(axis, d_cut, block, be, layout=None):
 
 
 def _make_delta_dense(axis, block, be, layout=None):
+    @audit_check_rep(
+        "table and keys replicated by all_gather(tiled) before the NN "
+        "kernel; outputs are P(axis)-local per-row (delta, parent, ok)",
+        collectives=("all_gather",))
     def delta(my_pts, my_rk, tbl_my, rk_my):
         """Engine denser-NN kernel: globally exact, no fallback needed."""
         tbl = jax.lax.all_gather(tbl_my, axis, axis=0, tiled=True)
@@ -291,6 +312,66 @@ def _make_delta_dense(axis, block, be, layout=None):
         return dd, pp, jnp.ones(dd.shape, bool)
 
     return delta
+
+
+_BS_SAFE_CACHE: dict = {}
+
+
+def _bs_shards_safe(flat_mesh, axis: str, be) -> bool:
+    """R1 probe: trace the block-sparse shard phases this mesh would run
+    and ask :func:`repro.analysis.spmd_gather_safe` whether any sort-
+    derived value feeds a gather/dynamic-slice index inside the
+    multi-partition body — the exact pattern the pinned jax-0.4.37 XLA CPU
+    SPMD pipeline miscompiles (``ord_i[p]`` degrades to ``p``, silently
+    skipping kept tiles).  Memoized per (shard count, axis, backend):
+    the verdict depends only on the traced program, not on data."""
+    S = int(flat_mesh.devices.size)
+    key = (S, axis, be.name)
+    hit = _BS_SAFE_CACHE.get(key)
+    if hit is not None:
+        return hit
+    from repro.analysis import spmd_gather_safe
+
+    rho_fn = _make_rho_dense(axis, 1.0, 256, be, layout="block-sparse")
+    delta_fn = _make_delta_dense(axis, 256, be, layout="block-sparse")
+    sm_rho = shard_map(rho_fn, mesh=flat_mesh,
+                       in_specs=(P(axis), P(axis)), out_specs=P(axis),
+                       check_rep=False)
+    sm_delta = shard_map(delta_fn, mesh=flat_mesh, in_specs=(P(axis),) * 4,
+                         out_specs=(P(axis), P(axis), P(axis)),
+                         check_rep=False)
+    pts = jnp.zeros((S * 8, 2), jnp.float32)
+    rk = jnp.zeros((S * 8,), jnp.float32)
+    ok = bool(spmd_gather_safe(sm_rho, pts, pts)
+              and spmd_gather_safe(sm_delta, pts, rk, pts, rk))
+    _BS_SAFE_CACHE[key] = ok
+    return ok
+
+
+def shard_blocksparse_layout(pl, mesh) -> str | None:
+    """The layout the per-shard gather-strategy phases run with:
+    ``"block-sparse"`` when the plan asks for it AND the shards can honor
+    it, else ``None`` (dense degrade — correct results always beat pruned
+    tile counts).
+
+    Per-shard block-sparse needs jit-built worklists (inside shard_map),
+    so only ``worklist_traceable`` backends qualify.  On multi-partition
+    meshes the phases must additionally pass the R1 probe
+    (:func:`_bs_shards_safe`): today the jnp ring walk's sort-derived
+    order-gather trips it — the pattern the pinned XLA miscompiles — so
+    multi-shard phases keep the dense per-shard tiles
+    (tests/test_distributed_dpc.py pins this with a 4-device block-sparse
+    == exdpc subprocess check).  Rewriting the worklist kernels so no
+    sort-tainted index reaches a gather inside the shard body flips the
+    probe and re-enables block-sparse here with no further changes."""
+    be = pl.backend
+    if not (pl.sparse and be.worklist_traceable):
+        return None
+    flat_mesh = flatten_mesh(mesh, pl.data_axis)
+    if flat_mesh.devices.size == 1:
+        return "block-sparse"
+    return ("block-sparse"
+            if _bs_shards_safe(flat_mesh, pl.data_axis, be) else None)
 
 
 def distributed_dpc(points, cfg: DistDPCConfig | None = None,
@@ -346,18 +427,7 @@ def distributed_dpc(points, cfg: DistDPCConfig | None = None,
     pts_s = _pad_rows(grid.points, m, 1e9)
 
     halo = cfg.strategy == "halo"
-    # Per-shard block-sparse needs jit-built worklists (inside shard_map),
-    # AND a single-partition module: on multi-device meshes the pinned
-    # jax 0.4.37 XLA CPU SPMD pipeline miscompiles the ring walk's
-    # order-gather (`ord_i[p]` degrades to `p`, silently skipping kept
-    # tiles — reproduced with identical wrong outputs on 2- and 4-device
-    # meshes, exact on 1 device, and "fixed" by merely adding the order
-    # array to the module outputs).  Until the repo moves off the pinned
-    # XLA, multi-shard phases keep the dense per-shard tiles: correct
-    # results always beat pruned tile counts (tests/test_distributed_dpc.py
-    # pins this with a 4-device block-sparse == exdpc subprocess check).
-    shard_layout = ("block-sparse" if pl.sparse and be.worklist_traceable
-                    and S_data == 1 else None)
+    shard_layout = shard_blocksparse_layout(pl, flat_mesh)
     dense = (be.mxu_dense or shard_layout == "block-sparse") and not halo
     if halo or not dense:   # the dense kernel tiles never read the spans
         starts, ends = point_span_bounds(grid)      # (n, S_spans)

@@ -177,6 +177,41 @@ _PLANS: OrderedDict = OrderedDict()
 _HITS = 0
 _MISSES = 0
 
+# plan-time static analysis results, memoized per ExecSpec (the canonical
+# traces depend only on the spec's resolved axes, not the point shape)
+_ANALYZED: dict = {}
+
+
+def _plan_check(pl: DPCPlan) -> None:
+    """Run the jaxpr static analyzer (``repro.analysis``) over the plan's
+    canonical traces, once per spec; raise on error-severity findings so a
+    spec that dispatches into a flagged kernel path fails at ``plan()``,
+    before any data is touched.  ``REPRO_ANALYSIS=0`` bypasses (debugging
+    escape hatch; the CI sweep still covers every combo)."""
+    import os
+
+    if os.environ.get("REPRO_ANALYSIS", "1").lower() in ("0", "off", "no"):
+        return
+    res = _ANALYZED.get(pl.spec)
+    if res is None:
+        from repro import analysis
+
+        # tracing the canonical targets may host-build throwaway worklists;
+        # keep plan() neutral w.r.t. the instrumentation counters tests
+        # assert on (worklist_build_count / worklist_cache_hits)
+        builds, hits = blocksparse._WL_BUILDS, blocksparse._WL_CACHE_HITS
+        try:
+            res = tuple(analysis.analyze_plan(pl))
+        finally:
+            blocksparse._WL_BUILDS = builds
+            blocksparse._WL_CACHE_HITS = hits
+        _ANALYZED[pl.spec] = res
+    errors = [f for f in res if f.severity == "error"]
+    if errors:
+        from repro.analysis import AnalysisError
+
+        raise AnalysisError(errors)
+
 
 def plan(points_spec: PointsSpec | tuple | None,
          exec_spec: ExecSpec | None = None) -> DPCPlan:
@@ -198,6 +233,7 @@ def plan(points_spec: PointsSpec | tuple | None,
         return hit
     _MISSES += 1
     pl = DPCPlan(points_spec, spec)
+    _plan_check(pl)
     _PLANS[key] = pl
     while len(_PLANS) > _PLAN_CACHE_MAX:
         _PLANS.popitem(last=False)

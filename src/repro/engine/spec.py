@@ -101,13 +101,35 @@ class ExecSpec:
         """Build a spec from the uniform CLI form ``backend:layout:precision``
         (trailing segments optional; empty / ``-`` / ``auto`` segments mean
         default) — e.g. ``jnp:block-sparse``, ``pallas::bf16``, ``:dense``.
+
+        Malformed forms fail here with the *offending segment* named and
+        that axis's valid values enumerated (plus a segment-order hint when
+        the value belongs to a different axis), rather than falling through
+        to the generic constructor errors.
         """
+        axes = ("backend", "layout", "precision")
+        valids = {"backend": tuple(available_backends()),
+                  "layout": LAYOUTS, "precision": PRECISIONS}
         parts = (text or "").split(":")
         if len(parts) > 3:
-            raise ValueError(f"--exec takes backend:layout:precision, "
-                             f"got {text!r}")
+            detail = "; ".join(f"{a}: {', '.join(valids[a])}" for a in axes)
+            raise ValueError(
+                f"--exec takes at most 3 ':'-separated segments "
+                f"(backend:layout:precision), got {len(parts)} in {text!r} "
+                f"— valid values per segment: {detail}")
         parts += [""] * (3 - len(parts))
         norm = [None if p in ("", "-", "auto") else p for p in parts]
+        for pos, (axis, value) in enumerate(zip(axes, norm), start=1):
+            if value is None or value in valids[axis]:
+                continue
+            other = next((a for a in axes
+                          if a != axis and value in valids[a]), None)
+            hint = (f" ({value!r} is a {other} — segment order is "
+                    f"backend:layout:precision)") if other else ""
+            raise ValueError(
+                f"--exec segment {pos} ({axis}) got {value!r}; valid "
+                f"{axis} values: {', '.join(valids[axis])}, or "
+                f"empty/'-'/'auto' for the default{hint}")
         return cls(backend=norm[0], layout=norm[1], precision=norm[2],
                    **overrides)
 

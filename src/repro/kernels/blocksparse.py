@@ -404,8 +404,25 @@ def worklist_cache_hits() -> int:
     return _WL_CACHE_HITS
 
 
+def _src_dtype_tag(arr) -> str:
+    """The dtype the CALLER handed us, before any canonicalizing cast.
+
+    Worklists are fingerprinted on the f32-converted coordinates, but two
+    callers passing the same coordinates at different source precisions are
+    different cache identities: the sweep kernels consume the *original*
+    arrays, so a worklist built for one must not be served to the other
+    (a f64 pad row that rounds onto a kept f32 point, say, has different
+    pruning slack).  The tag rides the fingerprint alongside the bytes.
+    """
+    if arr is None:
+        return "none"
+    dt = getattr(arr, "dtype", None)
+    return str(dt) if dt is not None else np.asarray(arr).dtype.name
+
+
 def _wl_fingerprint(x, y, d_cut, block_n, block_m, count, nn, k, nn_dcut,
-                    nn_col_counts, starts, ends) -> bytes:
+                    nn_col_counts, starts, ends,
+                    src_dtypes: tuple = ()) -> bytes:
     import hashlib
 
     h = hashlib.blake2b(digest_size=16)
@@ -419,7 +436,7 @@ def _wl_fingerprint(x, y, d_cut, block_n, block_m, count, nn, k, nn_dcut,
             h.update(a.tobytes())
     h.update(repr((None if d_cut is None else float(d_cut), block_n,
                    block_m, bool(count), nn, int(k),
-                   bool(nn_dcut))).encode())
+                   bool(nn_dcut), src_dtypes)).encode())
     return h.digest()
 
 
@@ -445,13 +462,15 @@ def build_flat_worklist(x, y, d_cut=None, *, block_n: int, block_m: int,
     no rebuild.
     """
     global _WL_BUILDS, _WL_CACHE_HITS
+    src_dtypes = (_src_dtype_tag(x), _src_dtype_tag(y))
     x = np.asarray(x, np.float32)
     y = np.asarray(y, np.float32)
     key = None
     if _WL_CACHE_STACK:
         cache, max_entries, max_bytes = _WL_CACHE_STACK[-1]
         key = _wl_fingerprint(x, y, d_cut, block_n, block_m, count, nn, k,
-                              nn_dcut, nn_col_counts, starts, ends)
+                              nn_dcut, nn_col_counts, starts, ends,
+                              src_dtypes)
         hit = cache.get(key)
         if hit is not None:
             _WL_CACHE_HITS += 1

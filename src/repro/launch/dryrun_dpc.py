@@ -9,7 +9,6 @@ import argparse     # noqa: E402
 import json         # noqa: E402
 import time         # noqa: E402
 
-import numpy as np  # noqa: E402
 import jax          # noqa: E402
 import jax.numpy as jnp                      # noqa: E402
 from jax.sharding import Mesh, PartitionSpec as P   # noqa: E402

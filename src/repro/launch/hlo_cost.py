@@ -24,7 +24,6 @@ program).  Used by launch/dryrun.py and benchmarks/roofline.py.
 """
 from __future__ import annotations
 
-import json
 import re
 from dataclasses import dataclass, field
 

@@ -21,13 +21,12 @@ import time
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.configs import ARCHS, reduce_config
 from repro.data.tokens import TokenPipeline
 from repro.launch.mesh import batch_sharding, rules_for
 from repro.models import build_model
-from repro.models.common import MeshRules
 from repro.train import TrainStepConfig, make_train_step
 from repro.train import checkpoint as ckpt
 from repro.train.optimizer import adamw_init, opt_state_specs

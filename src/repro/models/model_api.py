@@ -10,10 +10,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Any, Callable
 
-import jax.numpy as jnp
-
 from . import moe, rglru, ssm, transformer as tfm
-from .common import ArchConfig, MeshRules
+from .common import ArchConfig
 
 
 @dataclass(frozen=True)

@@ -13,8 +13,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from . import attention as attn_mod
-from .attention import KVCache, attention, out_project, qkv_project, update_cache
-from .common import (ArchConfig, MeshRules, constrain, cross_entropy,
+from .attention import KVCache, attention, out_project, qkv_project
+from .common import (ArchConfig, MeshRules, constrain,
                      dense_init, embed_init, glu_ffn, logical_to_spec,
                      rms_norm, softcap, mscan)
 

@@ -15,7 +15,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import Model
-from repro.models.common import ArchConfig
 from repro.serve.dpc_kv import DPCKVConfig, compress_kv
 
 

@@ -42,6 +42,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.analysis.audit import audit_check_rep
 from repro.core.grid import canonical_group_coords
 from repro.launch.mesh import flatten_mesh
 
@@ -212,6 +213,11 @@ def make_sharded_repair(mesh, axis: str, backend, d_cut: float):
     """
     flat = flatten_mesh(mesh, axis)
 
+    @audit_check_rep(
+        "per-row repairs are P(axis)-local; the one replicated output "
+        "(inserted rows' fresh counts) is produced by an explicit psum, "
+        "identical on every member by construction",
+        collectives=("psum",))
     def f(w_my, rho_my, batch, sgn, ins):
         d = backend.range_count_delta(w_my, batch, sgn, d_cut)
         part = backend.range_count(ins, w_my, d_cut)

@@ -4,7 +4,7 @@ import os
 # the 512-device override (and only in its own process).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
-import repro  # noqa: E402  (enables x64 before any test builds arrays)
+import repro  # noqa: E402,F401  (enables x64 before any test builds arrays)
 
 
 def pytest_configure(config):

@@ -1,0 +1,385 @@
+"""repro.analysis: the jaxpr-level static analyzer (rules R1-R5 + audits).
+
+The R1 positive control reconstructs the PR 4 distributed block-sparse
+miscompile shape — a sort-derived order gather inside a multi-partition
+shard_map body — which needs >1 device, so it runs in a subprocess with 4
+fake host devices (the test_distributed_dpc.py pattern).  Everything else
+(R2 source scans, R3/R4 hand-built traces, R5 cross-checks, the audit
+registry, the plan-time gate) runs in-process.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import AnalysisError, all_audits, audit_check_rep, audit_of
+from repro.analysis import r2_check_rep, r3_precision, r4_pallas, \
+    r5_coverage
+from repro.analysis.rules import Finding, analyze_jaxpr
+from repro.engine import ExecSpec
+from repro.engine import planner
+
+_REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+# ---------------------------------------------------------------- audits
+class TestAuditRegistry:
+    def test_decorator_attaches_and_registers(self):
+        @audit_check_rep("outputs are psum-reduced, identical per member",
+                         collectives=("psum",))
+        def body(x):
+            return x
+
+        rec = audit_of(body)
+        assert rec is not None
+        assert rec.collectives == ("psum",)
+        assert "psum-reduced" in rec.reason
+        assert body(3) == 3, "decorator must return the function unchanged"
+        assert rec.key in all_audits()
+
+    def test_empty_reason_rejected(self):
+        with pytest.raises(ValueError, match="reason"):
+            audit_check_rep("")
+        with pytest.raises(ValueError, match="reason"):
+            audit_check_rep("   ")
+
+    def test_production_bodies_are_audited(self):
+        """R2 on the real tree: every check_rep=False shard_map body in
+        src/repro resolves to a def carrying @audit_check_rep."""
+        findings = r2_check_rep.CheckRepAuditRule().check_project(_REPO_ROOT)
+        assert findings == [], [f.to_dict() for f in findings]
+
+
+# ------------------------------------------------------------------- R2
+_R2_BAD = """\
+from jax.experimental.shard_map import shard_map
+
+def build(mesh, spec):
+    def body(x):
+        return x
+    return shard_map(body, mesh=mesh, in_specs=spec, out_specs=spec,
+                     check_rep=False)
+"""
+
+_R2_GOOD = """\
+from jax.experimental.shard_map import shard_map
+from repro.analysis.audit import audit_check_rep
+
+def build(mesh, spec):
+    @audit_check_rep("P(axis)-local rows only; no replicated outputs")
+    def body(x):
+        return x
+    return shard_map(body, mesh=mesh, in_specs=spec, out_specs=spec,
+                     check_rep=False)
+"""
+
+_R2_FACTORY = """\
+from jax.experimental.shard_map import shard_map
+
+def _make_body(scale):
+    def body(x):
+        return x * scale
+    return body
+
+def build(mesh, spec):
+    body = _make_body(2.0)
+    return shard_map(body, mesh=mesh, in_specs=spec, out_specs=spec,
+                     check_rep=False)
+"""
+
+_R2_LAMBDA = """\
+from jax.experimental.shard_map import shard_map
+
+def build(mesh, spec):
+    return shard_map(lambda x: x, mesh=mesh, in_specs=spec, out_specs=spec,
+                     check_rep=False)
+"""
+
+
+class TestR2CheckRepAudit:
+    def _scan(self, tmp_path, src):
+        p = tmp_path / "mod.py"
+        p.write_text(src)
+        return r2_check_rep.scan_module(str(p), "mod.py")
+
+    def test_unaudited_body_flagged(self, tmp_path):
+        findings = self._scan(tmp_path, _R2_BAD)
+        assert len(findings) == 1
+        assert "no @audit_check_rep" in findings[0].message
+        assert findings[0].severity == "error"
+
+    def test_audited_body_clean(self, tmp_path):
+        assert self._scan(tmp_path, _R2_GOOD) == []
+
+    def test_factory_returned_body_resolved(self, tmp_path):
+        """The distributed/dpc.py idiom: body = _make_xyz(...) resolves
+        through the factory's returned inner def."""
+        findings = self._scan(tmp_path, _R2_FACTORY)
+        assert len(findings) == 1
+        assert "`body`" in findings[0].message
+
+    def test_unresolvable_body_flagged(self, tmp_path):
+        findings = self._scan(tmp_path, _R2_LAMBDA)
+        assert len(findings) == 1
+        assert "cannot" in findings[0].message
+
+    def test_default_check_rep_ignored(self, tmp_path):
+        src = _R2_BAD.replace(",\n                     check_rep=False", "")
+        assert self._scan(tmp_path, src) == []
+
+
+# ------------------------------------------------------------------- R3
+def _bf16_expanded_argmin(x, y):
+    """The mixed-precision sweep shape: expanded-form d2 with a bf16 dot."""
+    g = jnp.dot(x.astype(jnp.bfloat16),
+                y.astype(jnp.bfloat16).T).astype(jnp.float32)
+    d2 = (x * x).sum(-1)[:, None] + (y * y).sum(-1)[None, :] - 2.0 * g
+    return jnp.argmin(d2, axis=1)
+
+
+def _r3_findings(fn):
+    x = jnp.zeros((8, 2), jnp.float32)
+    y = jnp.zeros((5, 2), jnp.float32)
+    closed = jax.make_jaxpr(fn)(x, y)
+    return [f for f in analyze_jaxpr("r3-control", closed)
+            if f.rule == r3_precision.RULE_NAME]
+
+
+class TestR3PrecisionFlow:
+    def test_bf16_dot_without_refinement_fires(self):
+        assert len(_r3_findings(_bf16_expanded_argmin)) == 1
+
+    def test_refinement_epilogue_passes(self):
+        def refined(x, y):
+            idx = _bf16_expanded_argmin(x, y)
+            y_sel = y[idx]
+            # the refine_topk_d2 / _fused_resolve contract: direct-diff
+            # square-sum in full precision over the kept winners
+            return jnp.sum((x - y_sel) ** 2, axis=-1)
+
+        assert _r3_findings(refined) == []
+
+    def test_pure_f32_never_fires(self):
+        def f32_only(x, y):
+            d2 = ((x[:, None, :] - y[None, :, :]) ** 2).sum(-1)
+            return jnp.argmin(d2, axis=1)
+
+        assert _r3_findings(f32_only) == []
+
+
+# ------------------------------------------------------------------- R4
+def _pallas_identity(block_rows):
+    from jax.experimental import pallas as pl
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = x_ref[...] + jnp.float32(1.0)
+
+    n = 96
+    grid = -(-n // block_rows)
+    return pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((block_rows, 2), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 2), jnp.float32),
+        interpret=True)
+
+
+def _r4_findings(block_rows):
+    x = jnp.zeros((96, 2), jnp.float32)
+    closed = jax.make_jaxpr(_pallas_identity(block_rows))(x)
+    return [f for f in analyze_jaxpr("r4-control", closed)
+            if f.rule == r4_pallas.RULE_NAME]
+
+
+class TestR4PallasLegality:
+    def test_nondivisible_block_fires(self):
+        findings = _r4_findings(40)          # 96 % 40 != 0
+        assert findings, "96-row array with 40-row blocks must be flagged"
+        assert all(f.severity == "error" for f in findings)
+
+    def test_divisible_block_passes(self):
+        assert _r4_findings(32) == []        # 96 % 32 == 0
+
+
+# ------------------------------------------------------------------- R5
+class TestR5SpecCoverage:
+    def test_clean_on_tree(self):
+        findings = r5_coverage.SpecCoverageRule().check_project(_REPO_ROOT)
+        assert findings == [], [f.to_dict() for f in findings]
+
+    def test_snapshot_drift_detected(self, monkeypatch):
+        monkeypatch.setattr(r5_coverage, "KNOWN_BACKENDS", ("jnp", "pallas"))
+        findings = r5_coverage.SpecCoverageRule().check_project(_REPO_ROOT)
+        assert any("backends changed" in f.message for f in findings)
+
+    @pytest.mark.parametrize("backend", ["jnp", "pallas", "pallas-interpret"])
+    @pytest.mark.parametrize("layout", ["dense", "block-sparse"])
+    @pytest.mark.parametrize("precision", ["f32", "bf16"])
+    def test_axis_product_matches_validity_table(self, backend, layout,
+                                                 precision):
+        """Every axis value, by literal name (R5's corpus check counts on
+        exactly this parametrization): ExecSpec accepts/rejects the full
+        cross product where the documented table says."""
+        if r5_coverage._expected_spec_valid(backend, layout, precision):
+            spec = ExecSpec(backend=backend, layout=layout,
+                            precision=precision)
+            assert spec.describe() == f"{backend}:{layout}:{precision}"
+        else:
+            with pytest.raises(ValueError):
+                ExecSpec(backend=backend, layout=layout, precision=precision)
+
+
+# ------------------------------------------------ plan-time gate (planner)
+class TestPlanTimeGate:
+    def test_error_findings_fail_plan(self, monkeypatch):
+        from repro import analysis
+
+        bad = Finding(rule="X-test", severity="error", target="t",
+                      message="injected failure")
+        monkeypatch.setattr(analysis, "analyze_plan", lambda pl: [bad])
+        spec = ExecSpec(backend="jnp", block=137)   # unique -> memo miss
+        monkeypatch.delenv("REPRO_ANALYSIS", raising=False)
+        planner._ANALYZED.pop(spec, None)
+        planner._PLANS.pop((None, spec), None)
+        try:
+            with pytest.raises(AnalysisError, match="REPRO_ANALYSIS=0"):
+                planner.plan(None, spec)
+            # the documented escape hatch bypasses without re-analyzing
+            monkeypatch.setenv("REPRO_ANALYSIS", "0")
+            assert planner.plan(None, spec) is not None
+        finally:
+            planner._ANALYZED.pop(spec, None)
+            planner._PLANS.pop((None, spec), None)
+
+    def test_warnings_do_not_fail_plan(self, monkeypatch):
+        from repro import analysis
+
+        warn = Finding(rule="X-test", severity="warn", target="t",
+                       message="advisory only")
+        monkeypatch.setattr(analysis, "analyze_plan", lambda pl: [warn])
+        spec = ExecSpec(backend="jnp", block=139)
+        monkeypatch.delenv("REPRO_ANALYSIS", raising=False)
+        planner._ANALYZED.pop(spec, None)
+        planner._PLANS.pop((None, spec), None)
+        try:
+            assert planner.plan(None, spec) is not None
+        finally:
+            planner._ANALYZED.pop(spec, None)
+            planner._PLANS.pop((None, spec), None)
+
+    def test_real_plans_analyze_clean(self):
+        """The canonical plan-time targets of the shipping specs carry no
+        findings at all (error or warn) on this tree."""
+        from repro.analysis import analyze_plan
+
+        for spec in (ExecSpec(),
+                     ExecSpec(backend="jnp", layout="block-sparse"),
+                     ExecSpec(backend="pallas-interpret",
+                              layout="block-sparse")):
+            pl = planner.plan(None, spec)
+            assert list(analyze_plan(pl)) == []
+
+
+# ----------------------------------------------- R1 + the distributed gate
+def test_single_device_blocksparse_layout():
+    """shard_blocksparse_layout: single-partition meshes never hit the
+    miscompile (no SPMD partitioning), so traceable-worklist plans keep
+    block-sparse; dense plans and host-worklist backends never do."""
+    from repro.distributed import dpc as ddpc
+
+    mesh = jax.make_mesh((1,), ("data",))
+    bs = planner.plan(None, ExecSpec(backend="jnp", layout="block-sparse"))
+    assert ddpc.shard_blocksparse_layout(bs, mesh) == "block-sparse"
+    dense = planner.plan(None, ExecSpec(backend="jnp"))
+    assert ddpc.shard_blocksparse_layout(dense, mesh) is None
+    host = planner.plan(None, ExecSpec(backend="pallas-interpret",
+                                       layout="block-sparse"))
+    assert ddpc.shard_blocksparse_layout(host, mesh) is None
+
+
+_R1_SCRIPT = r"""
+import warnings, json, os
+warnings.filterwarnings("ignore")
+os.environ["REPRO_ANALYSIS"] = "0"     # probe plans, not production fits
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+from repro.analysis import spmd_gather_safe, r1_spmd_gather
+from repro.analysis.rules import analyze_jaxpr
+from repro.analysis.targets import distributed_targets, stream_targets
+from repro.distributed import dpc as ddpc
+from repro.engine import ExecSpec
+from repro.engine.planner import plan
+from repro.kernels.backend import get_backend
+
+mesh = jax.make_mesh((4,), ("data",))
+be = get_backend("jnp")
+
+# (a) the PR 4 reconstruction: the block-sparse per-shard rho phase (the
+# jnp ring worklist's sort-derived order gather) over 4 partitions
+rho_fn = ddpc._make_rho_dense("data", 1.0, 256, be, layout="block-sparse")
+sm_rho = shard_map(rho_fn, mesh=mesh, in_specs=(P("data"), P("data")),
+                   out_specs=P("data"), check_rep=False)
+pts = jnp.zeros((32, 2), jnp.float32)
+safe = spmd_gather_safe(sm_rho, pts, pts)
+closed = jax.make_jaxpr(sm_rho)(pts, pts)
+r1 = [f for f in analyze_jaxpr("pr4-reconstruction", closed)
+      if f.rule == r1_spmd_gather.RULE_NAME]
+
+# (b) the production guard consumes the same probe: block-sparse degrades
+# on this mesh, dense is never eligible
+pl_bs = plan(None, ExecSpec(backend="jnp", layout="block-sparse"))
+pl_dense = plan(None, ExecSpec(backend="jnp"))
+lay_bs = ddpc.shard_blocksparse_layout(pl_bs, mesh)
+lay_dense = ddpc.shard_blocksparse_layout(pl_dense, mesh)
+
+# (c) the clean tree: every distributed/stream target these plans run
+# today analyzes with zero error findings (the degraded phases, the halo
+# phases, the stencil span-table gathers -- none trip R1)
+errors = []
+for pl in (pl_bs, pl_dense):
+    tgts = list(distributed_targets(pl)[0]) + list(stream_targets(pl)[0])
+    for name, thunk in tgts:
+        for f in analyze_jaxpr(name, thunk()):
+            if f.severity == "error":
+                errors.append([name, f.rule])
+
+out = {"safe": bool(safe), "n_r1": len(r1),
+       "messages": [f.message for f in r1],
+       "layout_bs": lay_bs, "layout_dense": lay_dense,
+       "clean_errors": errors}
+print("RESULT" + json.dumps(out))
+"""
+
+
+def _run_subprocess(script):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(_REPO_ROOT, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT")][0]
+    return json.loads(line[len("RESULT"):])
+
+
+def test_r1_fires_on_pr4_reconstruction_and_tree_is_clean():
+    """ISSUE 6 acceptance, all three R1 halves in one 4-device subprocess:
+    the resurrected PR 4 shape is flagged, the guard degrades block-sparse
+    shard phases off the probe (not a device-count special case), and the
+    shipping distributed/stream traces analyze clean."""
+    out = _run_subprocess(_R1_SCRIPT)
+    assert out["safe"] is False
+    assert out["n_r1"] >= 1
+    assert any("sort-derived" in m for m in out["messages"])
+    assert out["layout_bs"] is None, \
+        "multi-partition block-sparse must degrade while the probe fails"
+    assert out["layout_dense"] is None
+    assert out["clean_errors"] == []

@@ -22,8 +22,7 @@ from repro.core import DPCConfig, compute_dpc
 from repro.core.dpc_types import density_jitter
 from repro.core.grid import build_grid
 from repro.kernels import get_backend
-from repro.kernels.blocksparse import (build_flat_worklist, worklist_stats,
-                                       BS_BLOCK_N, BS_BLOCK_M)
+from repro.kernels.blocksparse import build_flat_worklist, worklist_stats
 
 BACKENDS = ["jnp", "pallas-interpret"]
 SEED_MATRIX = [(17, 2, 0, 0), (96, 3, 3, 1), (64, 4, 6, 2), (2, 2, 0, 3),

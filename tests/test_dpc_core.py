@@ -11,7 +11,7 @@ from repro.core.approxdpc import run_approxdpc
 from repro.core.exdpc import run_exdpc
 from repro.core.sapproxdpc import run_sapproxdpc
 from repro.core.scan import run_scan
-from repro.data.points import gaussian_mixture, random_walk, with_noise
+from repro.data.points import gaussian_mixture, with_noise
 
 
 def _dataset(n=1200, k=6, d=2, overlap=0.02, seed=0):

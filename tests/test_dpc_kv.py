@@ -1,7 +1,6 @@
 """DPC-KV cache compression: shapes, mass preservation, and accuracy vs a
 random-eviction baseline on clustered keys (where density peaks matter)."""
 import numpy as np
-import pytest
 import jax
 import jax.numpy as jnp
 

@@ -5,7 +5,6 @@ mesh and onto a single device, and verify bit-identical values — the
 fault-tolerance contract of train/checkpoint.py (checkpoints store logical
 global arrays; any mesh whose axes divide the shapes can load them).
 """
-import json
 import os
 import subprocess
 import sys

@@ -226,6 +226,43 @@ class TestPlanReuse:
         eng.fit(_mix(160, seed=14))
         assert blocksparse.worklist_build_count() > builds_after_first
 
+    def test_worklist_fingerprint_source_dtype_miss(self):
+        """Cache identity is the caller's data, not its f32 shadow: the
+        same coordinates handed in at a different source dtype must MISS
+        (the sweep kernels consume the original arrays; only the worklist
+        builder canonicalizes to f32, so the converted bytes collide)."""
+        pts32 = np.asarray(_mix(96, seed=16), np.float32)
+        pts64 = pts32.astype(np.float64)
+        kw = dict(block_n=64, block_m=64)
+        with blocksparse.worklist_cache({}):
+            before = blocksparse.worklist_build_count()
+            hits0 = blocksparse.worklist_cache_hits()
+            blocksparse.build_flat_worklist(pts32, pts32, 500.0, **kw)
+            assert blocksparse.worklist_build_count() == before + 1
+            blocksparse.build_flat_worklist(pts32, pts32, 500.0, **kw)
+            assert blocksparse.worklist_build_count() == before + 1, \
+                "identical call must be served from the cache"
+            assert blocksparse.worklist_cache_hits() == hits0 + 1
+            blocksparse.build_flat_worklist(pts64, pts64, 500.0, **kw)
+            assert blocksparse.worklist_build_count() == before + 2, \
+                "same coords at f64 hit the f32-coord fingerprint"
+            blocksparse.build_flat_worklist(pts64, pts32, 500.0, **kw)
+            assert blocksparse.worklist_build_count() == before + 3, \
+                "per-argument dtype tags: (f64, f32) != (f64, f64)"
+
+    def test_worklist_fingerprint_perturbation_miss(self):
+        """One moved point is a different identity — content-addressed
+        keys, not shape-addressed."""
+        pts = np.asarray(_mix(96, seed=17), np.float32)
+        bumped = pts.copy()
+        bumped[17, 0] += 1.0
+        kw = dict(block_n=64, block_m=64)
+        with blocksparse.worklist_cache({}):
+            before = blocksparse.worklist_build_count()
+            blocksparse.build_flat_worklist(pts, pts, 500.0, **kw)
+            blocksparse.build_flat_worklist(bumped, bumped, 500.0, **kw)
+            assert blocksparse.worklist_build_count() == before + 2
+
     def test_direct_backend_calls_never_cache(self):
         """Without an active plan context the builder is stateless."""
         pts, = (np.asarray(_mix(96, seed=15)),)
@@ -370,6 +407,66 @@ class TestFailFastValidation:
         assert ExecSpec.parse("pallas::bf16").precision == "bf16"
         with pytest.raises(ValueError):
             ExecSpec.parse("a:b:c:d")
+
+
+class TestExecParseErrors:
+    """Each malformed --exec form fails with the offending segment named
+    and that axis's valid values enumerated (ISSUE 6 satellite)."""
+
+    def test_too_many_segments(self):
+        with pytest.raises(ValueError) as ei:
+            ExecSpec.parse("jnp:dense:f32:extra")
+        msg = str(ei.value)
+        assert "at most 3" in msg and "got 4" in msg
+        # the recovery path: every axis's valid values are in the message
+        for value in ("jnp", "pallas", "pallas-interpret", "dense",
+                      "block-sparse", "f32", "bf16"):
+            assert value in msg
+
+    def test_unknown_backend_segment(self):
+        with pytest.raises(ValueError) as ei:
+            ExecSpec.parse("cuda:dense")
+        msg = str(ei.value)
+        assert "segment 1 (backend)" in msg and "'cuda'" in msg
+        assert "jnp" in msg and "pallas-interpret" in msg
+        assert "empty/'-'/'auto'" in msg
+
+    def test_unknown_layout_segment(self):
+        with pytest.raises(ValueError) as ei:
+            ExecSpec.parse("jnp:sparse")
+        msg = str(ei.value)
+        assert "segment 2 (layout)" in msg and "'sparse'" in msg
+        assert "dense" in msg and "block-sparse" in msg
+
+    def test_unknown_precision_segment(self):
+        with pytest.raises(ValueError) as ei:
+            ExecSpec.parse("jnp:dense:fp8")
+        msg = str(ei.value)
+        assert "segment 3 (precision)" in msg and "'fp8'" in msg
+        assert "f32" in msg and "bf16" in msg
+
+    def test_misordered_value_hint(self):
+        # a precision in the layout slot: the error says which axis the
+        # value actually belongs to and restates the segment order
+        with pytest.raises(ValueError) as ei:
+            ExecSpec.parse("jnp:bf16")
+        msg = str(ei.value)
+        assert "segment 2 (layout)" in msg
+        assert "'bf16' is a precision" in msg
+        assert "backend:layout:precision" in msg
+
+    def test_backend_in_precision_slot_hint(self):
+        with pytest.raises(ValueError) as ei:
+            ExecSpec.parse("::jnp")
+        assert "'jnp' is a backend" in str(ei.value)
+
+    def test_valid_combos_still_parse(self):
+        assert ExecSpec.parse("") == ExecSpec()
+        assert ExecSpec.parse("-:block-sparse:-").layout == "block-sparse"
+        assert ExecSpec.parse("auto:dense").layout == "dense"
+        # combo validation still happens (in the constructor, post-parse)
+        with pytest.raises(ValueError, match="bf16"):
+            ExecSpec.parse("jnp::bf16")
 
 
 class TestEnginePredict:

@@ -1,12 +1,10 @@
 """Label propagation (pointer jumping) vs a sequential DFS reference."""
 import numpy as np
-import jax.numpy as jnp
 import pytest
 
 pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core.dpc_types import DPCResult
 from repro.core.labels import assign_labels, decision_graph
 from repro.core.exdpc import run_exdpc
 from repro.data.points import gaussian_mixture
