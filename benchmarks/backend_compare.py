@@ -263,11 +263,22 @@ def smoke_gate(rec, committed, tolerance: float = SMOKE_TOLERANCE):
     return failures
 
 
+def _export_obs(path: str | None):
+    """Write the repro.obs metrics/trace snapshot accumulated by this run
+    (worklist builds/cache hits, plan-cache traffic, any spans) so CI can
+    archive and diff it alongside the throughput record."""
+    if not path:
+        return
+    from repro.obs import report as obs_report
+    obs_report.export_snapshot(path)
+    print(f"[backend_compare] wrote obs snapshot to {path}", flush=True)
+
+
 def main(n: int = 4096, d: int = 3, repeats: int = 3,
          backends: list[str] | None = None,
          out: str = "experiments/backends", smoke: bool = False,
          baseline: str = "BENCH_core.json",
-         refresh_baseline: bool = False):
+         refresh_baseline: bool = False, obs_snapshot: str | None = None):
     if smoke:
         # gated jnp pass at the committed shape + a small kernel exercise
         committed = json.load(open(baseline))
@@ -278,6 +289,7 @@ def main(n: int = 4096, d: int = 3, repeats: int = 3,
                        if jax.default_backend() != "tpu" else ["pallas"])
         del exercise  # correctness/coverage only; never gated
         failures = smoke_gate(rec, committed)
+        _export_obs(obs_snapshot)
         if failures:
             print("[backend_compare --smoke] FAIL", flush=True)
             for f in failures:
@@ -305,6 +317,7 @@ def main(n: int = 4096, d: int = 3, repeats: int = 3,
         print(f"[backend_compare] {name}: fused rho_delta {sp:.2f}x over "
               f"two-pass; block-sparse {rec['sparse_speedup'][name]:.2f}x "
               f"over dense fused", flush=True)
+    _export_obs(obs_snapshot)
     return rec
 
 
@@ -329,6 +342,9 @@ if __name__ == "__main__":
     ap.add_argument("--refresh-baseline", action="store_true",
                     help="rewrite the committed baseline, including the "
                          "n=64k block-sparse acceptance record")
+    ap.add_argument("--obs-snapshot", default=None,
+                    help="write the repro.obs metrics snapshot here "
+                         "(CI archives it next to the throughput record)")
     a = ap.parse_args()
     backends = a.backends.split(",") if a.backends else None
     if a.exec_spec:
@@ -340,4 +356,5 @@ if __name__ == "__main__":
     main(n=a.n, d=a.d, repeats=a.repeats,
          backends=backends, out=a.out,
          smoke=a.smoke, baseline=a.baseline,
-         refresh_baseline=a.refresh_baseline)
+         refresh_baseline=a.refresh_baseline,
+         obs_snapshot=a.obs_snapshot)

@@ -15,23 +15,35 @@ import numpy as np
 import jax
 
 
-def timeit(fn, *args, repeats: int = 3, warmup: int = 1, **kw):
-    """Median wall seconds of fn(*args); blocks on all jax outputs."""
+def timeit_stats(fn, *args, repeats: int = 3, warmup: int = 1, **kw) -> dict:
+    """Device-synced timing of ``fn(*args, **kw)``.
+
+    Every warmup result is fully synced (``jax.block_until_ready`` over the
+    whole output tree) *before* t0 of the first measured repeat, so compile
+    time can never leak into the measurements.  Each measured repeat is
+    likewise synced inside its own window, so ``times_s`` are true
+    device-complete wall times, not async-dispatch times.
+
+    Returns ``{"times_s": [per-repeat seconds], "median_s", "min_s",
+    "warmup_s" (total seconds spent in the synced warmup runs)}``.
+    """
+    w0 = time.perf_counter()
     for _ in range(warmup):
-        _block(fn(*args, **kw))
+        jax.block_until_ready(fn(*args, **kw))
+    warmup_s = time.perf_counter() - w0
     ts = []
     for _ in range(repeats):
         t0 = time.perf_counter()
-        _block(fn(*args, **kw))
+        jax.block_until_ready(fn(*args, **kw))
         ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
+    return {"times_s": ts, "median_s": float(np.median(ts)),
+            "min_s": float(np.min(ts)), "warmup_s": warmup_s}
 
 
-def _block(out):
-    for leaf in jax.tree.leaves(out):
-        if hasattr(leaf, "block_until_ready"):
-            leaf.block_until_ready()
-    return out
+def timeit(fn, *args, repeats: int = 3, warmup: int = 1, **kw) -> float:
+    """Median device-synced wall seconds of fn(*args); see timeit_stats."""
+    return timeit_stats(fn, *args, repeats=repeats, warmup=warmup,
+                        **kw)["median_s"]
 
 
 from repro.core.tuning import pick_dcut  # noqa: F401  (re-export)

@@ -35,12 +35,20 @@ def main(argv=None) -> int:
     parser.add_argument("--root", default=None,
                         help="repo root for the project rules "
                              "(default: derived from the package location)")
+    parser.add_argument("--obs-snapshot", default=None,
+                        help="also write the repro.obs metrics/trace "
+                             "snapshot accumulated during the sweep here")
     args = parser.parse_args(argv)
 
     _pin_environment()
     from .report import run_sweep
 
     report = run_sweep(args.root)
+    if args.obs_snapshot:
+        from repro.obs import report as obs_report
+        obs_report.export_snapshot(args.obs_snapshot)
+        print(f"analysis: wrote obs snapshot to {args.obs_snapshot}",
+              file=sys.stderr)
     text = json.dumps(report, indent=2 if args.pretty else None,
                       sort_keys=True)
     if args.out == "-":

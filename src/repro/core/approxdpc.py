@@ -28,6 +28,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.engine.planner import as_plan
 
 from .dpc_types import DPCResult, density_jitter, with_jitter
@@ -52,7 +53,8 @@ def run_approxdpc(points, d_cut: float, *, g: int | None = None,
     n = points.shape[0]
     block = pl.block or 256     # stencil row-tile default (jnp path)
     if grid is None:
-        grid = build_grid(points, d_cut, g=g)
+        with obs.span("approxdpc.grid", n=n) as sp:
+            grid = sp.sync(build_grid(points, d_cut, g=g))
 
     seg = _group_segments(grid)
     sparse = pl.sparse
@@ -69,12 +71,13 @@ def run_approxdpc(points, d_cut: float, *, g: int | None = None,
             seg_max = jax.ops.segment_max(rk_s, seg, num_segments=n)
             return rk_s == seg_max[seg]
 
-        rho_s, rk_s, nnd_s, nnp_s = pl.rho_delta(
-            grid.points, grid.points, d_cut,
-            jitter=density_jitter(n)[grid.order],
-            fallback_interest=_maxima_mask_sorted)
-        rho, rho_key, nn_delta_all, nn_parent_all = unsort_dpc(
-            grid, rho_s, rk_s, nnd_s, nnp_s)
+        with obs.span("approxdpc.rho_delta", n=n, layout=pl.layout) as sp:
+            rho_s, rk_s, nnd_s, nnp_s = pl.rho_delta(
+                grid.points, grid.points, d_cut,
+                jitter=density_jitter(n)[grid.order],
+                fallback_interest=_maxima_mask_sorted)
+            rho, rho_key, nn_delta_all, nn_parent_all = sp.sync(unsort_dpc(
+                grid, rho_s, rk_s, nnd_s, nnp_s))
     elif use_engine:
         def _maxima_mask(rho_key):
             # only cell maxima consume the Def.-2 answer (rules 2+3), so the
@@ -86,11 +89,14 @@ def run_approxdpc(points, d_cut: float, *, g: int | None = None,
 
         # one engine invocation answers Def. 1 for every row AND Def. 2 for
         # the rows that will need it (the cell maxima, picked below)
-        rho, rho_key, nn_delta_all, nn_parent_all = pl.rho_delta(
-            points, points, d_cut, jitter=density_jitter(n),
-            fallback_interest=_maxima_mask)
+        with obs.span("approxdpc.rho_delta", n=n, layout=pl.layout) as sp:
+            rho, rho_key, nn_delta_all, nn_parent_all = sp.sync(pl.rho_delta(
+                points, points, d_cut, jitter=density_jitter(n),
+                fallback_interest=_maxima_mask))
     else:
-        rho = density_per_cell(grid, block=cell_block)[grid.inv_order]
+        with obs.span("approxdpc.rho", n=n) as sp:
+            rho = sp.sync(density_per_cell(grid,
+                                           block=cell_block)[grid.inv_order])
         rho_key = with_jitter(rho)
     rk_sorted = rho_key[grid.order]
 
@@ -110,18 +116,21 @@ def run_approxdpc(points, d_cut: float, *, g: int | None = None,
         #     cell maxima consume it (every other row is rule 1).  NN within
         #     d_cut -> rule 2 (delta stamped d_cut); NN beyond d_cut ->
         #     rule 3 exact root delta (inf at the peak).
-        is_cm = np.asarray(is_cellmax[grid.inv_order])
-        cm_rows = is_cm.nonzero()[0]
-        nn_delta = nn_delta_all[cm_rows]
-        nn_parent = nn_parent_all[cm_rows]
-        parent1 = jnp.where(parent_s >= 0, grid.order[parent_s], -1)
-        parent1 = parent1[grid.inv_order]
-        found2 = jnp.isfinite(nn_delta) & (nn_delta < d_cut)
-        cm_delta = jnp.where(found2, jnp.float32(d_cut),
-                             jnp.where(jnp.isfinite(nn_delta), nn_delta,
-                                       jnp.inf))
-        delta = jnp.full((n,), d_cut, jnp.float32).at[cm_rows].set(cm_delta)
-        parent = parent1.at[cm_rows].set(nn_parent).astype(jnp.int32)
+        with obs.span("approxdpc.rules", n=n) as sp:
+            is_cm = np.asarray(is_cellmax[grid.inv_order])
+            cm_rows = is_cm.nonzero()[0]
+            nn_delta = nn_delta_all[cm_rows]
+            nn_parent = nn_parent_all[cm_rows]
+            parent1 = jnp.where(parent_s >= 0, grid.order[parent_s], -1)
+            parent1 = parent1[grid.inv_order]
+            found2 = jnp.isfinite(nn_delta) & (nn_delta < d_cut)
+            cm_delta = jnp.where(found2, jnp.float32(d_cut),
+                                 jnp.where(jnp.isfinite(nn_delta), nn_delta,
+                                           jnp.inf))
+            delta = jnp.full((n,), d_cut,
+                             jnp.float32).at[cm_rows].set(cm_delta)
+            parent = parent1.at[cm_rows].set(nn_parent).astype(jnp.int32)
+            sp.sync((delta, parent))
         return DPCResult(rho=rho, rho_key=rho_key, delta=delta,
                          parent=parent)
 
@@ -130,20 +139,24 @@ def run_approxdpc(points, d_cut: float, *, g: int | None = None,
     # --- rule 2: cell maxima consult the d_cut stencil ---
     # (the stencil pass computes for every point; only cell maxima consume it.
     #  This is the vector-SPMD trade: lanes are cheaper than gather plumbing.)
-    st_delta, st_parent, st_found = dependent_stencil(grid, rk_sorted, block=block)
-    use2 = is_cellmax & st_found
-    parent_s = jnp.where(use2, st_parent, parent_s)
-    delta_s = jnp.where(use2, jnp.float32(grid.d_cut), delta_s)  # paper sets d_cut
-    resolved_s = resolved_s | use2
+    with obs.span("approxdpc.stencil", n=n) as sp:
+        st_delta, st_parent, st_found = dependent_stencil(grid, rk_sorted,
+                                                          block=block)
+        use2 = is_cellmax & st_found
+        parent_s = jnp.where(use2, st_parent, parent_s)
+        delta_s = jnp.where(use2, jnp.float32(grid.d_cut), delta_s)  # paper: d_cut
+        resolved_s = resolved_s | use2
 
-    delta = delta_s[grid.inv_order]
-    parent_sorted = parent_s[grid.inv_order]
-    parent = jnp.where(parent_sorted >= 0, grid.order[parent_sorted], -1).astype(jnp.int32)
-    resolved = resolved_s[grid.inv_order]
+        delta = delta_s[grid.inv_order]
+        parent_sorted = parent_s[grid.inv_order]
+        parent = jnp.where(parent_sorted >= 0, grid.order[parent_sorted],
+                           -1).astype(jnp.int32)
+        resolved = sp.sync(resolved_s[grid.inv_order])
 
     # --- rule 3: exact fallback for the stem roots ---
-    delta, parent = resolve_fallback(points, rho_key, delta, parent, resolved,
-                                     block=fallback_block,
-                                     backend=pl.backend)
+    with obs.span("approxdpc.fallback") as sp:
+        delta, parent = sp.sync(resolve_fallback(
+            points, rho_key, delta, parent, resolved,
+            block=fallback_block, backend=pl.backend))
     return DPCResult(rho=rho, rho_key=rho_key, delta=delta,
                      parent=parent.astype(jnp.int32))

@@ -24,6 +24,7 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
+from repro import obs
 from repro.engine.planner import as_plan
 from repro.kernels.backend import get_backend
 
@@ -76,16 +77,19 @@ def _run_exdpc_dense(points, d_cut: float, pl,
     n = points.shape[0]
     if pl.grid_sort:
         if grid is None:
-            grid = build_grid(points, d_cut, g=g)
-        rho_s, rk_s, dd_s, pp_s = pl.rho_delta(
-            grid.points, grid.points, d_cut,
-            jitter=density_jitter(n)[grid.order])
-        rho, rho_key, delta, parent = unsort_dpc(grid, rho_s, rk_s, dd_s,
-                                                 pp_s)
+            with obs.span("exdpc.grid", n=n) as sp:
+                grid = sp.sync(build_grid(points, d_cut, g=g))
+        with obs.span("exdpc.rho_delta", n=n, layout=pl.layout) as sp:
+            rho_s, rk_s, dd_s, pp_s = pl.rho_delta(
+                grid.points, grid.points, d_cut,
+                jitter=density_jitter(n)[grid.order])
+            rho, rho_key, delta, parent = sp.sync(
+                unsort_dpc(grid, rho_s, rk_s, dd_s, pp_s))
         return DPCResult(rho=rho, rho_key=rho_key, delta=delta,
                          parent=parent)
-    rho, rho_key, delta, parent = pl.rho_delta(
-        points, points, d_cut, jitter=density_jitter(n))
+    with obs.span("exdpc.rho_delta", n=n, layout=pl.layout) as sp:
+        rho, rho_key, delta, parent = sp.sync(pl.rho_delta(
+            points, points, d_cut, jitter=density_jitter(n)))
     return DPCResult(rho=rho, rho_key=rho_key, delta=delta,
                      parent=parent.astype(jnp.int32))
 
@@ -100,22 +104,28 @@ def run_exdpc(points, d_cut: float, *, g: int | None = None,
 
     block = pl.block or 256     # stencil row-tile default (jnp path)
     if grid is None:
-        grid = build_grid(points, d_cut, g=g)
+        with obs.span("exdpc.grid", n=points.shape[0]) as sp:
+            grid = sp.sync(build_grid(points, d_cut, g=g))
 
-    rho_sorted = density_per_point(grid, block=block)
-    rho = rho_sorted[grid.inv_order]
+    with obs.span("exdpc.rho", n=points.shape[0]) as sp:
+        rho_sorted = density_per_point(grid, block=block)
+        rho = sp.sync(rho_sorted[grid.inv_order])
     rho_key = with_jitter(rho)
 
     rk_sorted = rho_key[grid.order]
-    delta_s, parent_s, resolved_s = dependent_stencil(grid, rk_sorted, block=block)
-    # back to original indexing
-    delta = delta_s[grid.inv_order]
-    parent_sorted = parent_s[grid.inv_order]
-    parent = jnp.where(parent_sorted >= 0, grid.order[parent_sorted], -1).astype(jnp.int32)
-    resolved = resolved_s[grid.inv_order]
+    with obs.span("exdpc.stencil", n=points.shape[0]) as sp:
+        delta_s, parent_s, resolved_s = dependent_stencil(grid, rk_sorted,
+                                                          block=block)
+        # back to original indexing
+        delta = delta_s[grid.inv_order]
+        parent_sorted = parent_s[grid.inv_order]
+        parent = jnp.where(parent_sorted >= 0, grid.order[parent_sorted],
+                           -1).astype(jnp.int32)
+        resolved = sp.sync(resolved_s[grid.inv_order])
 
-    delta, parent = resolve_fallback(points, rho_key, delta, parent, resolved,
-                                     block=fallback_block,
-                                     backend=pl.backend)
+    with obs.span("exdpc.fallback") as sp:
+        delta, parent = sp.sync(resolve_fallback(
+            points, rho_key, delta, parent, resolved,
+            block=fallback_block, backend=pl.backend))
     return DPCResult(rho=rho, rho_key=rho_key, delta=delta,
                      parent=parent.astype(jnp.int32))

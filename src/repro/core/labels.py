@@ -15,6 +15,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
+
 from .dpc_types import DPCResult
 
 
@@ -47,15 +49,17 @@ def _propagate(parent: jnp.ndarray, roots: jnp.ndarray) -> jnp.ndarray:
 
 
 def assign_labels(res: DPCResult, rho_min: float, delta_min: float) -> Clustering:
-    centers, noise = select_centers(res, rho_min, delta_min)
-    root = _propagate(res.parent, centers)
-    # densify center ids -> cluster labels 0..k-1
-    cid = jnp.cumsum(centers.astype(jnp.int32)) - 1           # label at center slots
-    labels = cid[root]
-    # a point whose root is not a center (its chain tops out at a noise peak or
-    # the global peak below delta_min) is unassigned -> noise
-    reached = centers[root]
-    labels = jnp.where(noise | ~reached, -1, labels).astype(jnp.int32)
+    with obs.span("labels.assign") as sp:
+        centers, noise = select_centers(res, rho_min, delta_min)
+        root = _propagate(res.parent, centers)
+        # densify center ids -> cluster labels 0..k-1
+        cid = jnp.cumsum(centers.astype(jnp.int32)) - 1       # label at center slots
+        labels = cid[root]
+        # a point whose root is not a center (its chain tops out at a noise peak
+        # or the global peak below delta_min) is unassigned -> noise
+        reached = centers[root]
+        labels = jnp.where(noise | ~reached, -1, labels).astype(jnp.int32)
+        sp.sync(labels)
     return Clustering(labels=labels, centers=centers,
                       num_clusters=jnp.sum(centers.astype(jnp.int32)))
 

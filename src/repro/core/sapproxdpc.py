@@ -25,6 +25,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.engine.planner import as_plan
 
 from .dpc_types import DPCResult, density_jitter, with_jitter
@@ -55,19 +56,23 @@ def run_sapproxdpc(points, d_cut: float, eps: float = 0.8, *,
     block = pl.block or 256     # stencil row-tile default (jnp path)
     use_engine = pl.backend.mxu_dense or pl.sparse
     if grid is None:
-        grid = build_grid(points, d_cut, g=g)
+        with obs.span("sapproxdpc.grid", n=n) as sp:
+            grid = sp.sync(build_grid(points, d_cut, g=g))
 
     # --- representatives: first point of each coarse cell in grid-sorted order
-    ckey_sorted = coarse_cell_key(grid.points, d_cut, eps)
-    order_c = jnp.argsort(ckey_sorted, stable=True)
-    ck = ckey_sorted[order_c]
-    is_first = jnp.concatenate([jnp.ones((1,), bool), ck[1:] != ck[:-1]])
-    seg = (jnp.cumsum(is_first) - 1).astype(jnp.int32)     # coarse segment ids
-    num_reps = int(jnp.sum(is_first))
-    # rep slot (grid-sorted index) per coarse segment
-    rep_slot_per_seg = jax.ops.segment_min(
-        jnp.where(is_first, order_c, n).astype(jnp.int32), seg, num_segments=n)
-    rep_slots = np.asarray(rep_slot_per_seg[:num_reps])
+    with obs.span("sapproxdpc.reps", n=n) as sp:
+        ckey_sorted = coarse_cell_key(grid.points, d_cut, eps)
+        order_c = jnp.argsort(ckey_sorted, stable=True)
+        ck = ckey_sorted[order_c]
+        is_first = jnp.concatenate([jnp.ones((1,), bool), ck[1:] != ck[:-1]])
+        seg = (jnp.cumsum(is_first) - 1).astype(jnp.int32)  # coarse segment ids
+        num_reps = int(jnp.sum(is_first))
+        # rep slot (grid-sorted index) per coarse segment
+        rep_slot_per_seg = jax.ops.segment_min(
+            jnp.where(is_first, order_c, n).astype(jnp.int32), seg,
+            num_segments=n)
+        rep_slots = np.asarray(rep_slot_per_seg[:num_reps])
+        sp.set(num_reps=num_reps)
     m_pad = _pow2_pad(max(num_reps, 1))
     rep_slots_p = jnp.asarray(np.pad(rep_slots, (0, m_pad - num_reps),
                                      constant_values=n))
@@ -82,11 +87,15 @@ def run_sapproxdpc(points, d_cut: float, eps: float = 0.8, *,
         # (rep slots ascend in grid-sorted order, so the block-sparse layout
         # sees compact query tiles with no extra sort)
         rep_jit = density_jitter(n)[grid.order[jnp.asarray(rep_slots)]]
-        rep_rho, _, nn_d, nn_p = pl.rho_delta(
-            grid.points[jnp.asarray(rep_slots)], grid.points, d_cut,
-            jitter=rep_jit, y_sel_slots=jnp.asarray(rep_slots))
+        with obs.span("sapproxdpc.rep_sweep", n=n, reps=num_reps,
+                      layout=pl.layout) as sp:
+            rep_rho, _, nn_d, nn_p = sp.sync(pl.rho_delta(
+                grid.points[jnp.asarray(rep_slots)], grid.points, d_cut,
+                jitter=rep_jit, y_sel_slots=jnp.asarray(rep_slots)))
     else:
-        rep_rho = density_for_slots(grid, rep_slots_p, block=block)[:num_reps]
+        with obs.span("sapproxdpc.rep_rho", n=n, reps=num_reps) as sp:
+            rep_rho = sp.sync(density_for_slots(grid, rep_slots_p,
+                                                block=block)[:num_reps])
 
     # rho per point: members inherit their representative's rho
     rho_sorted = jnp.zeros((n,), jnp.float32)
@@ -115,50 +124,57 @@ def run_sapproxdpc(points, d_cut: float, eps: float = 0.8, *,
                             np.where(np.isfinite(nn_d), nn_d, np.inf))
         p2_parent = nn_p
     else:
-        # --- phase 1: stencil among representatives (d_cut ⊂ (1+eps)d_cut
-        #     bound) ---
-        rk_reps_only = jnp.where(rep_mask_sorted, rk_sorted, -jnp.inf)
-        p1_delta, p1_parent, p1_found = dependent_stencil_slots(
-            grid, rk_reps_only, rep_slots_p, block=block)
-        # The paper's phase-1 search radius is (1+eps)*d_cut and stamps that
-        # bound as the delta.  Our stencil only resolves within d_cut, so
-        # d_cut is the valid *and tighter* bound — resolved reps can never
-        # become spurious centers at large eps (beyond-paper improvement,
-        # DESIGN.md §9).
-        p1_delta = jnp.where(p1_found, jnp.float32(d_cut), jnp.inf)
+        with obs.span("sapproxdpc.phase12", reps=num_reps) as sp:
+            # --- phase 1: stencil among representatives (d_cut ⊂
+            #     (1+eps)d_cut bound) ---
+            rk_reps_only = jnp.where(rep_mask_sorted, rk_sorted, -jnp.inf)
+            p1_delta, p1_parent, p1_found = dependent_stencil_slots(
+                grid, rk_reps_only, rep_slots_p, block=block)
+            # The paper's phase-1 search radius is (1+eps)*d_cut and stamps
+            # that bound as the delta.  Our stencil only resolves within
+            # d_cut, so d_cut is the valid *and tighter* bound — resolved
+            # reps can never become spurious centers at large eps
+            # (beyond-paper improvement, DESIGN.md §9).
+            p1_delta = jnp.where(p1_found, jnp.float32(d_cut), jnp.inf)
 
-        # --- phase 2: exact NN among representatives for unresolved reps ---
-        found_np = np.asarray(p1_found[:num_reps])
-        unresolved = np.nonzero(~found_np)[0]
-        p2_delta = np.asarray(p1_delta[:num_reps]).copy()
-        p2_parent = np.asarray(p1_parent[:num_reps]).copy()  # sorted slots
-        if unresolved.size:
-            mq = _pow2_pad(unresolved.size)
-            qs = np.pad(unresolved, (0, mq - unresolved.size))
-            fd, fp = pl.denser_nn(rep_pts[qs], rep_rk[qs], rep_pts, rep_rk,
-                                  block=fallback_block, layout=None)
-            fd = np.asarray(fd)[: unresolved.size]
-            fp = np.asarray(fp)[: unresolved.size]        # rep-index space
-            p2_delta[unresolved] = np.where(np.isfinite(fd), fd, np.inf)
-            p2_parent[unresolved] = np.where(
-                fp >= 0, rep_slots[np.maximum(fp, 0)], -1)
+            # --- phase 2: exact NN among representatives for unresolved
+            #     reps ---
+            found_np = np.asarray(p1_found[:num_reps])
+            unresolved = np.nonzero(~found_np)[0]
+            p2_delta = np.asarray(p1_delta[:num_reps]).copy()
+            p2_parent = np.asarray(p1_parent[:num_reps]).copy()  # sorted slots
+            if unresolved.size:
+                mq = _pow2_pad(unresolved.size)
+                qs = np.pad(unresolved, (0, mq - unresolved.size))
+                fd, fp = pl.denser_nn(rep_pts[qs], rep_rk[qs], rep_pts,
+                                      rep_rk, block=fallback_block,
+                                      layout=None)
+                fd = np.asarray(fd)[: unresolved.size]
+                fp = np.asarray(fp)[: unresolved.size]    # rep-index space
+                p2_delta[unresolved] = np.where(np.isfinite(fd), fd, np.inf)
+                p2_parent[unresolved] = np.where(
+                    fp >= 0, rep_slots[np.maximum(fp, 0)], -1)
+            sp.set(unresolved=int(unresolved.size))
 
     # --- assemble per-point delta/parent in sorted space ---
-    rep_parent_per_seg = jnp.full((n,), -1, jnp.int32).at[
-        jnp.arange(num_reps)].set(jnp.asarray(p2_parent))
-    rep_delta_per_seg = jnp.full((n,), jnp.inf).at[
-        jnp.arange(num_reps)].set(jnp.asarray(p2_delta))
-    rep_slot_of_seg = jnp.full((n,), -1, jnp.int32).at[
-        jnp.arange(num_reps)].set(jnp.asarray(rep_slots))
+    with obs.span("sapproxdpc.assemble", n=n) as sp:
+        rep_parent_per_seg = jnp.full((n,), -1, jnp.int32).at[
+            jnp.arange(num_reps)].set(jnp.asarray(p2_parent))
+        rep_delta_per_seg = jnp.full((n,), jnp.inf).at[
+            jnp.arange(num_reps)].set(jnp.asarray(p2_delta))
+        rep_slot_of_seg = jnp.full((n,), -1, jnp.int32).at[
+            jnp.arange(num_reps)].set(jnp.asarray(rep_slots))
 
-    member_delta = jnp.float32(min(eps, 1.0) * d_cut)
-    is_rep_sorted = rep_mask_sorted
-    parent_s = jnp.where(is_rep_sorted, rep_parent_per_seg[seg_of_sorted],
-                         rep_slot_of_seg[seg_of_sorted])
-    delta_s = jnp.where(is_rep_sorted, rep_delta_per_seg[seg_of_sorted],
-                        member_delta)
+        member_delta = jnp.float32(min(eps, 1.0) * d_cut)
+        is_rep_sorted = rep_mask_sorted
+        parent_s = jnp.where(is_rep_sorted, rep_parent_per_seg[seg_of_sorted],
+                             rep_slot_of_seg[seg_of_sorted])
+        delta_s = jnp.where(is_rep_sorted, rep_delta_per_seg[seg_of_sorted],
+                            member_delta)
 
-    delta = delta_s[grid.inv_order]
-    parent_sorted = parent_s[grid.inv_order]
-    parent = jnp.where(parent_sorted >= 0, grid.order[parent_sorted], -1).astype(jnp.int32)
+        delta = delta_s[grid.inv_order]
+        parent_sorted = parent_s[grid.inv_order]
+        parent = jnp.where(parent_sorted >= 0, grid.order[parent_sorted],
+                           -1).astype(jnp.int32)
+        sp.sync((delta, parent))
     return DPCResult(rho=rho, rho_key=rho_key, delta=delta, parent=parent)

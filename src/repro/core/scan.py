@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro import obs
 from repro.engine.planner import as_plan
 from repro.kernels.backend import get_backend
 
@@ -58,15 +59,18 @@ def run_scan(points, d_cut: float, *, exec_spec=None) -> DPCResult:
     pl = as_plan(exec_spec, points)
     n = points.shape[0]
     if pl.grid_sort:
-        grid = build_grid(points, d_cut)
-        rho_s, rk_s, dd_s, pp_s = pl.rho_delta(
-            grid.points, grid.points, d_cut,
-            jitter=density_jitter(n)[grid.order])
-        rho, rho_key, delta, parent = unsort_dpc(grid, rho_s, rk_s, dd_s,
-                                                 pp_s)
+        with obs.span("scan.grid", n=n) as sp:
+            grid = sp.sync(build_grid(points, d_cut))
+        with obs.span("scan.rho_delta", n=n, layout=pl.layout) as sp:
+            rho_s, rk_s, dd_s, pp_s = pl.rho_delta(
+                grid.points, grid.points, d_cut,
+                jitter=density_jitter(n)[grid.order])
+            rho, rho_key, delta, parent = sp.sync(
+                unsort_dpc(grid, rho_s, rk_s, dd_s, pp_s))
         return DPCResult(rho=rho, rho_key=rho_key, delta=delta,
                          parent=parent)
-    rho, rho_key, delta, parent = pl.rho_delta(
-        points, points, d_cut, jitter=density_jitter(n))
+    with obs.span("scan.rho_delta", n=n, layout=pl.layout) as sp:
+        rho, rho_key, delta, parent = sp.sync(pl.rho_delta(
+            points, points, d_cut, jitter=density_jitter(n)))
     return DPCResult(rho=rho, rho_key=rho_key, delta=delta,
                      parent=parent.astype(jnp.int32))

@@ -37,6 +37,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro import obs
 from repro.analysis.audit import audit_check_rep
 from repro.core.dpc_types import DPCResult, with_jitter
 from repro.core.grid import build_grid, point_span_bounds
@@ -420,7 +421,8 @@ def distributed_dpc(points, cfg: DistDPCConfig | None = None,
     flat_mesh = flatten_mesh(mesh, axis)
     S_data = flat_mesh.devices.size
 
-    grid = build_grid(points, cfg.d_cut)
+    with obs.span("dist.grid", n=n_orig) as sp:
+        grid = sp.sync(build_grid(points, cfg.d_cut))
     n = grid.points.shape[0]
     # pad rows to a multiple of the shard count; padded rows are inert
     m = -(-n // S_data) * S_data
@@ -461,21 +463,28 @@ def distributed_dpc(points, cfg: DistDPCConfig | None = None,
         sm_rho = shard_map(rho_fn, mesh=flat_mesh,
                            in_specs=(P(axis),) * 5, out_specs=P(axis),
                            check_rep=not be.mxu_dense)  # pallas: no rep rule
-        rho_sorted = jax.jit(sm_rho)(pts_s, starts_p, ends_p, pts_s,
-                                     lo_arr)[:n]
+        with obs.span("dist.rho", n=n, shards=S_data,
+                      strategy=cfg.strategy) as sp:
+            rho_sorted = sp.sync(jax.jit(sm_rho)(
+                pts_s, starts_p, ends_p, pts_s, lo_arr)[:n])
     elif dense:
         rho_fn = _make_rho_dense(axis, cfg.d_cut, block, be,
                                  layout=shard_layout)
         sm_rho = shard_map(rho_fn, mesh=flat_mesh,
                            in_specs=(P(axis), P(axis)), out_specs=P(axis),
                            check_rep=False)   # pallas_call lacks a rep rule
-        rho_sorted = jax.jit(sm_rho)(pts_s, pts_s)[:n]
+        with obs.span("dist.rho", n=n, shards=S_data,
+                      strategy=cfg.strategy) as sp:
+            rho_sorted = sp.sync(jax.jit(sm_rho)(pts_s, pts_s)[:n])
     else:
         rho_fn = _make_rho(axis, cfg.d_cut, block, span_w)
         sm_rho = shard_map(rho_fn, mesh=flat_mesh,
                            in_specs=(P(axis), P(axis), P(axis), P(axis)),
                            out_specs=P(axis))
-        rho_sorted = jax.jit(sm_rho)(pts_s, starts_p, ends_p, pts_s)[:n]
+        with obs.span("dist.rho", n=n, shards=S_data,
+                      strategy=cfg.strategy) as sp:
+            rho_sorted = sp.sync(jax.jit(sm_rho)(
+                pts_s, starts_p, ends_p, pts_s)[:n])
 
     rho = rho_sorted[grid.inv_order]
     rho_key = with_jitter(rho)
@@ -489,9 +498,10 @@ def distributed_dpc(points, cfg: DistDPCConfig | None = None,
                              in_specs=(P(axis),) * 7,
                              out_specs=(P(axis), P(axis), P(axis)),
                              check_rep=not be.mxu_dense)  # pallas: no rep rule
-        dlt_s, par_s, ok_s = jax.jit(sm_delta)(
-            pts_s, rk_query, starts_p, ends_p, pts_s, rk_sorted_full,
-            lo_arr)
+        with obs.span("dist.delta", n=n, shards=S_data) as sp:
+            dlt_s, par_s, ok_s = sp.sync(jax.jit(sm_delta)(
+                pts_s, rk_query, starts_p, ends_p, pts_s, rk_sorted_full,
+                lo_arr))
     elif dense:
         delta_fn = _make_delta_dense(axis, block, be,
                                      layout=shard_layout)
@@ -499,15 +509,17 @@ def distributed_dpc(points, cfg: DistDPCConfig | None = None,
                              in_specs=(P(axis),) * 4,
                              out_specs=(P(axis), P(axis), P(axis)),
                              check_rep=False)  # pallas_call lacks a rep rule
-        dlt_s, par_s, ok_s = jax.jit(sm_delta)(
-            pts_s, rk_query, pts_s, rk_sorted_full)
+        with obs.span("dist.delta", n=n, shards=S_data) as sp:
+            dlt_s, par_s, ok_s = sp.sync(jax.jit(sm_delta)(
+                pts_s, rk_query, pts_s, rk_sorted_full))
     else:
         delta_fn = _make_delta(axis, cfg.d_cut, block, span_w)
         sm_delta = shard_map(delta_fn, mesh=flat_mesh,
                              in_specs=(P(axis),) * 6,
                              out_specs=(P(axis), P(axis), P(axis)))
-        dlt_s, par_s, ok_s = jax.jit(sm_delta)(
-            pts_s, rk_query, starts_p, ends_p, pts_s, rk_sorted_full)
+        with obs.span("dist.delta", n=n, shards=S_data) as sp:
+            dlt_s, par_s, ok_s = sp.sync(jax.jit(sm_delta)(
+                pts_s, rk_query, starts_p, ends_p, pts_s, rk_sorted_full))
     dlt_s, par_s, ok_s = dlt_s[:n], par_s[:n], ok_s[:n]
 
     # ---- fallback for stencil-unresolved rows (exact, the 1-alpha tail)
@@ -530,7 +542,10 @@ def distributed_dpc(points, cfg: DistDPCConfig | None = None,
                           in_specs=(P(axis), P(axis), P(axis), P(axis)),
                           out_specs=(P(axis), P(axis)),
                           check_rep=not fb_be.mxu_dense)
-        fd, fp = jax.jit(sm_fb)(q_pts, q_rk, pts_s, rk_sorted_full)
+        with obs.span("dist.fallback", unresolved=int(unresolved.size),
+                      shards=S_data) as sp:
+            fd, fp = sp.sync(jax.jit(sm_fb)(q_pts, q_rk, pts_s,
+                                            rk_sorted_full))
         fd = np.asarray(fd)[: unresolved.size]
         fp = np.asarray(fp)[: unresolved.size]
         dlt = np.asarray(dlt_s).copy()

@@ -28,6 +28,8 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
+from repro import obs
+
 from .planner import DPCPlan, as_plan
 from .spec import ExecSpec
 
@@ -141,28 +143,34 @@ class DPCEngine:
 
         points = jnp.asarray(points, jnp.float32)
         self._plan = as_plan(self.exec_spec, points)
-        if self.mesh is not None:
-            if self.algorithm not in _DISTRIBUTED_OK:
-                raise ValueError(
-                    f"distributed fit implements exact DPC "
-                    f"({'/'.join(_DISTRIBUTED_OK)}); algorithm="
-                    f"{self.algorithm!r} is not distributed — drop the "
-                    f"mesh or pick an exact algorithm")
-            from repro.distributed.dpc import distributed_dpc
-            res = distributed_dpc(points, mesh=self.mesh, d_cut=self.d_cut,
-                                  exec_spec=self._plan,
-                                  strategy=self.strategy)
-            cl = assign_labels(res, self.rho_min, self.resolved_delta_min())
-        else:
-            # one dispatch table: the engine IS dpc_api.cluster over the
-            # resolved plan's spec (the driver re-resolves it through the
-            # plan cache, so self._plan stays the object used)
-            from repro.core.dpc_api import DPCConfig, cluster
-            cl, res = cluster(points, DPCConfig(
-                d_cut=self.d_cut, rho_min=self.rho_min,
-                delta_min=self.delta_min, algorithm=self.algorithm,
-                eps=self.eps, grid_dims=self.grid_dims,
-                exec_spec=self._plan.spec))
+        with obs.span("engine.fit", n=int(points.shape[0]),
+                      algorithm=self.algorithm,
+                      plan=self._plan.describe()) as sp:
+            if self.mesh is not None:
+                if self.algorithm not in _DISTRIBUTED_OK:
+                    raise ValueError(
+                        f"distributed fit implements exact DPC "
+                        f"({'/'.join(_DISTRIBUTED_OK)}); algorithm="
+                        f"{self.algorithm!r} is not distributed — drop the "
+                        f"mesh or pick an exact algorithm")
+                from repro.distributed.dpc import distributed_dpc
+                res = distributed_dpc(points, mesh=self.mesh,
+                                      d_cut=self.d_cut,
+                                      exec_spec=self._plan,
+                                      strategy=self.strategy)
+                cl = assign_labels(res, self.rho_min,
+                                   self.resolved_delta_min())
+            else:
+                # one dispatch table: the engine IS dpc_api.cluster over the
+                # resolved plan's spec (the driver re-resolves it through the
+                # plan cache, so self._plan stays the object used)
+                from repro.core.dpc_api import DPCConfig, cluster
+                cl, res = cluster(points, DPCConfig(
+                    d_cut=self.d_cut, rho_min=self.rho_min,
+                    delta_min=self.delta_min, algorithm=self.algorithm,
+                    eps=self.eps, grid_dims=self.grid_dims,
+                    exec_spec=self._plan.spec))
+            sp.sync((res.rho, res.delta, cl.labels))
         self._result = res
         self._clustering = cl
         self._points = points
@@ -182,19 +190,21 @@ class DPCEngine:
                 f"parity contract); algorithm={self.algorithm!r} does not "
                 f"stream")
         tick = None
-        if self._stream is None:
-            from repro.stream.stream_dpc import StreamDPC, StreamDPCConfig
-            cfg = StreamDPCConfig(
-                d_cut=self.d_cut, capacity=self.window_capacity,
-                batch_cap=self.batch_cap, rho_min=self.rho_min,
-                delta_min=self.delta_min, exec_spec=self.exec_spec,
-                **self.stream_options)
-            self._stream = StreamDPC(cfg, mesh=self.mesh)
-            self._plan = self._stream.plan
-            if self._mode == "batch" \
-                    and self._points.shape[0] <= self.window_capacity:
-                tick = self._stream.initialize(np.asarray(self._points))
-        tick = self._stream.ingest(batch)
+        with obs.span("engine.partial_fit") as sp:
+            if self._stream is None:
+                from repro.stream.stream_dpc import StreamDPC, StreamDPCConfig
+                cfg = StreamDPCConfig(
+                    d_cut=self.d_cut, capacity=self.window_capacity,
+                    batch_cap=self.batch_cap, rho_min=self.rho_min,
+                    delta_min=self.delta_min, exec_spec=self.exec_spec,
+                    **self.stream_options)
+                self._stream = StreamDPC(cfg, mesh=self.mesh)
+                self._plan = self._stream.plan
+                if self._mode == "batch" \
+                        and self._points.shape[0] <= self.window_capacity:
+                    tick = self._stream.initialize(np.asarray(self._points))
+            tick = self._stream.ingest(batch)
+            sp.sync(tick.labels)
         self._result = self._stream.result
         self._clustering = self._stream.clustering
         self._mode = "stream"
@@ -215,20 +225,24 @@ class DPCEngine:
         self._require_fitted()
         from repro.stream.service import nearest_label_query
 
-        if self._mode == "stream":
-            s = self._stream
-            ids, pos = s.center_positions()
-            return nearest_label_query(
-                s.be, points, self.d_cut, s.window.device,
-                s._last.labels, ids, pos, pad_multiple=self.batch_cap)
-        labels = np.asarray(self._clustering.labels)
-        centers = np.asarray(self._clustering.centers)
-        pts_np = np.asarray(self._points)
-        c_rows = np.nonzero(centers)[0]
-        return nearest_label_query(
-            self._plan.backend, points, self.d_cut, self._points,
-            labels, labels[c_rows].astype(np.int64), pts_np[c_rows],
-            pad_multiple=self.batch_cap)
+        with obs.span("engine.predict", mode=self._mode) as sp:
+            if self._mode == "stream":
+                s = self._stream
+                ids, pos = s.center_positions()
+                out = nearest_label_query(
+                    s.be, points, self.d_cut, s.window.device,
+                    s._last.labels, ids, pos, pad_multiple=self.batch_cap)
+            else:
+                labels = np.asarray(self._clustering.labels)
+                centers = np.asarray(self._clustering.centers)
+                pts_np = np.asarray(self._points)
+                c_rows = np.nonzero(centers)[0]
+                out = nearest_label_query(
+                    self._plan.backend, points, self.d_cut, self._points,
+                    labels, labels[c_rows].astype(np.int64), pts_np[c_rows],
+                    pad_multiple=self.batch_cap)
+            sp.sync(out.labels)
+        return out
 
     # ----------------------------------------------------- decision graph
     def decision_graph(self):

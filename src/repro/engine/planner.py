@@ -37,6 +37,7 @@ from dataclasses import dataclass
 
 from repro.kernels import blocksparse
 from repro.kernels.backend import KernelBackend, get_backend
+from repro.obs import metrics as _obsm
 
 from .spec import ExecSpec
 
@@ -105,6 +106,7 @@ class DPCPlan:
         else:
             self.worklist_strategy = "host"
         self._wl: OrderedDict = OrderedDict()   # host-worklist LRU
+        self._cost: dict | None = None          # hlo_cost estimate (lazy)
 
     def _native_block(self) -> int:
         if self.backend.mxu_dense:
@@ -124,6 +126,93 @@ class DPCPlan:
 
     def worklist_cache_info(self) -> dict:
         return {"entries": len(self._wl), "max": _WL_CACHE_MAX}
+
+    # --------------------------------------------------- kernel telemetry
+    def telemetry(self, include_cost: bool = False) -> dict:
+        """What this plan resolved to and what its kernels will touch.
+
+        Static fields (resolved axes, grid-sort, pad waste) are free.  The
+        ``worklists`` block reflects the plan's live host-worklist cache —
+        kept-pair counts and pruned-tile fractions for each cached build.
+        ``include_cost=True`` adds a ``launch/hlo_cost`` flop/byte estimate
+        from compiling the canonical fused sweep at the plan's shape; the
+        estimate is computed once per plan and cached (compiles are not
+        free), and host-worklist plans are costed on the dense formulation
+        — an upper bound — because flat worklists cannot be built during an
+        abstract trace.
+        """
+        t: dict = {
+            "backend": self.backend_name,
+            "layout": self.layout,
+            "precision": self.precision,
+            "block": self.resolved_block,
+            "worklist_strategy": self.worklist_strategy,
+            "grid_sort": self.grid_sort,
+            "data_axis": self.data_axis,
+            "shape": None if self.pspec is None
+            else {"n": self.pspec.n, "d": self.pspec.d},
+            "pad": self._pad_telemetry(),
+            "worklists": self._worklist_telemetry(),
+        }
+        if include_cost:
+            t["hlo_cost"] = self._cost_estimate()
+        return t
+
+    def _pad_telemetry(self) -> dict | None:
+        if self.pspec is None:
+            return None
+        n = self.pspec.n
+        # the row tile the sweep actually pads to: block-sparse sweeps use
+        # the ring-tile constants, dense sweeps the resolved block
+        row_block = blocksparse.BS_BLOCK_N if self.sparse \
+            else self.resolved_block
+        padded = -(-n // row_block) * row_block
+        return {"row_block": row_block, "n": n, "padded_n": padded,
+                "pad_waste_frac": round(1.0 - n / padded, 6)}
+
+    def _worklist_telemetry(self) -> dict:
+        out: dict = {"strategy": self.worklist_strategy,
+                     "cache_entries": len(self._wl),
+                     "cache_max": _WL_CACHE_MAX}
+        if self._wl:
+            out["cached"] = [
+                {"n_kept": w.n_kept, "n_total": w.n_total,
+                 "pruned_frac": round(w.pruned_frac, 6)}
+                for w in self._wl.values()]
+        return out
+
+    def _cost_estimate(self) -> dict:
+        if self._cost is not None:
+            return self._cost
+        if self.pspec is None:
+            return {"error": "plan has no bound shape"}
+        import jax
+        import jax.numpy as jnp
+
+        from repro.launch import hlo_cost
+
+        n, d = self.pspec.n, self.pspec.d
+        layout = "block-sparse" if self.worklist_strategy == "traced" \
+            else None
+        formulation = ("block-sparse" if layout else
+                       "dense-upper-bound" if self.sparse else "dense")
+
+        def canonical(pts):
+            return self.backend.rho_delta(
+                pts, pts, 1.0, block=self.resolved_block,
+                precision=self.precision, layout=layout)
+
+        x = jax.ShapeDtypeStruct((n, d), jnp.float32)
+        try:
+            with blocksparse.suspend_counters():
+                compiled = jax.jit(canonical).lower(x).compile()
+            cost = dict(hlo_cost.analyze_compiled(compiled))
+        except Exception as e:  # backend may not lower on this platform
+            return {"error": f"{type(e).__name__}: {e}",
+                    "formulation": formulation}
+        cost["formulation"] = formulation
+        self._cost = cost
+        return cost
 
     # ------------------------------------------------------ value helpers
     def _layout(self, override):
@@ -174,8 +263,13 @@ class DPCPlan:
 
 # ------------------------------------------------------------- plan cache
 _PLANS: OrderedDict = OrderedDict()
-_HITS = 0
-_MISSES = 0
+
+# Cache traffic counts on the repro.obs registry; plan_cache_info() below
+# stays the stable read surface.
+_M_HITS = _obsm.counter("plan_cache_hits", "plan() memo hits")
+_M_MISSES = _obsm.counter("plan_cache_misses", "plan() builds (memo misses)")
+_M_EVICTIONS = _obsm.counter(
+    "plan_cache_evictions", "plans LRU-evicted at _PLAN_CACHE_MAX")
 
 # plan-time static analysis results, memoized per ExecSpec (the canonical
 # traces depend only on the spec's resolved axes, not the point shape)
@@ -197,14 +291,10 @@ def _plan_check(pl: DPCPlan) -> None:
         from repro import analysis
 
         # tracing the canonical targets may host-build throwaway worklists;
-        # keep plan() neutral w.r.t. the instrumentation counters tests
-        # assert on (worklist_build_count / worklist_cache_hits)
-        builds, hits = blocksparse._WL_BUILDS, blocksparse._WL_CACHE_HITS
-        try:
+        # suspend the worklist metrics so plan() stays neutral w.r.t. the
+        # instrumentation tests assert on (worklist_build_count & co.)
+        with blocksparse.suspend_counters():
             res = tuple(analysis.analyze_plan(pl))
-        finally:
-            blocksparse._WL_BUILDS = builds
-            blocksparse._WL_CACHE_HITS = hits
         _ANALYZED[pl.spec] = res
     errors = [f for f in res if f.severity == "error"]
     if errors:
@@ -221,22 +311,22 @@ def plan(points_spec: PointsSpec | tuple | None,
     for shape-independent plans (e.g. a stream driver before its window
     exists).  Same inputs return the *same object*, carrying its caches.
     """
-    global _HITS, _MISSES
     if isinstance(points_spec, tuple):
         points_spec = PointsSpec(*points_spec)
     spec = exec_spec if exec_spec is not None else ExecSpec()
     key = (points_spec, spec)
     hit = _PLANS.get(key)
     if hit is not None:
-        _HITS += 1
+        _M_HITS.inc()
         _PLANS.move_to_end(key)
         return hit
-    _MISSES += 1
+    _M_MISSES.inc()
     pl = DPCPlan(points_spec, spec)
     _plan_check(pl)
     _PLANS[key] = pl
     while len(_PLANS) > _PLAN_CACHE_MAX:
         _PLANS.popitem(last=False)
+        _M_EVICTIONS.inc()
     return pl
 
 
@@ -258,10 +348,15 @@ def as_plan(exec_spec, points=None) -> DPCPlan:
 
 
 def plan_cache_info() -> dict:
-    return {"hits": _HITS, "misses": _MISSES, "entries": len(_PLANS)}
+    return {"hits": int(_M_HITS.value()),
+            "misses": int(_M_MISSES.value()),
+            "evictions": int(_M_EVICTIONS.value()),
+            "entries": len(_PLANS)}
 
 
 def plan_cache_clear() -> None:
-    global _HITS, _MISSES
+    """Drop every cached plan and zero the cache counters (registry
+    families included)."""
     _PLANS.clear()
-    _HITS = _MISSES = 0
+    for m in (_M_HITS, _M_MISSES, _M_EVICTIONS):
+        m._reset()

@@ -50,6 +50,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.obs import metrics as _obsm
+
 # Conservative slack on the f32 bound arithmetic: shrink lower bounds / grow
 # upper bounds by ~10 ulp-equivalents so a bound can never out-round the
 # kernel's own f32 distance (pruning stays exact; costs a few extra tiles).
@@ -374,8 +376,21 @@ def _knn_radius(ub: np.ndarray, col_counts: np.ndarray, k: int) -> np.ndarray:
 # same-shape-different-data inputs can never collide.  With no active cache
 # (direct backend calls) every build runs, exactly as before.
 _WL_CACHE_STACK: list[tuple[dict, int]] = []
-_WL_BUILDS = 0          # total real builds (tests assert reuse with this)
-_WL_CACHE_HITS = 0
+
+# Instrumentation lives on the repro.obs metrics registry (the old
+# ``_WL_BUILDS``/``_WL_CACHE_HITS`` module globals are gone); the functions
+# below are the stable read surface tests and callers use.
+_M_BUILDS = _obsm.counter(
+    "worklist_builds", "host flat-worklist builds (cache misses included)")
+_M_CACHE_HITS = _obsm.counter(
+    "worklist_cache_hits", "fingerprint hits inside a worklist_cache scope")
+_M_FP_MISSES = _obsm.counter(
+    "worklist_fingerprint_misses",
+    "cache was active but the content fingerprint was absent (true rebuild)")
+_G_WL_LEN = _obsm.gauge(
+    "worklist_len", "kept tile-pair count of the most recent build")
+_G_WL_PRUNED = _obsm.gauge(
+    "worklist_pruned_frac", "pruned tile fraction of the most recent build")
 
 
 @contextmanager
@@ -392,16 +407,39 @@ def worklist_cache(cache, max_entries: int = 8,
         _WL_CACHE_STACK.pop()
 
 
+@contextmanager
+def suspend_counters():
+    """Scope inside which worklist instrumentation is discarded.
+
+    Plan-time static analysis (``engine.planner._plan_check``) builds
+    throwaway worklists to probe kernel structure; those must not count as
+    real builds or cache traffic.  On exit every worklist metric family is
+    restored to its value at entry, atomically per family.
+    """
+    saved = [(m, m._state()) for m in
+             (_M_BUILDS, _M_CACHE_HITS, _M_FP_MISSES, _G_WL_LEN,
+              _G_WL_PRUNED)]
+    try:
+        yield
+    finally:
+        for m, state in saved:
+            m._restore(state)
+
+
 def _wl_nbytes(wl: "FlatWorklist") -> int:
     return int(wl.meta.nbytes) + int(wl.lb.nbytes)
 
 
 def worklist_build_count() -> int:
-    return _WL_BUILDS
+    return int(_M_BUILDS.value())
 
 
 def worklist_cache_hits() -> int:
-    return _WL_CACHE_HITS
+    return int(_M_CACHE_HITS.value())
+
+
+def worklist_fingerprint_misses() -> int:
+    return int(_M_FP_MISSES.value())
 
 
 def _src_dtype_tag(arr) -> str:
@@ -461,7 +499,6 @@ def build_flat_worklist(x, y, d_cut=None, *, block_n: int, block_m: int,
     results are memoized by content fingerprint — same data, same knobs,
     no rebuild.
     """
-    global _WL_BUILDS, _WL_CACHE_HITS
     src_dtypes = (_src_dtype_tag(x), _src_dtype_tag(y))
     x = np.asarray(x, np.float32)
     y = np.asarray(y, np.float32)
@@ -473,11 +510,12 @@ def build_flat_worklist(x, y, d_cut=None, *, block_n: int, block_m: int,
                               src_dtypes)
         hit = cache.get(key)
         if hit is not None:
-            _WL_CACHE_HITS += 1
+            _M_CACHE_HITS.inc()
             if hasattr(cache, "move_to_end"):
                 cache.move_to_end(key)
             return hit
-    _WL_BUILDS += 1
+        _M_FP_MISSES.inc()
+    _M_BUILDS.inc()
     n, _ = x.shape
     m = y.shape[0]
     nbr, nbc = -(-n // block_n), -(-m // block_m)
@@ -538,6 +576,8 @@ def build_flat_worklist(x, y, d_cut=None, *, block_n: int, block_m: int,
     out = FlatWorklist(meta=jnp.asarray(meta),
                        lb=jnp.asarray(wl.astype(np.float32)),
                        n_kept=len(wi), n_total=nbr * nbc)
+    _G_WL_LEN.set(out.n_kept)
+    _G_WL_PRUNED.set(round(out.pruned_frac, 6))
     if key is not None:
         cache[key] = out
         while len(cache) > 1 and (

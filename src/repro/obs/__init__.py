@@ -1,0 +1,37 @@
+"""repro.obs — unified tracing, metrics and kernel telemetry.
+
+Three pieces, one switch:
+
+* **Span tracer** (:mod:`.tracer`): ``with obs.span("rho") as sp: ...;
+  sp.sync(out)`` records nested phase timings with host wall-time and
+  fenced device-time, optionally appended to a JSON-lines trace file.
+* **Metrics registry** (:mod:`.metrics`): named counters / gauges /
+  histograms with labels; the engine's plan-cache, worklist, stream and
+  serve counters all live here.
+* **Report CLI** (``python -m repro.obs report``): phase-time table +
+  machine-readable snapshot.
+
+``obs.configure(level=...)`` selects ``"off"`` (default — ``span()``
+returns a shared no-op singleton, zero overhead), ``"metrics"`` (host
+wall-time spans) or ``"trace"`` (host + device-fenced timings, JSONL
+emission).  The level is independent of ``ExecSpec``: it changes what is
+*measured*, never what is *computed*.
+
+This package is a leaf dependency: it imports only jax + stdlib, so every
+layer of the engine (planner, kernels, stream, serve) can import it.
+"""
+from . import metrics, report, tracer
+from .metrics import (Counter, Gauge, Histogram, counter, gauge, histogram,
+                      get_metric)
+from .metrics import reset as reset_metrics
+from .metrics import snapshot as metrics_snapshot
+from .tracer import (LEVELS, NULL_SPAN, configure, enabled, flush, level,
+                     reset_spans, span, spans, tracing)
+
+__all__ = [
+    "LEVELS", "NULL_SPAN", "configure", "level", "enabled", "tracing",
+    "span", "spans", "reset_spans", "flush",
+    "Counter", "Gauge", "Histogram", "counter", "gauge", "histogram",
+    "get_metric", "metrics_snapshot", "reset_metrics",
+    "metrics", "tracer", "report",
+]

@@ -1,0 +1,278 @@
+"""Phase-scoped span tracer with host wall-time and device-time fencing.
+
+``obs.span("rho")`` opens a nested span.  Spans are pure host-side
+bookkeeping: a perf-counter pair plus a thread-local stack to record
+parentage.  Device time is measured by *fencing*: call ``sp.sync(value)``
+on the arrays a phase produced and, at ``level="trace"``, the span blocks
+via ``jax.block_until_ready`` and records the span-start-to-fence window
+as ``device_s`` (the synced compute portion of the phase; post-fence host
+orchestration is what's left in ``host_s - device_s``).  Because the
+fence happens *inside* the span, per-phase host times sum to roughly the
+end-to-end wall time of a run instead of measuring only async dispatch.
+
+Levels (``configure(level=...)``):
+
+* ``"off"``     — default.  ``span()`` returns a shared null singleton
+  (no allocation, no locking, no recording) and ``sync`` is the identity,
+  so instrumented code paths keep JAX's async dispatch untouched.
+* ``"metrics"`` — spans record host wall-time only; no device fencing.
+* ``"trace"``   — spans record host + fenced device time, and are
+  optionally appended to a JSON-lines trace file as they close.
+
+Optionally a ``jax.profiler`` trace can be captured alongside
+(``configure(profile_dir=...)``) for TensorBoard-level detail.
+
+This module must stay a leaf: it may import jax/numpy/stdlib only, never
+``repro.engine``/``repro.kernels`` — those import *us*.
+"""
+from __future__ import annotations
+
+import itertools
+import json
+import os
+import threading
+import time
+import warnings
+
+import jax
+
+__all__ = ["LEVELS", "configure", "level", "enabled", "tracing", "span",
+           "spans", "reset_spans", "flush"]
+
+LEVELS = ("off", "metrics", "trace")
+
+# Retention cap for the in-memory span list (streaming runs emit one span
+# tree per tick; without a cap a long soak would grow unbounded).
+_MAX_SPANS = 200_000
+
+_LOCK = threading.RLock()
+_TLS = threading.local()
+_IDS = itertools.count(1)
+_ORIGIN = time.perf_counter()
+
+
+class _State:
+    level: str = "off"
+    trace_path: str | None = None
+    file = None  # lazily-opened JSONL handle
+    profile_dir: str | None = None
+    profiling: bool = False
+
+
+_STATE = _State()
+_DONE: list[dict] = []
+
+_KEEP = object()  # configure() sentinel: leave this setting unchanged
+
+
+def configure(level=_KEEP, trace_path=_KEEP, profile_dir=_KEEP) -> None:
+    """Set the global observability level and trace sinks.
+
+    ``level`` is one of ``LEVELS``.  ``trace_path`` names a JSON-lines file
+    that closed spans are appended to (``None`` disables file emission;
+    spans stay available in memory via :func:`spans`).  ``profile_dir``
+    starts a ``jax.profiler`` trace into that directory; it is stopped when
+    the level returns to ``"off"`` or ``profile_dir=None`` is passed.
+    Arguments left unspecified keep their current value.
+    """
+    with _LOCK:
+        if level is not _KEEP:
+            if level not in LEVELS:
+                raise ValueError(f"level must be one of {LEVELS}, got {level!r}")
+            _STATE.level = level
+        if trace_path is not _KEEP and trace_path != _STATE.trace_path:
+            if _STATE.file is not None:
+                try:
+                    _STATE.file.close()
+                except OSError:
+                    pass
+                _STATE.file = None
+            _STATE.trace_path = trace_path
+        if profile_dir is not _KEEP and profile_dir != _STATE.profile_dir:
+            _stop_profile()
+            _STATE.profile_dir = profile_dir
+            if profile_dir is not None:
+                try:
+                    jax.profiler.start_trace(profile_dir)
+                    _STATE.profiling = True
+                except Exception as e:  # pragma: no cover - env dependent
+                    warnings.warn(f"obs: jax.profiler capture unavailable: {e}",
+                                  stacklevel=2)
+        if _STATE.level == "off":
+            _stop_profile()
+
+
+def _stop_profile() -> None:
+    if _STATE.profiling:
+        try:
+            jax.profiler.stop_trace()
+        except Exception:  # pragma: no cover - env dependent
+            pass
+        _STATE.profiling = False
+
+
+def level() -> str:
+    return _STATE.level
+
+
+def enabled() -> bool:
+    """True when any instrumentation level is active."""
+    return _STATE.level != "off"
+
+
+def tracing() -> bool:
+    """True when spans fence device work (``level="trace"``)."""
+    return _STATE.level == "trace"
+
+
+class _NullSpan:
+    """Shared no-op span for the off path: entering, closing, ``sync`` and
+    ``set`` all do nothing, so disabled instrumentation costs one dict
+    lookup per ``span()`` call and zero allocation."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+    def sync(self, value=None):
+        return value
+
+    def set(self, **attrs) -> None:
+        pass
+
+
+NULL_SPAN = _NullSpan()
+
+
+class Span:
+    __slots__ = ("name", "attrs", "id", "parent", "depth", "path",
+                 "_t0", "_mark", "_fence_s")
+
+    def __init__(self, name: str, attrs: dict):
+        self.name = name
+        self.attrs = attrs
+        self.id = next(_IDS)
+        self.parent = None
+        self.depth = 0
+        self.path = name
+        self._t0 = 0.0
+        self._mark = 0.0
+        self._fence_s = 0.0
+
+    def set(self, **attrs) -> None:
+        """Attach attributes to an open span (e.g. sizes known mid-phase)."""
+        self.attrs.update(attrs)
+
+    def sync(self, value=None):
+        """Fence device work attributed to this span.
+
+        At trace level, blocks until ``value`` (any pytree of arrays) is
+        ready and accumulates the *synced compute* duration — the time
+        from the span's start (or its previous fence) until the fence
+        completes — as ``device_s``.  On async backends the fence wait
+        dominates this window; on CPU, where jnp executes synchronously
+        inside the producing call, the window still covers the compute,
+        which a fence-wait-only measurement would miss entirely.  Host
+        orchestration after the last fence is excluded, so ``device_s <=
+        host_s`` and per-phase device times sum to ~wall time for a
+        compute-bound run.  Returns ``value`` so it can wrap an
+        expression in place.  Tracer values (inside jit) cannot block and
+        are passed through untouched.
+        """
+        if _STATE.level == "trace" and value is not None:
+            try:
+                jax.block_until_ready(value)
+            except Exception:
+                return value  # abstract values / non-arrays: nothing to fence
+            now = time.perf_counter()
+            self._fence_s += now - self._mark
+            self._mark = now
+        return value
+
+    def __enter__(self):
+        stack = getattr(_TLS, "stack", None)
+        if stack is None:
+            stack = _TLS.stack = []
+        if stack:
+            top = stack[-1]
+            self.parent = top.id
+            self.depth = top.depth + 1
+            self.path = f"{top.path}/{self.name}"
+        stack.append(self)
+        self._t0 = self._mark = time.perf_counter()
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        t1 = time.perf_counter()
+        stack = getattr(_TLS, "stack", None)
+        if stack and stack[-1] is self:
+            stack.pop()
+        host_s = t1 - self._t0
+        rec = {
+            "name": self.name,
+            "path": self.path,
+            "id": self.id,
+            "parent": self.parent,
+            "depth": self.depth,
+            "t0": self._t0 - _ORIGIN,
+            "host_s": host_s,
+            # device_s is a *component* of host_s: the start-to-last-fence
+            # window; host_s adds the post-fence orchestration tail
+            "device_s": self._fence_s if _STATE.level == "trace" else None,
+        }
+        if self.attrs:
+            rec["attrs"] = self.attrs
+        if exc_type is not None:
+            rec["error"] = exc_type.__name__
+        with _LOCK:
+            _DONE.append(rec)
+            if len(_DONE) > _MAX_SPANS:
+                del _DONE[: len(_DONE) - _MAX_SPANS]
+            if _STATE.trace_path is not None:
+                if _STATE.file is None:
+                    _STATE.file = open(_STATE.trace_path, "a")
+                json.dump(rec, _STATE.file, default=str)
+                _STATE.file.write("\n")
+        return False
+
+
+def span(name: str, **attrs):
+    """Open a named span context.  At ``level="off"`` returns the shared
+    null singleton, keeping uninstrumented runs overhead-free."""
+    if _STATE.level == "off":
+        return NULL_SPAN
+    return Span(name, attrs)
+
+
+def spans() -> list[dict]:
+    """Copy of all closed span records (insertion order = close order)."""
+    with _LOCK:
+        return [dict(r) for r in _DONE]
+
+
+def reset_spans() -> None:
+    with _LOCK:
+        _DONE.clear()
+
+
+def flush() -> None:
+    """Flush the JSONL trace file (if one is open) to disk."""
+    with _LOCK:
+        if _STATE.file is not None:
+            _STATE.file.flush()
+
+
+# Environment activation, so benchmarks/CI can instrument without touching
+# code: REPRO_OBS=metrics|trace [REPRO_OBS_TRACE=/path/to/trace.jsonl]
+_env_level = os.environ.get("REPRO_OBS", "").strip().lower()
+if _env_level:
+    if _env_level in LEVELS:
+        configure(level=_env_level,
+                  trace_path=os.environ.get("REPRO_OBS_TRACE") or None)
+    else:  # pragma: no cover - defensive
+        warnings.warn(f"REPRO_OBS={_env_level!r} ignored (not in {LEVELS})",
+                      stacklevel=1)

@@ -30,9 +30,18 @@ from typing import NamedTuple
 import numpy as np
 import jax.numpy as jnp
 
+from repro import obs
 from repro.kernels.density import PAD_COORD
 
 from .stream_dpc import StreamDPC, StreamDPCConfig, StreamTick
+
+# Serve read-path metrics: every nearest_label_query (StreamService.query
+# and DPCEngine.predict both route here) counts its per-point outcomes, so
+# HIT / MISS_FALLBACK / MISS rates are first-class registry series.
+_M_QUERY_POINTS = obs.counter(
+    "serve_query_points", "nearest-label query points, labeled by status")
+_M_QUERY_CALLS = obs.counter(
+    "serve_query_calls", "nearest_label_query invocations")
 
 
 class QueryStatus(enum.IntEnum):
@@ -68,30 +77,36 @@ def nearest_label_query(backend, points, d_cut: float, ref_table,
     """
     points = np.atleast_2d(np.asarray(points, np.float32))
     m = len(points)
-    B = max(int(pad_multiple), 1)
-    mp = -(-m // B) * B                       # fixed-shape request pad
-    q = np.full((mp, points.shape[1]), PAD_COORD, np.float32)
-    q[:m] = points
-    qk = np.full(mp, np.inf, np.float32)      # +inf key: padding inert
-    qk[:m] = -np.inf                          # -inf key: plain NN
-    wkey = jnp.zeros((ref_table.shape[0],), jnp.float32)
-    dist, parent = backend.denser_nn(jnp.asarray(q), jnp.asarray(qk),
-                                     ref_table, wkey)
-    dist = np.asarray(dist)[:m]
-    parent = np.asarray(parent)[:m]
-    ref_labels = np.asarray(ref_labels)
-    labels = np.full(m, -1, np.int64)
-    status = np.full(m, int(QueryStatus.MISS), np.int8)
-    ok = (np.isfinite(dist) & (dist < d_cut)
-          & (parent >= 0) & (parent < len(ref_labels)))
-    labels[ok] = ref_labels[parent[ok]]
-    status[ok] = int(QueryStatus.HIT)
-    miss = ~ok
-    if miss.any() and len(center_ids):
-        d2 = ((points[miss][:, None, :].astype(np.float64)
-               - np.asarray(center_pos)[None]) ** 2).sum(-1)
-        labels[miss] = np.asarray(center_ids)[np.argmin(d2, axis=1)]
-        status[miss] = int(QueryStatus.MISS_FALLBACK)
+    with obs.span("serve.query", m=m) as sp:
+        B = max(int(pad_multiple), 1)
+        mp = -(-m // B) * B                   # fixed-shape request pad
+        q = np.full((mp, points.shape[1]), PAD_COORD, np.float32)
+        q[:m] = points
+        qk = np.full(mp, np.inf, np.float32)  # +inf key: padding inert
+        qk[:m] = -np.inf                      # -inf key: plain NN
+        wkey = jnp.zeros((ref_table.shape[0],), jnp.float32)
+        dist, parent = sp.sync(backend.denser_nn(
+            jnp.asarray(q), jnp.asarray(qk), ref_table, wkey))
+        dist = np.asarray(dist)[:m]
+        parent = np.asarray(parent)[:m]
+        ref_labels = np.asarray(ref_labels)
+        labels = np.full(m, -1, np.int64)
+        status = np.full(m, int(QueryStatus.MISS), np.int8)
+        ok = (np.isfinite(dist) & (dist < d_cut)
+              & (parent >= 0) & (parent < len(ref_labels)))
+        labels[ok] = ref_labels[parent[ok]]
+        status[ok] = int(QueryStatus.HIT)
+        miss = ~ok
+        if miss.any() and len(center_ids):
+            d2 = ((points[miss][:, None, :].astype(np.float64)
+                   - np.asarray(center_pos)[None]) ** 2).sum(-1)
+            labels[miss] = np.asarray(center_ids)[np.argmin(d2, axis=1)]
+            status[miss] = int(QueryStatus.MISS_FALLBACK)
+        _M_QUERY_CALLS.inc()
+        for st in QueryStatus:
+            cnt = int((status == int(st)).sum())
+            if cnt:
+                _M_QUERY_POINTS.inc(cnt, status=st.name)
     return QueryResult(labels=labels, status=status)
 
 
@@ -126,21 +141,23 @@ class StreamService:
         if self._buffered < B:
             return []
         # one concatenation per submit, then slice out full micro-batches
-        flat = np.concatenate(self._buffer)
-        ticks = [self.engine.ingest(flat[i: i + B])
-                 for i in range(0, len(flat) - B + 1, B)]
-        rest = flat[len(ticks) * B:]
-        self._buffer = [rest] if len(rest) else []
-        self._buffered = len(rest)
+        with obs.span("serve.submit", buffered=self._buffered):
+            flat = np.concatenate(self._buffer)
+            ticks = [self.engine.ingest(flat[i: i + B])
+                     for i in range(0, len(flat) - B + 1, B)]
+            rest = flat[len(ticks) * B:]
+            self._buffer = [rest] if len(rest) else []
+            self._buffered = len(rest)
         return ticks
 
     def flush(self) -> StreamTick | None:
         """Ingest the partial remainder (padded to the fixed shape inside)."""
         if self._buffered == 0:
             return None
-        flat = np.concatenate(self._buffer)
-        self._buffer, self._buffered = [], 0
-        return self.engine.ingest(flat)
+        with obs.span("serve.flush", buffered=self._buffered):
+            flat = np.concatenate(self._buffer)
+            self._buffer, self._buffered = [], 0
+            return self.engine.ingest(flat)
 
     # ------------------------------------------------------------ queries
     def query(self, points: np.ndarray) -> QueryResult:

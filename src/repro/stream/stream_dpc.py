@@ -55,6 +55,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.approxdpc import run_approxdpc
 from repro.core.dpc_types import DPCResult, density_jitter
 from repro.core.labels import Clustering, assign_labels
@@ -65,6 +66,19 @@ from repro.kernels.density import PAD_COORD
 from .incremental import CellOverflow, IncrementalGrid, make_sharded_repair, \
     repair_rho
 from .window import SlidingWindow
+
+# Process-wide stream counters on the obs registry.  ``StreamDPC.stats()``
+# keeps its per-instance dict (the legacy read surface); these aggregate
+# across every stream in the process for the metrics snapshot.
+_M_TICKS = obs.counter("stream_ticks", "StreamDPC ticks across all streams")
+_M_FULL = obs.counter("stream_full_recomputes",
+                      "full window recomputes (warm-up / bulk loads)")
+_M_NN_MAXIMA = obs.counter(
+    "stream_nn_maxima_total", "cell maxima seen by the incremental NN stage")
+_M_NN_QUERIES = obs.counter(
+    "stream_nn_queries",
+    "maxima actually re-queried (dirty); maxima_total - queries = the "
+    "dirty-tracking saving")
 
 
 @dataclass(frozen=True)
@@ -293,9 +307,12 @@ class StreamDPC:
     def _full_tick(self) -> StreamTick:
         """Full recompute of the current window (warm-up / bulk load)."""
         w = self.window
-        res = run_approxdpc(jnp.asarray(w.contents()), self.cfg.d_cut,
-                            exec_spec=self.plan.spec)
+        with obs.span("stream.full_tick", count=w.count) as sp:
+            res = run_approxdpc(jnp.asarray(w.contents()), self.cfg.d_cut,
+                                exec_spec=self.plan.spec)
+            sp.sync((res.rho, res.delta))
         self._full_recomputes += 1
+        _M_FULL.inc()
         # the full tick stamps rule-2 deltas (not raw NN answers), so the
         # raw cache restarts empty — the next steady tick re-queries all
         self._nn_valid[:] = False
@@ -313,28 +330,34 @@ class StreamDPC:
         if r == 0:
             return self._last
         B = cfg.batch_cap
-        padded = np.full((B, w.dim), PAD_COORD, np.float32)
-        padded[:r] = chunk
-        slots, evicted, ev_valid = w.push(padded, r)
-        rebuilt = False
-        try:
-            self.grid.apply(slots, padded, evicted, r)
-        except CellOverflow:
-            self.grid.rebuild(w.host, w.count)
-            rebuilt = True
-        # rho repair: +1 per inserted, -1 per evicted neighbor (fused)
-        delta_batch = jnp.asarray(np.concatenate([padded, np.where(
-            ev_valid[:, None], evicted, PAD_COORD)]))
-        signs = np.zeros(2 * B, np.float32)
-        signs[:r] = 1.0
-        signs[B:][ev_valid] = -1.0
-        repair = self._sharded if self._sharded is not None else partial(
-            repair_rho, self.be, cfg.d_cut)
-        self._rho = repair(w.device, self._rho, delta_batch,
-                           jnp.asarray(signs), jnp.asarray(padded),
-                           jnp.asarray(slots))
-        return self._finish(self._incremental_result(), rebuilt=rebuilt,
-                            full=False)
+        with obs.span("stream.tick", batch=r) as tick_sp:
+            padded = np.full((B, w.dim), PAD_COORD, np.float32)
+            padded[:r] = chunk
+            slots, evicted, ev_valid = w.push(padded, r)
+            rebuilt = False
+            with obs.span("stream.grid_apply") as sp:
+                try:
+                    self.grid.apply(slots, padded, evicted, r)
+                except CellOverflow:
+                    self.grid.rebuild(w.host, w.count)
+                    rebuilt = True
+                sp.set(rebuilt=rebuilt)
+            # rho repair: +1 per inserted, -1 per evicted neighbor (fused)
+            delta_batch = jnp.asarray(np.concatenate([padded, np.where(
+                ev_valid[:, None], evicted, PAD_COORD)]))
+            signs = np.zeros(2 * B, np.float32)
+            signs[:r] = 1.0
+            signs[B:][ev_valid] = -1.0
+            repair = self._sharded if self._sharded is not None else partial(
+                repair_rho, self.be, cfg.d_cut)
+            with obs.span("stream.rho_repair") as sp:
+                self._rho = sp.sync(repair(
+                    w.device, self._rho, delta_batch, jnp.asarray(signs),
+                    jnp.asarray(padded), jnp.asarray(slots)))
+            out = self._finish(self._incremental_result(), rebuilt=rebuilt,
+                               full=False)
+            tick_sp.set(rebuilt=rebuilt)
+        return out
 
     def _incremental_result(self) -> DPCResult:
         """Rules 1-3 from maintained state: segment ops for every point, one
@@ -361,6 +384,8 @@ class StreamDPC:
         dq = q[dirty]
         self._nn_maxima_total += len(q)
         self._nn_queries += len(dq)
+        _M_NN_MAXIMA.inc(len(q))
+        _M_NN_QUERIES.inc(len(dq))
 
         if len(dq):
             # pad the dirty set to a power of two (few shape buckets), not
@@ -370,8 +395,9 @@ class StreamDPC:
                 pad *= 2
             dq_slots = np.full(pad, cap, np.int64)
             dq_slots[: len(dq)] = dq
-            nn_d, nn_p = self.be.denser_nn_update(
-                self.window.device, rho_key, jnp.asarray(dq_slots))
+            with obs.span("stream.nn_update", queries=len(dq)) as sp:
+                nn_d, nn_p = sp.sync(self.be.denser_nn_update(
+                    self.window.device, rho_key, jnp.asarray(dq_slots)))
             self._nn_delta_cache[dq] = np.asarray(nn_d)[: len(dq)]
             self._nn_parent_cache[dq] = np.asarray(nn_p)[: len(dq)]
             self._nn_valid[dq] = True
@@ -394,17 +420,20 @@ class StreamDPC:
         cfg = self.cfg
         cl = assign_labels(res, cfg.rho_min, cfg.resolved_delta_min())
         self._result, self._clustering = res, cl
-        labels = np.asarray(cl.labels)
-        centers = np.asarray(cl.centers)
-        c_slots = np.nonzero(centers)[0]
-        stable = self._match_centers(self.window.host[c_slots])
-        k = int(cl.num_clusters)
-        by_label = np.full(max(k, 1), -1, np.int64)
-        by_label[labels[c_slots]] = stable
-        out = np.where(labels >= 0, by_label[np.maximum(labels, 0)], -1)
-        self._registry = [(int(s), self.window.host[c].copy())
-                          for s, c in zip(stable, c_slots)]
+        with obs.span("stream.continuity") as sp:
+            labels = np.asarray(cl.labels)
+            centers = np.asarray(cl.centers)
+            c_slots = np.nonzero(centers)[0]
+            stable = self._match_centers(self.window.host[c_slots])
+            k = int(cl.num_clusters)
+            by_label = np.full(max(k, 1), -1, np.int64)
+            by_label[labels[c_slots]] = stable
+            out = np.where(labels >= 0, by_label[np.maximum(labels, 0)], -1)
+            self._registry = [(int(s), self.window.host[c].copy())
+                              for s, c in zip(stable, c_slots)]
+            sp.set(clusters=k)
         self._ticks += 1
+        _M_TICKS.inc()
         self._last = StreamTick(labels=out, centers=centers,
                                 stable_ids=stable, num_clusters=k,
                                 rebuilt=rebuilt, full_recompute=full,

@@ -1,0 +1,65 @@
+"""benchmarks.util timing: compile time must never leak into measurements.
+
+``timeit_stats`` syncs every warmup result (``jax.block_until_ready`` over
+the full output tree) *before* t0 of the first measured repeat and syncs
+each repeat inside its own timing window.  The deliberately slow-to-compile
+function below (a long unrolled chain of matmul+tanh on a tiny operand —
+trivial to run, expensive for XLA to build) makes the difference
+observable: warmup_s dwarfs every steady-state repeat.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from benchmarks.util import timeit, timeit_stats
+
+
+@jax.jit
+def _slow_compile(x):
+    # ~60 fused matmul+tanh stages: milliseconds to execute on a 16x16
+    # operand, but a deep graph for XLA to optimize — compile-heavy by
+    # construction
+    for _ in range(60):
+        x = jnp.tanh(x @ x + x)
+    return x
+
+
+def test_warmup_absorbs_compile_time():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(16, 16)),
+                    jnp.float32)
+    stats = timeit_stats(_slow_compile, x, repeats=3, warmup=1)
+    assert len(stats["times_s"]) == 3
+    assert stats["median_s"] == float(np.median(stats["times_s"]))
+    assert stats["min_s"] == min(stats["times_s"])
+    # the compile happened inside the synced warmup, not the repeats
+    assert stats["warmup_s"] > 5 * max(stats["times_s"])
+
+
+def test_timeit_returns_median_seconds():
+    x = jnp.ones((8, 8), jnp.float32)
+    t = timeit(lambda v: v + 1.0, x, repeats=3, warmup=1)
+    assert isinstance(t, float) and t >= 0.0
+
+
+def test_repeats_are_device_synced():
+    # every repeat window fences the whole output tree, so per-repeat times
+    # are strictly positive even for tuple-of-array outputs
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(256, 256)),
+                    jnp.float32)
+    fn = jax.jit(lambda v: (v @ v, jnp.tanh(v)))
+    synced = timeit_stats(fn, x, repeats=3, warmup=1)
+    assert all(t > 0.0 for t in synced["times_s"])
+
+
+@pytest.mark.parametrize("warmup", [0, 2])
+def test_warmup_count_respected(warmup):
+    calls = []
+
+    def fn():
+        calls.append(1)
+        return jnp.zeros(())
+
+    stats = timeit_stats(fn, repeats=2, warmup=warmup)
+    assert len(calls) == warmup + 2
+    assert stats["warmup_s"] >= 0.0

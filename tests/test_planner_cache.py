@@ -1,0 +1,101 @@
+"""Planner plan-cache behavior: LRU eviction, counter accuracy, clear.
+
+The cache memoizes ``plan(PointsSpec, ExecSpec)`` in an OrderedDict capped
+at ``_PLAN_CACHE_MAX``; its traffic counters (hits / misses / evictions)
+live on the repro.obs registry with ``plan_cache_info()`` as the stable
+read surface.  These tests pin the exact counting semantics so the shims
+stay honest.
+"""
+import pytest
+
+from repro.engine import ExecSpec, PointsSpec, as_plan, plan
+from repro.engine.planner import _PLAN_CACHE_MAX, _PLANS
+from repro.engine import plan_cache_clear, plan_cache_info
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    plan_cache_clear()
+    yield
+    plan_cache_clear()
+
+
+SPEC = ExecSpec(backend="jnp")
+
+
+class TestCounters:
+    def test_miss_then_hit(self):
+        p1 = plan((64, 2), SPEC)
+        assert plan_cache_info() == {"hits": 0, "misses": 1,
+                                     "evictions": 0, "entries": 1}
+        p2 = plan((64, 2), SPEC)
+        assert p2 is p1
+        assert plan_cache_info() == {"hits": 1, "misses": 1,
+                                     "evictions": 0, "entries": 1}
+
+    def test_as_plan_same_shape_is_free(self):
+        import numpy as np
+
+        pts = np.zeros((64, 2), np.float32)
+        p1 = as_plan(SPEC, pts)
+        info = plan_cache_info()
+        # handing the resolved plan back with a same-shaped input returns
+        # it without touching the cache at all
+        assert as_plan(p1, pts) is p1
+        assert plan_cache_info() == info
+
+    def test_as_plan_replans_on_shape_mismatch(self):
+        import numpy as np
+
+        p1 = as_plan(SPEC, np.zeros((64, 2), np.float32))
+        info = plan_cache_info()
+        p2 = as_plan(p1, np.zeros((96, 2), np.float32))
+        assert p2 is not p1
+        assert p2.spec == p1.spec
+        assert p2.pspec == PointsSpec(96, 2)
+        assert plan_cache_info()["misses"] == info["misses"] + 1
+        # the mismatched re-plan is itself cached: doing it again is a hit
+        assert as_plan(p1, np.zeros((96, 2), np.float32)) is p2
+        assert plan_cache_info()["hits"] == info["hits"] + 1
+
+
+class TestLRU:
+    def test_eviction_at_capacity(self):
+        extra = 5
+        for n in range(extra + _PLAN_CACHE_MAX):
+            plan((64 + n, 2), SPEC)
+        info = plan_cache_info()
+        assert info["entries"] == _PLAN_CACHE_MAX
+        assert len(_PLANS) == _PLAN_CACHE_MAX
+        assert info["misses"] == _PLAN_CACHE_MAX + extra
+        assert info["evictions"] == extra
+        # the oldest shapes fell out, the newest survived
+        assert plan((64 + extra + _PLAN_CACHE_MAX - 1, 2), SPEC)
+        assert plan_cache_info()["hits"] == 1
+        plan((64, 2), SPEC)     # evicted -> miss again
+        assert plan_cache_info()["misses"] == _PLAN_CACHE_MAX + extra + 1
+
+    def test_hit_refreshes_recency(self):
+        plan((64, 2), SPEC)
+        for n in range(1, _PLAN_CACHE_MAX):
+            plan((64 + n, 2), SPEC)
+        assert plan_cache_info()["entries"] == _PLAN_CACHE_MAX
+        p_old = plan((64, 2), SPEC)          # hit: moves to MRU
+        plan((4096, 2), SPEC)                # evicts the LRU entry...
+        assert plan((64, 2), SPEC) is p_old  # ...which is no longer (64, 2)
+        assert plan_cache_info()["evictions"] == 1
+
+
+class TestClear:
+    def test_clear_resets_entries_and_counters(self):
+        plan((64, 2), SPEC)
+        plan((64, 2), SPEC)
+        assert plan_cache_info()["hits"] == 1
+        plan_cache_clear()
+        assert plan_cache_info() == {"hits": 0, "misses": 0,
+                                     "evictions": 0, "entries": 0}
+        # a post-clear plan is a rebuild, not the old object by identity
+        p = plan((64, 2), SPEC)
+        assert plan_cache_info() == {"hits": 0, "misses": 1,
+                                     "evictions": 0, "entries": 1}
+        assert plan((64, 2), SPEC) is p
