@@ -22,6 +22,11 @@ pallas-interpret exercise pass, failing (exit 1) when
 * the block-sparse fused path's speedup over the dense fused path (same
   grid-sorted data, paper-style d_cut) regressed more than SMOKE_TOLERANCE
   relative to the committed ratio (the ISSUE 4 pruning bar), or
+* the multi-device distributed row's paired ratio (block-sparse vs dense
+  shard phases on a host-device-count mesh, run in a 4-virtual-device
+  subprocess) regressed more than SMOKE_TOLERANCE relative to the
+  committed ratio, or the shard-layout probe silently degraded (the
+  ISSUE 8 bar), or
 * any jnp primitive regressed more than SMOKE_TOLERANCE in *relative*
   pairs/s against the committed BENCH_core.json (throughputs are normalized
   by the currently measured jnp range_count rate first, so the gate tracks
@@ -29,7 +34,9 @@ pallas-interpret exercise pass, failing (exit 1) when
 
 ``--refresh-baseline`` rewrites BENCH_core.json: the standard-shape record
 plus the ISSUE-4 acceptance measurement (block-sparse vs dense fused
-``rho_delta`` wall clock at n=64k, d=3, paper-style d_cut, jnp CPU).
+``rho_delta`` wall clock at n=64k, d=3, paper-style d_cut, jnp CPU) and
+the ISSUE-8 distributed rows (dense vs block-sparse shard phases at the
+same acceptance shape, plus a smaller smoke shape the CI gate re-measures).
 """
 from __future__ import annotations
 
@@ -59,6 +66,8 @@ SMOKE_TOLERANCE = 0.30      # relative pairs/s regression tripping the gate
 ACCEPT_N = 65536            # ISSUE 4 acceptance shape (n, d, min speedup)
 ACCEPT_D = 3
 ACCEPT_MIN_SPEEDUP = 3.0
+DIST_SMOKE_N = 16384        # distributed smoke shape (gate re-measures it)
+DIST_DEVICES = 4            # virtual host devices for the distributed rows
 
 
 def default_backends() -> list[str]:
@@ -226,6 +235,128 @@ def measure_acceptance(repeats: int = 3) -> dict:
             "speedup": speedup, "min_required": ACCEPT_MIN_SPEEDUP}
 
 
+# Multi-device shard phases (ISSUE 8): dense vs block-sparse worklists on a
+# host-device-count mesh.  XLA's virtual host devices must be configured
+# before jax initializes, so the measurement runs in a subprocess; both
+# variants run the same _make_rho_dense/_make_delta_dense shard bodies on
+# the same grid-sorted padded table, differing only in layout — the paired
+# per-repeat ratio is the pruning win and is machine-speed independent.
+_DIST_SCRIPT = r"""
+import json, sys, time, warnings, os
+warnings.filterwarnings("ignore")
+os.environ["REPRO_ANALYSIS"] = "0"   # bench plans, not production fits
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+from repro.core.grid import build_grid
+from repro.core.tuning import pick_dcut
+from repro.distributed import dpc as ddpc
+from repro.engine import ExecSpec
+from repro.engine.planner import plan
+from repro.kernels.backend import get_backend
+
+n, d, repeats = int(sys.argv[1]), int(sys.argv[2]), int(sys.argv[3])
+S = jax.device_count()
+mesh = jax.make_mesh((S,), ("data",))
+be = get_backend("jnp")
+
+rng = np.random.default_rng(0)
+pts = rng.uniform(0, 6 * 900.0, (n, d)).astype(np.float32)
+d_cut = float(pick_dcut(pts, target_rho=min(30.0, n / 200)))
+grid = build_grid(jnp.asarray(pts), d_cut)
+n0 = grid.points.shape[0]
+m = -(-n0 // S) * S
+pts_s = jnp.pad(grid.points, ((0, m - n0), (0, 0)), constant_values=1e9)
+key = rng.permutation(n0).astype(np.float32)   # all-distinct density keys
+rk_tab = jnp.asarray(np.concatenate(
+    [key, np.full(m - n0, -np.inf, np.float32)]))
+rk_q = jnp.asarray(np.concatenate(
+    [key, np.full(m - n0, np.inf, np.float32)]))
+
+def phases(layout):
+    rho_fn = ddpc._make_rho_dense("data", d_cut, 256, be, layout=layout)
+    delta_fn = ddpc._make_delta_dense("data", 256, be, layout=layout)
+    sm_rho = jax.jit(shard_map(
+        rho_fn, mesh=mesh, in_specs=(P("data"), P("data")),
+        out_specs=P("data"), check_rep=False))
+    sm_delta = jax.jit(shard_map(
+        delta_fn, mesh=mesh, in_specs=(P("data"),) * 4,
+        out_specs=(P("data"),) * 3, check_rep=False))
+    def run():
+        out = (sm_rho(pts_s, pts_s), sm_delta(pts_s, rk_q, pts_s, rk_tab))
+        return jax.block_until_ready(out)
+    return run
+
+dense_run, bs_run = phases(None), phases("block-sparse")
+lay = ddpc.shard_blocksparse_layout(
+    plan(None, ExecSpec(backend="jnp", layout="block-sparse")), mesh)
+dense_run(); bs_run()                          # warmup / compile
+dts, bts = [], []
+for _ in range(repeats):
+    t0 = time.perf_counter(); dense_run(); dts.append(time.perf_counter() - t0)
+    t0 = time.perf_counter(); bs_run(); bts.append(time.perf_counter() - t0)
+print("RESULT" + json.dumps({
+    "n": n, "d": d, "d_cut": d_cut, "devices": S, "backend": "jnp",
+    "layout_probe": lay,
+    "dense_seconds": float(np.min(dts)), "bs_seconds": float(np.min(bts)),
+    "pairs_per_s_equiv_dense": 2 * n * n / float(np.min(dts)),
+    "pairs_per_s_equiv_bs": 2 * n * n / float(np.min(bts)),
+    "speedup": float(np.median([a / b for a, b in zip(dts, bts)]))}))
+"""
+
+
+def measure_distributed(n: int, d: int, repeats: int = 3,
+                        devices: int = DIST_DEVICES) -> dict:
+    """The ISSUE 8 distributed row: dense vs block-sparse shard phases on
+    a ``devices``-device mesh (subprocess; see ``_DIST_SCRIPT``)."""
+    import subprocess
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={devices}"
+    env["JAX_PLATFORMS"] = "cpu"
+    env.setdefault("PYTHONPATH", "src")
+    proc = subprocess.run([sys.executable, "-c", _DIST_SCRIPT,
+                           str(n), str(d), str(repeats)],
+                          env=env, capture_output=True, text=True,
+                          timeout=3600)
+    if proc.returncode != 0:
+        raise RuntimeError("distributed bench subprocess failed:\n"
+                           + proc.stderr[-3000:])
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT")][0]
+    rec = json.loads(line[len("RESULT"):])
+    print(f"[backend_compare] distributed n={rec['n']} "
+          f"S={rec['devices']}: dense shard phases "
+          f"{rec['dense_seconds']:.2f}s, block-sparse "
+          f"{rec['bs_seconds']:.2f}s -> {rec['speedup']:.2f}x "
+          f"(probe: {rec['layout_probe']})", flush=True)
+    return rec
+
+
+def dist_gate(committed, repeats: int,
+              tolerance: float = SMOKE_TOLERANCE) -> list[str]:
+    """Smoke check of the multi-device row: the probe must keep
+    block-sparse enabled, and the paired dense/block-sparse shard-phase
+    ratio must hold within ``tolerance`` of the committed record."""
+    ref = committed.get("distributed_multidev", {}).get("smoke")
+    if ref is None:
+        return ["committed baseline lacks the distributed multi-device "
+                "smoke row (refresh BENCH_core.json)"]
+    now = measure_distributed(ref["n"], ref["d"], repeats=repeats,
+                              devices=ref["devices"])
+    failures = []
+    if now["layout_probe"] != "block-sparse":
+        failures.append(f"shard_blocksparse_layout degraded on the "
+                        f"{now['devices']}-device mesh: "
+                        f"{now['layout_probe']!r}")
+    if now["speedup"] < (1.0 - tolerance) * ref["speedup"]:
+        failures.append(
+            f"distributed block-sparse vs dense shard phases "
+            f"{now['speedup']:.2f}x < (1-{tolerance})x committed "
+            f"{ref['speedup']:.2f}x")
+    return failures
+
+
 def smoke_gate(rec, committed, tolerance: float = SMOKE_TOLERANCE):
     """Relative-throughput regression check vs the committed baseline."""
     failures = []
@@ -289,6 +420,7 @@ def main(n: int = 4096, d: int = 3, repeats: int = 3,
                        if jax.default_backend() != "tpu" else ["pallas"])
         del exercise  # correctness/coverage only; never gated
         failures = smoke_gate(rec, committed)
+        failures += dist_gate(committed, repeats=max(repeats, 3))
         _export_obs(obs_snapshot)
         if failures:
             print("[backend_compare --smoke] FAIL", flush=True)
@@ -304,6 +436,12 @@ def main(n: int = 4096, d: int = 3, repeats: int = 3,
               backends=backends or default_backends())
     if refresh_baseline:
         rec["acceptance_64k"] = measure_acceptance(repeats=repeats)
+        rec["distributed_multidev"] = {
+            "acceptance": measure_distributed(ACCEPT_N, ACCEPT_D,
+                                              repeats=repeats),
+            "smoke": measure_distributed(DIST_SMOKE_N, ACCEPT_D,
+                                         repeats=repeats),
+        }
         with open(baseline, "w") as f:
             json.dump(rec, f, indent=2)
         print(f"[backend_compare] refreshed {baseline}", flush=True)

@@ -219,7 +219,10 @@ def distributed_targets(pl) -> tuple[list, list]:
 
 
 def stream_targets(pl) -> tuple[list, list]:
-    """The sharded stream rho-repair, traced over every visible device."""
+    """Every sharded stage of the stream repair tail, traced over every
+    visible device: rho repair, dirty-maxima NN re-query (at the plan's
+    probe-resolved layout), label propagation and the center-continuity
+    distances."""
     import jax
     import jax.numpy as jnp
     from jax.sharding import Mesh
@@ -228,21 +231,49 @@ def stream_targets(pl) -> tuple[list, list]:
     if len(devs) < 2:
         return [], ["stream: single-device runtime — sharded repair "
                     "degenerates (the CLI sweep forces 4 devices)"]
+    from repro.distributed.dpc import shard_blocksparse_layout
     from repro.stream.incremental import make_sharded_repair
+    from repro.stream.sharded import make_sharded_center_dists, \
+        make_sharded_labels, make_sharded_nn_update
 
     axis = pl.data_axis
     mesh = Mesh(np.array(devs), (axis,))
+    S = len(devs)
     repair = make_sharded_repair(mesh, axis, pl.backend, D_CUT)
-    m = len(devs) * 8
+    m = S * 8
     window = jnp.zeros((m, DIM), jnp.float32)
     rho = jnp.zeros((m,), jnp.float32)
     batch = jnp.zeros((4, DIM), jnp.float32)
     signs = jnp.zeros((4,), jnp.float32)
     ins = jnp.zeros((4, DIM), jnp.float32)
     slots = jnp.zeros((4,), jnp.int32)
-    return [("stream:sharded_repair",
-             lambda: jax.make_jaxpr(repair)(window, rho, batch, signs,
-                                            ins, slots))], []
+    targets = [("stream:sharded_repair",
+                lambda: jax.make_jaxpr(repair)(window, rho, batch, signs,
+                                               ins, slots))]
+
+    # the post-repair tail: each factory exposes its shard_map body on
+    # ``.inner`` (the host wrappers around them do numpy/obs work and are
+    # not traceable); the NN stage traces at the plan's probe-resolved
+    # layout, so a future R1 regression in the one-hot ring walk surfaces
+    # here as well as in the probe
+    lay = shard_blocksparse_layout(pl, mesh)
+    nn = make_sharded_nn_update(mesh, axis, pl.backend, layout=lay)
+    q = jnp.zeros((4, DIM), jnp.float32)
+    qk = jnp.zeros((4,), jnp.float32)
+    targets.append((f"stream:sharded_nn[{lay or 'dense'}]",
+                    lambda: jax.make_jaxpr(nn.inner)(window, rho, q, qk)))
+
+    labels = make_sharded_labels(mesh, axis, m)
+    parent = jnp.zeros((m,), jnp.int32)
+    targets.append(("stream:sharded_labels",
+                    lambda: jax.make_jaxpr(labels.inner)(parent)))
+
+    cdist = make_sharded_center_dists(mesh, axis)
+    new_pos = jnp.zeros((S * 2, DIM), jnp.float32)
+    prev = jnp.zeros((3, DIM), jnp.float32)
+    targets.append(("stream:sharded_center_dists",
+                    lambda: jax.make_jaxpr(cdist.inner)(new_pos, prev)))
+    return targets, []
 
 
 def serve_targets(spec) -> tuple[list, list]:

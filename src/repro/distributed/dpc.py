@@ -14,8 +14,9 @@ Mapping (DESIGN.md §2/§4):
   time/space trade at pod scale.
 * Ex-DPC's sequential kd-tree delta  ->  the stencil + masked-NN fallback
   (exact; parallel over rows), as in core/exdpc.py.
-* Label propagation (DFS)  ->  pointer jumping on replicated parents
-  (core/labels.py), cheap enough to run replicated.
+* Label propagation (DFS)  ->  pointer jumping: replicated parents
+  (core/labels.py) for batch callers, or the sharded one-hot-matmul
+  formulation (stream/sharded.py) when a mesh is in play.
 
 Phases (each a shard_map over the ``data`` axis; fixed shapes throughout):
 
@@ -71,11 +72,13 @@ class DistDPCConfig:
       whose worklists are jit-built (``worklist_traceable`` — the jnp
       backend): pallas worklists are host-built and cannot be constructed
       inside shard_map, so pallas shards keep the dense MXU tiles.
-      Currently honored on single-partition meshes only: the pinned
-      jax-0.4.37 XLA CPU SPMD pipeline miscompiles the ring walk's
-      order-gather on multi-device meshes, so those degrade to the dense
-      per-shard tiles (exact results; see the guard in
-      :func:`distributed_dpc`).
+      Honored on any mesh that passes the R1 probe
+      (:func:`shard_blocksparse_layout`) — with the one-hot ring walk no
+      sort-derived index reaches a gather inside the shard body, so
+      multi-partition meshes run block-sparse shard phases too.  (Before
+      the one-hot rewrite the order-gather walk tripped the pinned
+      jax-0.4.37 XLA CPU SPMD miscompile and multi-device meshes degraded
+      to dense per-shard tiles.)
     """
 
     d_cut: float
@@ -349,6 +352,22 @@ def _bs_shards_safe(flat_mesh, axis: str, be) -> bool:
     return ok
 
 
+# Shard-phase layout decisions, visible in ``python -m repro.obs report``:
+# a future probe regression shows up as a dist_bs_degrade_total increment
+# with reason=r1-probe-failed instead of only in timings.
+_M_BS_ENABLED = obs.counter(
+    "dist_bs_enabled",
+    "shard-phase layout decisions that kept block-sparse worklists")
+_M_BS_DEGRADE = obs.counter(
+    "dist_bs_degrade_total",
+    "shard-phase layout decisions that degraded block-sparse to dense "
+    "per-shard tiles, by reason")
+_G_BS_LAYOUT = obs.gauge(
+    "dist_bs_layout",
+    "last shard-phase layout decision (1 = block-sparse, 0 = dense "
+    "degrade), by reason")
+
+
 def shard_blocksparse_layout(pl, mesh) -> str | None:
     """The layout the per-shard gather-strategy phases run with:
     ``"block-sparse"`` when the plan asks for it AND the shards can honor
@@ -358,21 +377,35 @@ def shard_blocksparse_layout(pl, mesh) -> str | None:
     Per-shard block-sparse needs jit-built worklists (inside shard_map),
     so only ``worklist_traceable`` backends qualify.  On multi-partition
     meshes the phases must additionally pass the R1 probe
-    (:func:`_bs_shards_safe`): today the jnp ring walk's sort-derived
-    order-gather trips it — the pattern the pinned XLA miscompiles — so
-    multi-shard phases keep the dense per-shard tiles
-    (tests/test_distributed_dpc.py pins this with a 4-device block-sparse
-    == exdpc subprocess check).  Rewriting the worklist kernels so no
-    sort-tainted index reaches a gather inside the shard body flips the
-    probe and re-enables block-sparse here with no further changes."""
+    (:func:`_bs_shards_safe`) against the pinned jax-0.4.37 XLA CPU SPMD
+    miscompile.  The one-hot ring walk keeps every sort-derived value out
+    of gather/dynamic-slice index position, so the probe passes and
+    multi-device meshes run block-sparse shard phases
+    (tests/test_distributed_dpc.py pins both the probe verdict and
+    bit-parity with ``run_exdpc`` in a 4-device subprocess).
+
+    Every decision on a sparse plan is recorded on the obs registry
+    (``dist_bs_enabled`` / ``dist_bs_degrade_total`` with a reason label,
+    plus the ``dist_bs_layout`` gauge) so a silent future degrade is
+    visible in ``python -m repro.obs report``."""
     be = pl.backend
-    if not (pl.sparse and be.worklist_traceable):
-        return None
+    if not pl.sparse:
+        return None                     # dense plan: nothing to decide
+
+    def decide(layout, reason):
+        (_M_BS_DEGRADE if layout is None else _M_BS_ENABLED).inc(
+            reason=reason)
+        _G_BS_LAYOUT.set(0.0 if layout is None else 1.0, reason=reason)
+        return layout
+
+    if not be.worklist_traceable:
+        return decide(None, "host-worklist-backend")
     flat_mesh = flatten_mesh(mesh, pl.data_axis)
     if flat_mesh.devices.size == 1:
-        return "block-sparse"
-    return ("block-sparse"
-            if _bs_shards_safe(flat_mesh, pl.data_axis, be) else None)
+        return decide("block-sparse", "single-partition")
+    if _bs_shards_safe(flat_mesh, pl.data_axis, be):
+        return decide("block-sparse", "r1-probe-passed")
+    return decide(None, "r1-probe-failed")
 
 
 def distributed_dpc(points, cfg: DistDPCConfig | None = None,

@@ -17,14 +17,21 @@ owns that pruning logic once, in three forms:
   is preserved (tested on tie-heavy lattice data).
 
 * **jit-built ring worklists** (the jnp backend) — the (nbr, nbc) bound
-  matrix is sorted ascending per row tile; count accumulators walk the
-  prefix with ``lb <= d_cut^2`` and NN accumulators walk the ring with a
-  ``lax.while_loop`` that stops once the next lower bound exceeds the row
-  tile's worst current candidate (the progressively-shrinking prune radius).
-  Everything is traced — shapes depend only on tile counts — so the
-  block-sparse jnp primitives stay jit/shard_map-safe (``rho_delta``
-  remains ``fused_traceable``) and the *work* is data-proportional because
-  ``while_loop`` trip counts are runtime values.
+  matrix is *ranked* ascending per row tile (double argsort — pure sorts,
+  no gather); count accumulators walk the prefix with ``lb <= d_cut^2``
+  and NN accumulators walk the ring with a ``lax.while_loop`` that stops
+  once the next lower bound exceeds the row tile's worst current candidate
+  (the progressively-shrinking prune radius).  Each step selects its
+  column tile by a one-hot ``(rank == p)`` matmul contraction — the same
+  idiom ``sweep.gather_nn`` uses in-kernel — so **no sort-derived value
+  ever feeds a gather/dynamic_slice index** and the walk is R1-clean
+  (``analysis.spmd_gather_safe``): safe inside multi-partition shard_map
+  bodies under the pinned jax-0.4.37 XLA CPU SPMD pipeline, which
+  miscompiles sort-derived gather indices there.  Everything is traced —
+  shapes depend only on tile counts — so the block-sparse jnp primitives
+  stay jit/shard_map-safe (``rho_delta`` remains ``fused_traceable``) and
+  the *work* is data-proportional because ``while_loop`` trip counts are
+  runtime values.
 
 * **host-built flat worklists** (the pallas backends) — the kept tile pairs
   flatten into a scalar-prefetched (wi, wj, first-visit, in-cut) table that
@@ -110,14 +117,45 @@ def pair_upper_bounds(rlo, rhi, clo, chi) -> jnp.ndarray:
 
 
 def _ring(x_pad, nx, y_pad, ny, bn: int, bm: int):
-    """Ascending-lb ring order per row tile: (order, lbs) of shape
-    (nbr, nbc).  Pure traced math — the jnp worklist is jit-built."""
+    """Ascending-lb ring *ranks* per row tile: (rank, lb), both (nbr, nbc).
+
+    ``rank[i, j]`` is column tile j's position in row tile i's ascending-lb
+    visit order — a double argsort, so ties rank in tile-index order exactly
+    like the stable ``argsort`` permutation the walk used to gather through.
+    Pure traced math, and deliberately gather-free: both sorts return whole
+    permutations that the walks consume only through ``rank == p`` one-hot
+    comparisons, never as a gather/dynamic_slice index.  That keeps the jnp
+    ring walk R1-clean (``spmd_gather_safe``) inside multi-partition
+    shard_map bodies, where the pinned XLA CPU SPMD pipeline miscompiles
+    sort-derived gather indices.
+    """
     rlo, rhi = tile_bounds(x_pad, nx, bn)
     clo, chi = tile_bounds(y_pad, ny, bm)
     lb = pair_lower_bounds(rlo, rhi, clo, chi)
-    order = jnp.argsort(lb, axis=1).astype(jnp.int32)
-    lbs = jnp.take_along_axis(lb, order, axis=1)
-    return order, lbs
+    rank = jnp.argsort(jnp.argsort(lb, axis=1), axis=1).astype(jnp.int32)
+    return rank, lb
+
+
+# One-hot contractions never see ±inf pad values: 0 * inf = NaN would leak
+# into selected tiles.  Clamped pads keep the walks exact — a clamped coord
+# still squares past the f32 max (distance stays +inf), and a clamped -inf
+# column key is restored below the admissibility mask (_RESTORE_NEG).
+_FINITE_CAP = jnp.float32(3e38)
+
+
+def _finitize(a: jnp.ndarray) -> jnp.ndarray:
+    return jnp.clip(a, -_FINITE_CAP, _FINITE_CAP)
+
+
+def _onehot_pick(sel_f32: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """Select one row of ``table`` (nbc, w) by a one-hot (nbc,) vector.
+
+    A permutation-matrix contraction (MXU-friendly dot, no gather): the
+    exact 0/1 weights make the picked row bitwise-equal to the stored row.
+    """
+    return jax.lax.dot_general(sel_f32[None, :], table,
+                               (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)[0]
 
 
 # =====================================================================
@@ -140,24 +178,25 @@ def _count_bs_jnp(x, y, weights, d_cut, bn: int = BS_BLOCK_N,
     xp = _pad_inf(x, bn)
     yp = _pad_inf(y, bm)
     nbr, nbc = xp.shape[0] // bn, yp.shape[0] // bm
-    order, lbs = _ring(xp, n, yp, m, bn, bm)
+    rank, lb = _ring(xp, n, yp, m, bn, bm)
     d2cut = jnp.asarray(d_cut, jnp.float32) ** 2
-    kcut = jnp.sum(lbs <= d2cut, axis=1).astype(jnp.int32)
+    kcut = jnp.sum(lb <= d2cut, axis=1).astype(jnp.int32)
+    ypf = _finitize(yp).reshape(nbc, bm * d)
     if signed:
         wp = jnp.pad(weights.astype(jnp.float32), (0, nbc * bm - m),
-                     constant_values=0.0)
+                     constant_values=0.0).reshape(nbc, bm)
 
     def row_tile(i):
         rows = jax.lax.dynamic_slice_in_dim(xp, i * bn, bn, 0)
-        ord_i, kc = order[i], kcut[i]
+        rank_i, kc = rank[i], kcut[i]
 
         def body(c):
             p, acc = c
-            j = ord_i[p]
-            cols = jax.lax.dynamic_slice_in_dim(yp, j * bm, bm, 0)
+            sel = (rank_i == p).astype(jnp.float32)
+            cols = _onehot_pick(sel, ypf).reshape(bm, d)
             d2 = jnp.sum((rows[:, None, :] - cols[None, :, :]) ** 2, -1)
             if signed:
-                s = jax.lax.dynamic_slice_in_dim(wp, j * bm, bm, 0)
+                s = _onehot_pick(sel, wp)
                 upd = jnp.sum(jnp.where(d2 < d2cut, s[None, :], 0.0), axis=1)
             else:
                 upd = jnp.sum(d2 < d2cut, axis=1).astype(jnp.float32)
@@ -172,59 +211,63 @@ def _count_bs_jnp(x, y, weights, d_cut, bn: int = BS_BLOCK_N,
     return cnt
 
 
-def _nn_ring_rows(xp, rkp, yp, ckp, n, order, lbs, bn: int, bm: int):
+def _nn_ring_rows(xp, rkp, yp, ckp, n, rank, lb, bn: int, bm: int):
     """One block-sparse masked-NN row-tile sweep (the shared Def.-2 core).
 
     Ring order with a runtime early-exit: stop once the next tile's lower
     bound strictly exceeds the worst current best among the tile's valid
     rows (a bound can only be *conservative*, so every skipped pair is
-    strictly worse for every row — exact, ties included).  Tracks the
-    lowest winning *tile*, then recovers the argmin inside it with the same
-    float ops on the same operands — bitwise-equal d2, hence the dense
-    engine's lexicographic (d2, col) winner.
+    strictly worse for every row — exact, ties included).  Each step picks
+    its column tile by one-hot ``rank == p`` contraction (never a
+    sort-derived gather index) and tracks the winner *in-loop* as a global
+    column id with a lexicographic (d2, col) tie-break — because global
+    col = tile * bm + local col, this is exactly the dense sweep's
+    lowest-index winner, bit for bit (same float ops on the same operands).
     """
-    nbc = yp.shape[0] // bm
+    nbc, d = yp.shape[0] // bm, yp.shape[1]
     int_max = jnp.iinfo(jnp.int32).max
+    # [coords | key] contraction table, pads finitized (gather_nn's idiom);
+    # clamped -inf keys are restored after the pick so the strictly-denser
+    # admissibility mask is untouched.
+    ytab = jnp.concatenate([_finitize(yp), _finitize(ckp)[:, None]],
+                           axis=1).reshape(nbc, bm * (d + 1))
+    tile_ids = jnp.arange(nbc, dtype=jnp.int32)
 
     def row_tile(i):
         rows = jax.lax.dynamic_slice_in_dim(xp, i * bn, bn, 0)
         rrk = jax.lax.dynamic_slice_in_dim(rkp, i * bn, bn, 0)
         rvalid = (i * bn + jnp.arange(bn)) < n
-        ord_i, lbs_i = order[i], lbs[i]
+        rank_i, lb_i = rank[i], lb[i]
 
         def cond(c):
             p, best, _ = c
             worst = jnp.max(jnp.where(rvalid, best, -jnp.inf))
-            return (p < nbc) & (lbs_i[jnp.minimum(p, nbc - 1)] <= worst)
+            lb_p = jnp.sum(jnp.where(rank_i == jnp.minimum(p, nbc - 1),
+                                     lb_i, 0.0))
+            return (p < nbc) & (lb_p <= worst)
 
         def body(c):
-            p, best, jwin = c
-            j = ord_i[p]
-            cols = jax.lax.dynamic_slice_in_dim(yp, j * bm, bm, 0)
-            crk = jax.lax.dynamic_slice_in_dim(ckp, j * bm, bm, 0)
+            p, best, barg = c
+            onehot = (rank_i == p)
+            j = jnp.sum(jnp.where(onehot, tile_ids, 0)).astype(jnp.int32)
+            picked = _onehot_pick(onehot.astype(jnp.float32),
+                                  ytab).reshape(bm, d + 1)
+            cols = picked[:, :d]
+            crk = jnp.where(picked[:, d] <= -_FINITE_CAP, -jnp.inf,
+                            picked[:, d])
             d2 = jnp.sum((rows[:, None, :] - cols[None, :, :]) ** 2, -1)
-            cand = jnp.min(jnp.where(crk[None, :] > rrk[:, None], d2,
-                                     jnp.inf), axis=1)
+            d2m = jnp.where(crk[None, :] > rrk[:, None], d2, jnp.inf)
+            cand = jnp.min(d2m, axis=1)
+            carg = (j * bm + jnp.argmin(d2m, axis=1)).astype(jnp.int32)
             better = cand < best
-            tie = (cand == best) & jnp.isfinite(cand) & (j < jwin)
+            tie = (cand == best) & jnp.isfinite(cand) & (carg < barg)
             return (p + 1, jnp.where(better, cand, best),
-                    jnp.where(better | tie, j, jwin))
+                    jnp.where(better | tie, carg, barg))
 
-        _, best, jwin = jax.lax.while_loop(
+        _, best, barg = jax.lax.while_loop(
             cond, body, (jnp.int32(0), jnp.full((bn,), jnp.inf),
                          jnp.full((bn,), int_max, jnp.int32)))
-        # recover the argmin inside each row's lowest winning tile (same
-        # float ops on the same operands -> bitwise-equal d2 -> the dense
-        # sweep's lowest-index winner on exact ties)
-        jw = jnp.minimum(jwin, nbc - 1)
-        cidx = jw[:, None] * bm + jnp.arange(bm)[None, :]
-        cols = yp[cidx]
-        crk = ckp[cidx]
-        d2r = jnp.sum((rows[:, None, :] - cols) ** 2, -1)
-        d2m = jnp.where(crk > rrk[:, None], d2r, jnp.inf)
-        jloc = jnp.argmin(d2m, axis=1)
-        parent = jnp.where(jnp.isfinite(best),
-                           cidx[jnp.arange(bn), jloc], -1)
+        parent = jnp.where(jnp.isfinite(best), barg, -1)
         return jnp.sqrt(best), parent
 
     return row_tile
@@ -239,12 +282,12 @@ def _denser_nn_bs_jnp(x, x_key, y, y_key, bn: int = BS_BLOCK_N,
     xp = _pad_inf(x, bn)
     yp = _pad_inf(y, bm)
     nbr = xp.shape[0] // bn
-    order, lbs = _ring(xp, n, yp, m, bn, bm)
+    rank, lb = _ring(xp, n, yp, m, bn, bm)
     rkp = jnp.pad(x_key.astype(jnp.float32), (0, xp.shape[0] - n),
                   constant_values=jnp.inf)
     ckp = jnp.pad(y_key.astype(jnp.float32), (0, yp.shape[0] - m),
                   constant_values=-jnp.inf)
-    row_tile = _nn_ring_rows(xp, rkp, yp, ckp, n, order, lbs, bn, bm)
+    row_tile = _nn_ring_rows(xp, rkp, yp, ckp, n, rank, lb, bn, bm)
     delta, parent = jax.lax.map(row_tile, jnp.arange(nbr))
     return (delta.reshape(-1)[:n],
             parent.reshape(-1)[:n].astype(jnp.int32))
@@ -265,18 +308,20 @@ def _rho_delta_bs_jnp(x, y, jitter, d_cut, y_sel_slots=None,
     xp = _pad_inf(x, bn)
     yp = _pad_inf(y, bm)
     nbr = xp.shape[0] // bn
-    order, lbs = _ring(xp, n, yp, m, bn, bm)
+    nbc = yp.shape[0] // bm
+    rank, lb = _ring(xp, n, yp, m, bn, bm)
     d2cut = jnp.asarray(d_cut, jnp.float32) ** 2
-    kcut = jnp.sum(lbs <= d2cut, axis=1).astype(jnp.int32)
+    kcut = jnp.sum(lb <= d2cut, axis=1).astype(jnp.int32)
+    ypf = _finitize(yp).reshape(nbc, bm * d)
 
     def row_count(i):
         rows = jax.lax.dynamic_slice_in_dim(xp, i * bn, bn, 0)
-        ord_i, kc = order[i], kcut[i]
+        rank_i, kc = rank[i], kcut[i]
 
         def body(c):
             p, acc = c
-            j = ord_i[p]
-            cols = jax.lax.dynamic_slice_in_dim(yp, j * bm, bm, 0)
+            sel = (rank_i == p).astype(jnp.float32)
+            cols = _onehot_pick(sel, ypf).reshape(bm, d)
             d2 = jnp.sum((rows[:, None, :] - cols[None, :, :]) ** 2, -1)
             return p + 1, acc + jnp.sum(d2 < d2cut, axis=1).astype(jnp.int32)
 
@@ -295,7 +340,7 @@ def _rho_delta_bs_jnp(x, y, jitter, d_cut, y_sel_slots=None,
                            jnp.float32).at[y_sel_slots].set(rho_key)
     rkp = jnp.pad(rho_key, (0, xp.shape[0] - n), constant_values=jnp.inf)
     ckp = jnp.pad(col_key, (0, yp.shape[0] - m), constant_values=-jnp.inf)
-    row_nn = _nn_ring_rows(xp, rkp, yp, ckp, n, order, lbs, bn, bm)
+    row_nn = _nn_ring_rows(xp, rkp, yp, ckp, n, rank, lb, bn, bm)
     delta, parent = jax.lax.map(row_nn, jnp.arange(nbr))
     return (rho, rho_key, delta.reshape(-1)[:n],
             parent.reshape(-1)[:n].astype(jnp.int32))

@@ -65,6 +65,8 @@ from repro.kernels.density import PAD_COORD
 
 from .incremental import CellOverflow, IncrementalGrid, make_sharded_repair, \
     repair_rho
+from .sharded import make_sharded_center_dists, make_sharded_labels, \
+    make_sharded_nn_update
 from .window import SlidingWindow
 
 # Process-wide stream counters on the obs registry.  ``StreamDPC.stats()``
@@ -177,9 +179,13 @@ class StreamDPC:
     """Micro-batch streaming driver over a sliding window.
 
     ``mesh``: optional jax Mesh — the window shards over every device for
-    the rho repair (``incremental.make_sharded_repair``), mirroring how
-    ``DistDPCConfig`` shards the batch path; requires
-    ``capacity % device_count == 0``.
+    the whole repair tail, mirroring how ``DistDPCConfig`` shards the
+    batch path: rho repair (``incremental.make_sharded_repair``), dirty
+    maxima NN re-query, label propagation and the center-continuity
+    distances (``stream.sharded``).  The NN stage resolves its layout
+    through the same ``shard_blocksparse_layout`` R1 probe as the batch
+    driver, so block-sparse shard phases ride along automatically.
+    Requires ``capacity % device_count == 0``.
     """
 
     def __init__(self, cfg: StreamDPCConfig, mesh=None):
@@ -194,6 +200,9 @@ class StreamDPC:
         self._rho = None
         self._jitter = density_jitter(cfg.capacity)
         self._sharded = None
+        self._sharded_nn = None
+        self._sharded_labels = None
+        self._sharded_cdist = None
         self._result: DPCResult | None = None
         self._clustering: Clustering | None = None
         self._registry: list[tuple[int, np.ndarray]] = []  # (stable_id, pos)
@@ -282,8 +291,19 @@ class StreamDPC:
                 cell_slack=self.cfg.cell_slack,
                 extent_margin=self.cfg.extent_margin)
             if self.mesh is not None:
+                axis = self.plan.data_axis
                 self._sharded = make_sharded_repair(
-                    self.mesh, self.plan.data_axis, self.be, self.cfg.d_cut)
+                    self.mesh, axis, self.be, self.cfg.d_cut)
+                # the batch driver's probe-gated layout decision, shared:
+                # R1-clean block-sparse shard phases switch on here too
+                from repro.distributed.dpc import shard_blocksparse_layout
+                lay = shard_blocksparse_layout(self.plan, self.mesh)
+                self._sharded_nn = make_sharded_nn_update(
+                    self.mesh, axis, self.be, layout=lay)
+                self._sharded_labels = make_sharded_labels(
+                    self.mesh, axis, self.cfg.capacity)
+                self._sharded_cdist = make_sharded_center_dists(
+                    self.mesh, axis)
             cap = self.cfg.capacity
             self._nn_delta_cache = np.full(cap, np.inf, np.float32)
             self._nn_parent_cache = np.full(cap, -1, np.int32)
@@ -395,8 +415,10 @@ class StreamDPC:
                 pad *= 2
             dq_slots = np.full(pad, cap, np.int64)
             dq_slots[: len(dq)] = dq
+            nn_fn = (self._sharded_nn if self._sharded_nn is not None
+                     else self.be.denser_nn_update)
             with obs.span("stream.nn_update", queries=len(dq)) as sp:
-                nn_d, nn_p = sp.sync(self.be.denser_nn_update(
+                nn_d, nn_p = sp.sync(nn_fn(
                     self.window.device, rho_key, jnp.asarray(dq_slots)))
             self._nn_delta_cache[dq] = np.asarray(nn_d)[: len(dq)]
             self._nn_parent_cache[dq] = np.asarray(nn_p)[: len(dq)]
@@ -418,7 +440,14 @@ class StreamDPC:
     def _finish(self, res: DPCResult, *, rebuilt: bool,
                 full: bool) -> StreamTick:
         cfg = self.cfg
-        cl = assign_labels(res, cfg.rho_min, cfg.resolved_delta_min())
+        # warm-up ticks run below capacity; the sharded propagation is
+        # shape-frozen at capacity, so they fall back to the replicated pass
+        if (self._sharded_labels is not None
+                and res.parent.shape[0] == cfg.capacity):
+            cl = self._sharded_labels(res, cfg.rho_min,
+                                      cfg.resolved_delta_min())
+        else:
+            cl = assign_labels(res, cfg.rho_min, cfg.resolved_delta_min())
         self._result, self._clustering = res, cl
         with obs.span("stream.continuity") as sp:
             labels = np.asarray(cl.labels)
@@ -448,8 +477,11 @@ class StreamDPC:
         if self._registry and m:
             prev_pos = np.stack([p for _, p in self._registry])
             prev_ids = np.array([s for s, _ in self._registry])
-            dist = np.sqrt(((positions[:, None, :].astype(np.float64)
-                             - prev_pos[None]) ** 2).sum(-1))
+            if self._sharded_cdist is not None:
+                dist = self._sharded_cdist(positions, prev_pos)
+            else:
+                dist = np.sqrt(((positions[:, None, :].astype(np.float64)
+                                 - prev_pos[None]) ** 2).sum(-1))
             radius = self.cfg.resolved_radius()
             used_new = np.zeros(m, bool)
             used_old = np.zeros(len(prev_ids), bool)

@@ -320,28 +320,64 @@ from repro.kernels.backend import get_backend
 
 mesh = jax.make_mesh((4,), ("data",))
 be = get_backend("jnp")
-
-# (a) the PR 4 reconstruction: the block-sparse per-shard rho phase (the
-# jnp ring worklist's sort-derived order gather) over 4 partitions
-rho_fn = ddpc._make_rho_dense("data", 1.0, 256, be, layout="block-sparse")
-sm_rho = shard_map(rho_fn, mesh=mesh, in_specs=(P("data"), P("data")),
-                   out_specs=P("data"), check_rep=False)
 pts = jnp.zeros((32, 2), jnp.float32)
-safe = spmd_gather_safe(sm_rho, pts, pts)
-closed = jax.make_jaxpr(sm_rho)(pts, pts)
-r1 = [f for f in analyze_jaxpr("pr4-reconstruction", closed)
+rk = jnp.zeros((32,), jnp.float32)
+
+# (a) positive control: a frozen copy of the pre-one-hot order-gather ring
+# walk (argsort visit order, tile id read from the sorted permutation
+# inside the walk, feeding a dynamic_slice) -- the exact shape the pinned
+# XLA CPU SPMD pipeline miscompiles.  Deleted from production by the
+# one-hot rewrite; kept here so R1's detection of the pattern stays pinned.
+BM = 8
+def frozen_order_gather_walk(x_my, y):
+    nbc = y.shape[0] // BM
+    lo = jnp.min(y.reshape(nbc, BM, -1), axis=1)
+    lb = jnp.sum((jnp.mean(x_my, axis=0)[None, :] - lo) ** 2, axis=1)
+    order = jnp.argsort(lb).astype(jnp.int32)     # sort-derived visit order
+    lbs = jnp.take_along_axis(lb, order, axis=0)  # the old order-gather
+
+    def cond(c):
+        p, _ = c
+        return (p < nbc) & (lbs[jnp.minimum(p, nbc - 1)] < jnp.inf)
+
+    def body(c):
+        p, acc = c
+        j = order[p]                              # tainted tile id ...
+        tile = jax.lax.dynamic_slice_in_dim(y, j * BM, BM, 0)  # ... -> R1
+        d2 = jnp.sum((x_my[:, None, :] - tile[None, :, :]) ** 2, -1)
+        return p + 1, acc + jnp.sum(d2 < 1.0, axis=1).astype(jnp.float32)
+
+    _, acc = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), jnp.zeros(x_my.shape[0], jnp.float32)))
+    return acc
+
+sm_old = shard_map(frozen_order_gather_walk, mesh=mesh,
+                   in_specs=(P("data"), P(None)), out_specs=P("data"),
+                   check_rep=False)
+safe_old = spmd_gather_safe(sm_old, pts, pts)
+closed = jax.make_jaxpr(sm_old)(pts, pts)
+r1 = [f for f in analyze_jaxpr("frozen-order-gather", closed)
       if f.rule == r1_spmd_gather.RULE_NAME]
 
-# (b) the production guard consumes the same probe: block-sparse degrades
-# on this mesh, dense is never eligible
+# (b) the production one-hot walk: both block-sparse shard phases trace
+# clean over 4 partitions, so the guard keeps block-sparse on this mesh
+rho_fn = ddpc._make_rho_dense("data", 1.0, 256, be, layout="block-sparse")
+delta_fn = ddpc._make_delta_dense("data", 256, be, layout="block-sparse")
+sm_rho = shard_map(rho_fn, mesh=mesh, in_specs=(P("data"), P("data")),
+                   out_specs=P("data"), check_rep=False)
+sm_delta = shard_map(delta_fn, mesh=mesh, in_specs=(P("data"),) * 4,
+                     out_specs=(P("data"),) * 3, check_rep=False)
+safe_rho = spmd_gather_safe(sm_rho, pts, pts)
+safe_delta = spmd_gather_safe(sm_delta, pts, rk, pts, rk)
 pl_bs = plan(None, ExecSpec(backend="jnp", layout="block-sparse"))
 pl_dense = plan(None, ExecSpec(backend="jnp"))
 lay_bs = ddpc.shard_blocksparse_layout(pl_bs, mesh)
 lay_dense = ddpc.shard_blocksparse_layout(pl_dense, mesh)
 
 # (c) the clean tree: every distributed/stream target these plans run
-# today analyzes with zero error findings (the degraded phases, the halo
-# phases, the stencil span-table gathers -- none trip R1)
+# today -- now including the block-sparse shard phases and the sharded
+# stream tail (NN re-query, label propagation, center distances) --
+# analyzes with zero error findings
 errors = []
 for pl in (pl_bs, pl_dense):
     tgts = list(distributed_targets(pl)[0]) + list(stream_targets(pl)[0])
@@ -350,8 +386,9 @@ for pl in (pl_bs, pl_dense):
             if f.severity == "error":
                 errors.append([name, f.rule])
 
-out = {"safe": bool(safe), "n_r1": len(r1),
+out = {"safe_old": bool(safe_old), "n_r1": len(r1),
        "messages": [f.message for f in r1],
+       "safe_rho": bool(safe_rho), "safe_delta": bool(safe_delta),
        "layout_bs": lay_bs, "layout_dense": lay_dense,
        "clean_errors": errors}
 print("RESULT" + json.dumps(out))
@@ -370,16 +407,20 @@ def _run_subprocess(script):
     return json.loads(line[len("RESULT"):])
 
 
-def test_r1_fires_on_pr4_reconstruction_and_tree_is_clean():
-    """ISSUE 6 acceptance, all three R1 halves in one 4-device subprocess:
-    the resurrected PR 4 shape is flagged, the guard degrades block-sparse
-    shard phases off the probe (not a device-count special case), and the
-    shipping distributed/stream traces analyze clean."""
+def test_r1_positive_control_and_production_tree_is_clean():
+    """All three R1 halves in one 4-device subprocess: the frozen copy of
+    the old order-gather walk is still flagged (the rule's detection of
+    the miscompile pattern stays pinned after the production rewrite),
+    both production block-sparse shard phases trace clean so the probe
+    keeps block-sparse on a multi-partition mesh (ISSUE 8 acceptance),
+    and every shipping distributed/stream trace analyzes clean."""
     out = _run_subprocess(_R1_SCRIPT)
-    assert out["safe"] is False
+    assert out["safe_old"] is False
     assert out["n_r1"] >= 1
     assert any("sort-derived" in m for m in out["messages"])
-    assert out["layout_bs"] is None, \
-        "multi-partition block-sparse must degrade while the probe fails"
+    assert out["safe_rho"] is True and out["safe_delta"] is True, \
+        "production one-hot shard phases must pass spmd_gather_safe"
+    assert out["layout_bs"] == "block-sparse", \
+        "the probe must re-enable multi-partition block-sparse"
     assert out["layout_dense"] is None
     assert out["clean_errors"] == []

@@ -62,22 +62,26 @@ print("RESULT" + json.dumps(out))
 """
 
 # Regression pin (runs in CI — deliberately NOT slow-marked): block-sparse
-# exec on a MULTI-device mesh must stay exact.  The pinned jax-0.4.37 XLA
-# CPU SPMD pipeline miscompiles the ring walk's order-gather inside
-# shard_map on >1 partition (kept tiles silently skipped), so
-# distributed_dpc degrades per-shard phases to dense tiles there — this
-# check fails if that guard is ever lifted without fixing the underlying
-# miscompile (see distributed/dpc.py).
+# exec on a MULTI-device mesh must stay exact AND stay *enabled*.  With
+# the one-hot ring walk, shard_blocksparse_layout's R1 probe passes on
+# multi-partition meshes, so the shard phases run block-sparse worklists —
+# this check fails both if the probe silently degrades again (layout flips
+# to None) and if the enabled phases ever stop bit-matching run_exdpc
+# (which is how the pinned jax-0.4.37 XLA SPMD miscompile manifested).
 _BS_GUARD_SCRIPT = r"""
 import warnings, json
 warnings.filterwarnings("ignore")
 import numpy as np, jax, jax.numpy as jnp
 from repro.distributed import distributed_dpc
+from repro.distributed.dpc import shard_blocksparse_layout
 from repro.core.exdpc import run_exdpc
 from repro.data.points import gaussian_mixture
 from repro.engine import ExecSpec
+from repro.engine.planner import plan
 
 mesh = jax.make_mesh((4,), ("data",))
+pl = plan(None, ExecSpec(backend="jnp", layout="block-sparse"))
+layout = shard_blocksparse_layout(pl, mesh)
 pts, _ = gaussian_mixture(1024, k=5, d=2, overlap=0.03, seed=3)
 res = distributed_dpc(pts, mesh=mesh, d_cut=2500.0,
                       exec_spec=ExecSpec(backend="jnp",
@@ -85,6 +89,7 @@ res = distributed_dpc(pts, mesh=mesh, d_cut=2500.0,
 ref = run_exdpc(pts, 2500.0, exec_spec=ExecSpec(backend="jnp"))
 binf = jnp.isinf(res.delta) & jnp.isinf(ref.delta)
 out = {"bs_multidev": {
+    "layout": layout,
     "rho_eq_ex": bool(jnp.all(res.rho == ref.rho)),
     "rho_eq_scan": True,
     "delta_close": bool(jnp.all((res.delta == ref.delta) | binf)),
@@ -118,13 +123,15 @@ def test_distributed_matches_exact():
         assert r["parent_eq"] == 1.0, (key, r)
 
 
-def test_multidev_block_sparse_stays_exact():
-    """The XLA-SPMD-miscompile guard (see distributed/dpc.py): per-shard
-    block-sparse on a 4-device mesh must produce exact results — today by
-    degrading to dense tiles.  Not slow-marked on purpose: CI must catch
-    the guard being lifted without the upstream fix."""
+def test_multidev_block_sparse_enabled_and_exact():
+    """ISSUE 8 acceptance: per-shard block-sparse on a 4-device mesh is
+    *enabled* (the R1 probe passes on the one-hot ring walk, so
+    shard_blocksparse_layout returns "block-sparse") and bit-matches
+    run_exdpc.  Not slow-marked on purpose: CI must catch both a silent
+    probe degrade and a miscompile-shaped divergence."""
     out = _run_subprocess(_BS_GUARD_SCRIPT)
     r = out["bs_multidev"]
+    assert r["layout"] == "block-sparse", r
     assert r["rho_eq_ex"] and r["delta_close"] and r["parent_eq"] == 1.0, r
 
 

@@ -157,27 +157,47 @@ import warnings, json
 warnings.filterwarnings("ignore")
 import numpy as np, jax, jax.numpy as jnp
 from repro.core.approxdpc import run_approxdpc
+from repro.core.labels import assign_labels
 from repro.data.points import gaussian_mixture
 from repro.engine import ExecSpec
 from repro.stream import StreamDPC, StreamDPCConfig
 
 assert jax.device_count() == 4
 cap, B, d_cut = 512, 64, 8000.0
-pts, _ = gaussian_mixture(cap + 3 * B, k=4, d=2, overlap=0.05, seed=2)
 mesh = jax.make_mesh((2, 2), ("data", "model"))   # flattens to 4 shards
-s = StreamDPC(StreamDPCConfig(d_cut=d_cut, capacity=cap, batch_cap=B,
-                              rho_min=3.0,
-                              exec_spec=ExecSpec(backend="jnp")),
-              mesh=mesh)
-s.initialize(pts[:cap])
-ok = True
-for t in range(3):
-    s.ingest(pts[cap + t * B: cap + (t + 1) * B])
-    fresh = run_approxdpc(jnp.asarray(s.window_points()), d_cut,
-                          exec_spec=ExecSpec(backend="jnp"))
-    ok &= bool(jnp.all(fresh.rho == s.result.rho))
-    ok &= bool(jnp.all(fresh.parent == s.result.parent))
-print("RESULT" + json.dumps({"parity": ok}))
+out = {}
+for layout in (None, "block-sparse"):
+    def mk(m):
+        return StreamDPC(StreamDPCConfig(
+            d_cut=d_cut, capacity=cap, batch_cap=B, rho_min=3.0,
+            exec_spec=ExecSpec(backend="jnp", layout=layout)), mesh=m)
+    pts, _ = gaussian_mixture(cap + 3 * B, k=4, d=2, overlap=0.05, seed=2)
+    s = mk(mesh)        # every repair-tail stage sharded over 4 devices
+    r = mk(None)        # the replicated predecessor of each stage
+    s.initialize(pts[:cap]); r.initialize(pts[:cap])
+    ok = True
+    for t in range(3):
+        ts = s.ingest(pts[cap + t * B: cap + (t + 1) * B])
+        tr = r.ingest(pts[cap + t * B: cap + (t + 1) * B])
+        fresh = run_approxdpc(jnp.asarray(s.window_points()), d_cut,
+                              exec_spec=ExecSpec(backend="jnp"))
+        ok &= bool(jnp.all(fresh.rho == s.result.rho))
+        # sharded maxima-NN re-query == replicated denser_nn_update
+        ok &= bool(jnp.all(fresh.parent == s.result.parent))
+        both = jnp.isinf(fresh.delta) & jnp.isinf(s.result.delta)
+        ok &= bool(jnp.all((fresh.delta == s.result.delta) | both))
+        # sharded one-hot label propagation == replicated pointer jumping
+        cl = assign_labels(fresh, 3.0, 2 * d_cut)
+        ok &= bool(jnp.all(cl.labels == s.clustering.labels))
+        ok &= bool(jnp.all(cl.centers == s.clustering.centers))
+        # sharded center-distance matrix == numpy greedy-matching input
+        ok &= bool(np.array_equal(ts.labels, tr.labels))
+        ok &= bool(np.array_equal(ts.stable_ids, tr.stable_ids))
+    stages = (s._sharded is not None and s._sharded_nn is not None
+              and s._sharded_labels is not None
+              and s._sharded_cdist is not None)
+    out[layout or "dense"] = {"parity": ok, "stages_built": stages}
+print("RESULT" + json.dumps(out))
 """
 
 
@@ -198,7 +218,10 @@ class TestShardedIngest:
     @pytest.mark.slow
     def test_sharded_multi_device(self):
         """4 fake host devices (subprocess: XLA_FLAGS must precede jax
-        init): real P(axis) sharding + psum reduction, parity preserved."""
+        init): the whole repair tail — rho repair, maxima NN re-query,
+        label propagation, center matching — runs sharded, bit-equal to
+        both the replicated stream and a from-scratch run_approxdpc +
+        assign_labels, on dense and block-sparse layouts."""
         import json as _json
         import os
         import subprocess
@@ -215,7 +238,10 @@ class TestShardedIngest:
         assert proc.returncode == 0, proc.stderr[-3000:]
         line = [l for l in proc.stdout.splitlines()
                 if l.startswith("RESULT")][0]
-        assert _json.loads(line[len("RESULT"):])["parity"]
+        out = _json.loads(line[len("RESULT"):])
+        for layout, r in out.items():
+            assert r["stages_built"], (layout, r)
+            assert r["parity"], (layout, r)
 
 
 class TestWindow:
