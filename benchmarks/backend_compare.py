@@ -30,13 +30,18 @@ pallas-interpret exercise pass, failing (exit 1) when
 * any jnp primitive regressed more than SMOKE_TOLERANCE in *relative*
   pairs/s against the committed BENCH_core.json (throughputs are normalized
   by the currently measured jnp range_count rate first, so the gate tracks
-  algorithmic regressions rather than CI-machine speed).
+  algorithmic regressions rather than CI-machine speed), or
+* a stream checkpoint restore breaks tick parity (the ISSUE 9 resilience
+  bar: one post-restore ingest must be bit-identical to the uninterrupted
+  stream's; the save/restore latencies printed alongside are
+  informational, never gated).
 
 ``--refresh-baseline`` rewrites BENCH_core.json: the standard-shape record
 plus the ISSUE-4 acceptance measurement (block-sparse vs dense fused
-``rho_delta`` wall clock at n=64k, d=3, paper-style d_cut, jnp CPU) and
-the ISSUE-8 distributed rows (dense vs block-sparse shard phases at the
-same acceptance shape, plus a smaller smoke shape the CI gate re-measures).
+``rho_delta`` wall clock at n=64k, d=3, paper-style d_cut, jnp CPU), the
+ISSUE-8 distributed rows (dense vs block-sparse shard phases at the
+same acceptance shape, plus a smaller smoke shape the CI gate re-measures)
+and the ISSUE-9 ``stream_checkpoint`` latency/parity row.
 """
 from __future__ import annotations
 
@@ -333,6 +338,59 @@ def measure_distributed(n: int, d: int, repeats: int = 3,
     return rec
 
 
+def measure_checkpoint(repeats: int = 5, capacity: int = 4096,
+                       batch: int = 256, d: int = 3) -> dict:
+    """The ISSUE 9 resilience row: crash-safe stream-checkpoint latency
+    (save / restore wall clock and file size at the engine's default
+    window shape, jnp backend, steady-state ring) plus the restore
+    contract itself — one post-restore ingest must be bit-identical to
+    the uninterrupted stream's.  Latency is informational (min over
+    ``repeats``); only a parity break gates."""
+    import tempfile
+    import time
+
+    from repro.stream.stream_dpc import StreamDPC, StreamDPCConfig
+
+    rng = np.random.default_rng(7)
+    d_cut = 900.0
+    pts = rng.uniform(0, 6 * d_cut,
+                      (capacity + 3 * batch, d)).astype(np.float32)
+    cfg = StreamDPCConfig(d_cut=d_cut, capacity=capacity, batch_cap=batch,
+                          rho_min=3.0, exec_spec=ExecSpec(backend="jnp"))
+    s = StreamDPC(cfg)
+    s.initialize(pts[:capacity])
+    s.ingest(pts[capacity:capacity + 2 * batch])   # steady state: ring wraps
+    saves, restores = [], []
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "stream.ckpt")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            s.save(path)
+            saves.append(time.perf_counter() - t0)
+        size = os.path.getsize(path)
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            r = StreamDPC.restore(path)
+            restores.append(time.perf_counter() - t0)
+        tail = pts[capacity + 2 * batch:]
+        a = s.ingest(tail)
+        b = r.ingest(tail)
+    parity = bool(np.array_equal(a.labels, b.labels)
+                  and np.array_equal(a.stable_ids, b.stable_ids))
+    rec = {"capacity": capacity, "batch_cap": batch, "d": d,
+           "backend": "jnp",
+           "save_ms": float(np.min(saves) * 1e3),
+           "restore_ms": float(np.min(restores) * 1e3),
+           "bytes": int(size),
+           "post_restore_parity": parity}
+    print(f"[backend_compare] stream checkpoint (capacity={capacity}, "
+          f"d={d}): save {rec['save_ms']:.1f} ms, restore "
+          f"{rec['restore_ms']:.1f} ms, {size / 1e6:.2f} MB, "
+          f"post-restore parity={'OK' if parity else 'BROKEN'}",
+          flush=True)
+    return rec
+
+
 def dist_gate(committed, repeats: int,
               tolerance: float = SMOKE_TOLERANCE) -> list[str]:
     """Smoke check of the multi-device row: the probe must keep
@@ -421,6 +479,11 @@ def main(n: int = 4096, d: int = 3, repeats: int = 3,
         del exercise  # correctness/coverage only; never gated
         failures = smoke_gate(rec, committed)
         failures += dist_gate(committed, repeats=max(repeats, 3))
+        ck = measure_checkpoint(repeats=max(repeats, 3))
+        rec["stream_checkpoint"] = ck
+        if not ck["post_restore_parity"]:
+            failures.append("stream checkpoint restore broke tick parity "
+                            "(post-restore ingest != uninterrupted stream)")
         _export_obs(obs_snapshot)
         if failures:
             print("[backend_compare --smoke] FAIL", flush=True)
@@ -442,6 +505,7 @@ def main(n: int = 4096, d: int = 3, repeats: int = 3,
             "smoke": measure_distributed(DIST_SMOKE_N, ACCEPT_D,
                                          repeats=repeats),
         }
+        rec["stream_checkpoint"] = measure_checkpoint(repeats=repeats)
         with open(baseline, "w") as f:
             json.dump(rec, f, indent=2)
         print(f"[backend_compare] refreshed {baseline}", flush=True)

@@ -29,6 +29,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro import obs
+from repro.resilience.sanitize import AdmissionConfig, admit
 
 from .planner import DPCPlan, as_plan
 from .spec import ExecSpec
@@ -61,7 +62,8 @@ class DPCEngine:
                  exec_spec: ExecSpec | None = None, mesh=None,
                  strategy: str = "gather",
                  window_capacity: int = 4096, batch_cap: int = 256,
-                 stream_options: dict | None = None):
+                 stream_options: dict | None = None,
+                 admission: AdmissionConfig | None = AdmissionConfig()):
         if not d_cut > 0.0:
             raise ValueError(f"d_cut must be positive, got {d_cut!r}")
         if algorithm not in _BATCH_ALGORITHMS:
@@ -80,6 +82,11 @@ class DPCEngine:
         if batch_cap > window_capacity:
             raise ValueError(f"batch_cap ({batch_cap}) cannot exceed "
                              f"window_capacity ({window_capacity})")
+        if admission is not None and not isinstance(admission,
+                                                    AdmissionConfig):
+            raise TypeError(f"admission must be an AdmissionConfig or None, "
+                            f"got {type(admission).__name__}")
+        self.admission = admission
         self.d_cut = float(d_cut)
         self.algorithm = algorithm
         self.rho_min = float(rho_min)
@@ -141,6 +148,13 @@ class DPCEngine:
         starts a fresh window seeded from these points (when they fit)."""
         from repro.core.labels import assign_labels
 
+        if self.admission is not None:
+            admitted = admit(points, self.admission, where="engine.fit")
+            if admitted.points.size == 0:
+                raise ValueError(
+                    "fit: no points survived admission control "
+                    f"({admitted.quarantined} quarantined)")
+            points = admitted.points
         points = jnp.asarray(points, jnp.float32)
         self._plan = as_plan(self.exec_spec, points)
         with obs.span("engine.fit", n=int(points.shape[0]),
@@ -189,6 +203,12 @@ class DPCEngine:
                 f"partial_fit maintains Approx-DPC state (the stream "
                 f"parity contract); algorithm={self.algorithm!r} does not "
                 f"stream")
+        if self.admission is not None:
+            batch = admit(batch, self.admission,
+                          where="engine.partial_fit").points
+        if np.asarray(batch).size == 0:
+            # empty or fully-quarantined batch: a no-op, never a ghost tick
+            return self._stream._last if self._stream is not None else None
         tick = None
         with obs.span("engine.partial_fit") as sp:
             if self._stream is None:
@@ -223,8 +243,15 @@ class DPCEngine:
         within d_cut of a fitted point, ``MISS_FALLBACK`` to the nearest
         center otherwise, ``MISS`` (-1) only with no centers at all."""
         self._require_fitted()
-        from repro.stream.service import nearest_label_query
+        from repro.stream.service import (QueryResult, QueryStatus,
+                                          nearest_label_query)
 
+        keep = None
+        if self.admission is not None:
+            admitted = admit(points, self.admission, where="engine.predict")
+            points = admitted.points
+            if admitted.quarantined:
+                keep = admitted.keep
         with obs.span("engine.predict", mode=self._mode) as sp:
             if self._mode == "stream":
                 s = self._stream
@@ -242,6 +269,15 @@ class DPCEngine:
                     labels, labels[c_rows].astype(np.int64), pts_np[c_rows],
                     pad_multiple=self.batch_cap)
             sp.sync(out.labels)
+        if keep is not None:
+            # re-expand to the caller's row alignment: dropped rows answer
+            # (-1, QUARANTINED) instead of silently shifting every result
+            labels = np.full(len(keep), -1, np.int64)
+            status = np.full(len(keep), int(QueryStatus.QUARANTINED),
+                             np.int8)
+            labels[keep] = out.labels
+            status[keep] = out.status
+            out = QueryResult(labels=labels, status=status)
         return out
 
     # ----------------------------------------------------- decision graph

@@ -38,6 +38,8 @@ from dataclasses import dataclass
 from repro.kernels import blocksparse
 from repro.kernels.backend import KernelBackend, get_backend
 from repro.obs import metrics as _obsm
+from repro.resilience import faultinject
+from repro.resilience.degrade import resolve_backend
 
 from .spec import ExecSpec
 
@@ -77,7 +79,10 @@ class DPCPlan:
     def __init__(self, pspec: PointsSpec | None, spec: ExecSpec):
         self.spec = spec
         self.pspec = pspec
-        self.backend: KernelBackend = get_backend(spec.backend)
+        # plan-time compile probe + graceful degradation chain
+        # (pallas -> pallas-interpret -> jnp; see resilience.degrade)
+        self.backend: KernelBackend = get_backend(resolve_backend(
+            spec.backend, precision=spec.resolved_precision))
         self.backend_name: str = self.backend.name
         self.layout: str = spec.resolved_layout
         self.sparse: bool = spec.sparse
@@ -244,6 +249,7 @@ class DPCPlan:
         return self.resolved_block if override is _PLAN else override
 
     def denser_nn(self, x, x_key, y, y_key, *, block=_PLAN, layout=_PLAN):
+        faultinject.fire("kernel.dispatch")
         with self._ctx():
             return self.backend.denser_nn(
                 x, x_key, y, y_key, block=self._block(block),
@@ -252,6 +258,7 @@ class DPCPlan:
     def rho_delta(self, x, y, d_cut, *, jitter=None, y_sel_slots=None,
                   fallback_interest=None, block=_PLAN, layout=_PLAN,
                   precision=_PLAN):
+        faultinject.fire("kernel.dispatch")
         with self._ctx():
             return self.backend.rho_delta(
                 x, y, d_cut, jitter=jitter, y_sel_slots=y_sel_slots,

@@ -1,0 +1,33 @@
+"""repro.resilience — failure containment for the streaming DPC engine.
+
+Four pillars, each its own module:
+
+* :mod:`.checkpoint` — versioned, atomic ``StreamDPC.save/restore`` with
+  bit-identical post-restore ticks (device-count independent).
+* :mod:`.sanitize` — admission control (NaN/Inf/dtype/out-of-range
+  quarantine: ``reject`` | ``drop`` | ``clamp``) plus the shared
+  :func:`finite_or` kernel-epilogue guard.
+* :mod:`.degrade` — plan-time compile probing with the graceful backend
+  chain pallas -> pallas-interpret -> jnp.
+* :mod:`.faultinject` — deterministic named-site fault injection driving
+  the chaos suite that proves the other three.
+"""
+from repro.resilience import (checkpoint, degrade,  # noqa: F401
+                              faultinject, sanitize)
+from repro.resilience.checkpoint import (CheckpointError,  # noqa: F401
+                                         restore_stream, save_stream)
+from repro.resilience.degrade import resolve_backend  # noqa: F401
+from repro.resilience.faultinject import (FaultError,  # noqa: F401
+                                          KILL_EXIT_CODE, KNOWN_SITES,
+                                          activate, deactivate, fire)
+from repro.resilience.sanitize import (AdmissionConfig,  # noqa: F401
+                                       AdmissionResult, PoisonedInputError,
+                                       admit, finite_or)
+
+__all__ = [
+    "AdmissionConfig", "AdmissionResult", "CheckpointError", "FaultError",
+    "KILL_EXIT_CODE", "KNOWN_SITES", "PoisonedInputError", "activate",
+    "admit", "checkpoint", "deactivate", "degrade", "faultinject",
+    "finite_or", "fire", "resolve_backend", "restore_stream", "sanitize",
+    "save_stream",
+]

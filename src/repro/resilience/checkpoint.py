@@ -1,0 +1,262 @@
+"""Versioned, atomic checkpoints of the complete StreamDPC state.
+
+A checkpoint is one ``.npz`` file: a JSON metadata blob (format tag,
+version, ExecSpec fingerprint, config, scalar counters) plus every array
+the incremental tick math reads — ring window in slot order, grid
+bookkeeping with its measured capacities and free-list, repaired rho,
+the cached maxima NN answers with their validity mask, the stable-center
+registry, and the last published tick.  The restore contract is the
+repo's parity contract extended across a crash: a restored stream's next
+ticks are **bit-identical** to the uninterrupted run's — including onto
+a *different device count*, because the sharded repair tail is already
+bit-identical to the replicated path (the window arrays are device-count
+agnostic; only the compiled repair functions differ, and those rebuild
+from the target mesh at restore time).
+
+Writes are atomic: serialize to ``<path>.tmp.<pid>``, fsync, then
+``os.replace`` — a crash mid-write (the ``checkpoint.write`` fault site
+sits exactly between the two) leaves the previous checkpoint intact and
+readable.  Readers validate the format tag and version and raise
+:class:`CheckpointError` on anything unreadable, truncated, or from a
+future version — never a half-restored stream.
+
+Version policy: ``VERSION`` bumps whenever the serialized state's
+meaning changes (a new field with a safe default does not bump; a
+re-interpretation of an existing field does).  Restore accepts exactly
+the current version — checkpoints are crash-recovery artifacts, not an
+archival format.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.resilience import faultinject
+
+__all__ = ["CheckpointError", "FORMAT", "VERSION", "restore_stream",
+           "save_stream"]
+
+FORMAT = "repro.stream-ckpt"
+VERSION = 1
+
+
+class CheckpointError(RuntimeError):
+    """The file is not a readable checkpoint of the current version."""
+
+
+def _cfg_meta(cfg) -> dict:
+    return {
+        "d_cut": cfg.d_cut,
+        "capacity": cfg.capacity,
+        "batch_cap": cfg.batch_cap,
+        "rho_min": cfg.rho_min,
+        "delta_min": cfg.delta_min,
+        "cell_slack": cfg.cell_slack,
+        "extent_margin": cfg.extent_margin,
+        "continuity_radius": cfg.continuity_radius,
+        "dirty_tracking": cfg.dirty_tracking,
+        "transactional": cfg.transactional,
+    }
+
+
+def save_stream(stream, path: str) -> None:
+    """Serialize ``stream`` (a :class:`repro.stream.StreamDPC`) to ``path``
+    atomically.  Raises ValueError on a stream that has never seen data."""
+    faultinject.fire("checkpoint.serialize")
+    w = stream.window
+    if w is None:
+        raise ValueError("cannot checkpoint a StreamDPC before its first "
+                         "initialize()/ingest() — there is no window state")
+    g = stream.grid
+    spec = stream.cfg.resolved_exec()
+    meta = {
+        "format": FORMAT,
+        "version": VERSION,
+        "fingerprint": spec.describe(),
+        "exec": {"backend": spec.backend, "layout": spec.layout,
+                 "precision": spec.precision, "block": spec.block,
+                 "data_axis": spec.data_axis},
+        "cfg": _cfg_meta(stream.cfg),
+        "dim": w.dim,
+        "window": {"count": w.count, "cursor": w.cursor, "ticks": w.ticks},
+        "counters": {"ticks": stream._ticks,
+                     "full_recomputes": stream._full_recomputes,
+                     "next_stable": stream._next_stable,
+                     "nn_maxima_total": stream._nn_maxima_total,
+                     "nn_queries": stream._nn_queries},
+        "grid": {"built": g._built, "rebuilds": g.rebuilds},
+        "has_rho": stream._rho is not None,
+        "has_result": stream._result is not None,
+        "has_last": stream._last is not None,
+        "registry_ids": [s for s, _ in stream._registry],
+    }
+    arrays: dict[str, np.ndarray] = {"win_host": w.host}
+    if stream._rho is not None:
+        arrays["rho"] = np.asarray(stream._rho)
+    arrays["nn_delta"] = stream._nn_delta_cache
+    arrays["nn_parent"] = stream._nn_parent_cache
+    arrays["nn_valid"] = stream._nn_valid
+    if g._built:
+        meta["grid"].update({
+            "live_cells": g.live_cells, "next_id": g.next_id,
+            "maxima_cap": g.maxima_cap, "free_ids": list(g.free_ids),
+            "has_touched": g.last_touched is not None})
+        arrays["grid_box_lo"] = np.asarray(g.box_lo)
+        arrays["grid_box_extent"] = np.asarray(g.box_extent)
+        arrays["grid_strides"] = np.asarray(g.strides)
+        arrays["grid_cell_count"] = g.cell_count
+        arrays["grid_seg"] = g.seg_np
+        arrays["grid_keys"] = np.fromiter(g.key_to_id.keys(), np.int64,
+                                          len(g.key_to_id))
+        arrays["grid_ids"] = np.fromiter(g.key_to_id.values(), np.int32,
+                                         len(g.key_to_id))
+        if g.last_touched is not None:
+            arrays["grid_touched"] = g.last_touched
+    if stream._registry:
+        arrays["reg_pos"] = np.stack([p for _, p in stream._registry])
+    if stream._result is not None:
+        r = stream._result
+        arrays["res_rho"] = np.asarray(r.rho)
+        arrays["res_rho_key"] = np.asarray(r.rho_key)
+        arrays["res_delta"] = np.asarray(r.delta)
+        arrays["res_parent"] = np.asarray(r.parent)
+        cl = stream._clustering
+        arrays["cl_labels"] = np.asarray(cl.labels)
+        arrays["cl_centers"] = np.asarray(cl.centers)
+        meta["num_clusters"] = int(cl.num_clusters)
+    if stream._last is not None:
+        t = stream._last
+        meta["last"] = {"num_clusters": int(t.num_clusters),
+                        "rebuilt": bool(t.rebuilt),
+                        "full_recompute": bool(t.full_recompute),
+                        "tick": int(t.tick)}
+        arrays["last_labels"] = np.asarray(t.labels)
+        arrays["last_centers"] = np.asarray(t.centers)
+        arrays["last_stable"] = np.asarray(t.stable_ids)
+    arrays["meta"] = np.frombuffer(json.dumps(meta).encode(), np.uint8)
+
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "wb") as fh:
+        np.savez(fh, **arrays)
+        fh.flush()
+        os.fsync(fh.fileno())
+    faultinject.fire("checkpoint.write")    # kill/raise: old file survives
+    if faultinject.should_corrupt("checkpoint.write"):
+        with open(tmp, "r+b") as fh:
+            fh.truncate(max(os.path.getsize(tmp) // 2, 8))
+    os.replace(tmp, path)
+
+
+def _meta_of(z) -> dict:
+    try:
+        meta = json.loads(bytes(z["meta"].tobytes()).decode())
+    except Exception as exc:
+        raise CheckpointError(f"checkpoint metadata unreadable: {exc}") \
+            from exc
+    if meta.get("format") != FORMAT:
+        raise CheckpointError(
+            f"not a {FORMAT} file (format={meta.get('format')!r})")
+    if meta.get("version") != VERSION:
+        raise CheckpointError(
+            f"checkpoint version {meta.get('version')!r} != supported "
+            f"{VERSION}; restore accepts exactly the current version")
+    return meta
+
+
+def restore_stream(path: str, mesh=None):
+    """Rebuild a :class:`repro.stream.StreamDPC` from ``path``.
+
+    ``mesh`` may differ from the saved run's (including None after a
+    sharded run): the serialized arrays are device-count agnostic and the
+    repair tail recompiles against the target mesh with bit-identical
+    results.
+    """
+    import jax.numpy as jnp
+
+    from repro.core.dpc_types import DPCResult
+    from repro.core.labels import Clustering
+    from repro.engine.spec import ExecSpec
+    from repro.stream.stream_dpc import StreamDPC, StreamDPCConfig, StreamTick
+
+    try:
+        z = np.load(path, allow_pickle=False)
+    except Exception as exc:
+        raise CheckpointError(f"cannot read checkpoint {path!r}: {exc}") \
+            from exc
+    with z:
+        try:
+            meta = _meta_of(z)
+            spec = ExecSpec(**meta["exec"])
+            if spec.describe() != meta["fingerprint"]:
+                raise CheckpointError(
+                    f"ExecSpec fingerprint mismatch: file says "
+                    f"{meta['fingerprint']!r}, rebuilt {spec.describe()!r}")
+            cfg = StreamDPCConfig(exec_spec=spec, **meta["cfg"])
+            s = StreamDPC(cfg, mesh=mesh)
+            s._ensure_window(int(meta["dim"]))
+            w = s.window
+            w.host[:] = z["win_host"]
+            w.device = jnp.asarray(w.host)
+            wm = meta["window"]
+            w.count, w.cursor, w.ticks = wm["count"], wm["cursor"], wm["ticks"]
+            gm = meta["grid"]
+            if gm["built"]:
+                g = s.grid
+                g.box_lo = z["grid_box_lo"]
+                g.box_extent = z["grid_box_extent"]
+                g.strides = z["grid_strides"]
+                g.cell_count = z["grid_cell_count"].copy()
+                g.seg_np = z["grid_seg"].copy()
+                g.seg_dev = jnp.asarray(g.seg_np)
+                g.key_to_id = {int(k): int(i) for k, i in
+                               zip(z["grid_keys"], z["grid_ids"])}
+                g.live_cells = gm["live_cells"]
+                g.next_id = gm["next_id"]
+                g.maxima_cap = gm["maxima_cap"]
+                g.free_ids = list(gm["free_ids"])
+                g.rebuilds = gm["rebuilds"]
+                g._built = True
+                g.last_touched = (z["grid_touched"].copy()
+                                  if gm["has_touched"] else None)
+            if meta["has_rho"]:
+                s._rho = jnp.asarray(z["rho"])
+            s._nn_delta_cache[:] = z["nn_delta"]
+            s._nn_parent_cache[:] = z["nn_parent"]
+            s._nn_valid[:] = z["nn_valid"]
+            c = meta["counters"]
+            s._ticks = c["ticks"]
+            s._full_recomputes = c["full_recomputes"]
+            s._next_stable = c["next_stable"]
+            s._nn_maxima_total = c["nn_maxima_total"]
+            s._nn_queries = c["nn_queries"]
+            ids = meta["registry_ids"]
+            if ids:
+                pos = z["reg_pos"]
+                s._registry = [(int(i), pos[j].copy())
+                               for j, i in enumerate(ids)]
+            if meta["has_result"]:
+                s._result = DPCResult(
+                    rho=jnp.asarray(z["res_rho"]),
+                    rho_key=jnp.asarray(z["res_rho_key"]),
+                    delta=jnp.asarray(z["res_delta"]),
+                    parent=jnp.asarray(z["res_parent"]))
+                s._clustering = Clustering(
+                    labels=jnp.asarray(z["cl_labels"]),
+                    centers=jnp.asarray(z["cl_centers"]),
+                    num_clusters=jnp.asarray(meta["num_clusters"], jnp.int32))
+            if meta["has_last"]:
+                lm = meta["last"]
+                s._last = StreamTick(
+                    labels=z["last_labels"].copy(),
+                    centers=z["last_centers"].copy(),
+                    stable_ids=z["last_stable"].copy(),
+                    num_clusters=lm["num_clusters"], rebuilt=lm["rebuilt"],
+                    full_recompute=lm["full_recompute"], tick=lm["tick"])
+        except CheckpointError:
+            raise
+        except KeyError as exc:
+            raise CheckpointError(
+                f"checkpoint {path!r} is missing field {exc}") from exc
+    return s

@@ -1,0 +1,138 @@
+"""Poisoned-input admission control + shared non-finite epilogue guards.
+
+A single NaN coordinate entering the streaming window silently poisons
+everything downstream: the signed range counts (``NaN < d_cut`` is False,
+but the *repair* of a NaN row never cancels), the grid packing (``floor``
+of NaN), and every distance the serve path computes against the window.
+The admission layer catches malformed points **at the boundary** —
+``StreamService.submit`` and ``DPCEngine.fit/partial_fit/predict`` — and
+applies one configurable quarantine policy:
+
+* ``reject`` (default) — raise :class:`PoisonedInputError`; nothing enters.
+* ``drop``   — quarantine the offending rows, admit the rest.
+* ``clamp``  — repair in place: NaN -> 0, +-inf / out-of-range -> the
+  largest admissible magnitude (strictly below ``max_abs``).
+
+"Poisoned" means any of: non-numeric / complex / object dtype (never
+repairable — always rejected regardless of policy), non-finite
+coordinates after f32 cast, or coordinates with ``|x| >= max_abs``.  The
+default bound is the kernels' padding sentinel ``PAD_COORD`` (1e9): a real
+point at or beyond it is indistinguishable from an empty window slot, so
+it must never be admitted — while anything below stays valid (the serve
+tests probe with 9e8 coordinates on purpose).
+
+Every quarantined point counts on the obs registry
+(``resilience_quarantined_points{reason,policy,where}``).
+
+:func:`finite_or` is the shared jnp-traceable epilogue guard (generalizing
+the one-off non-finite cap that lived in ``serve/dpc_kv``): kernel
+epilogues that must cap ``inf``/NaN results (e.g. the global density
+peak's infinite delta before a gamma product) route through it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro import obs
+from repro.kernels.density import PAD_COORD
+
+__all__ = ["POLICIES", "AdmissionConfig", "AdmissionResult",
+           "PoisonedInputError", "admit", "finite_or"]
+
+POLICIES = ("reject", "drop", "clamp")
+
+_M_QUARANTINED = obs.counter(
+    "resilience_quarantined_points",
+    "points caught by admission control, labeled by reason/policy/boundary")
+
+
+class PoisonedInputError(ValueError):
+    """Malformed points hit a ``reject`` boundary (or are unrepairable)."""
+
+
+@dataclass(frozen=True)
+class AdmissionConfig:
+    """Quarantine policy for one admission boundary.
+
+    ``max_abs`` is the open coordinate bound: ``|x| >= max_abs`` is out of
+    range.  It defaults to the kernels' ``PAD_COORD`` sentinel — the first
+    magnitude a real point must never carry.
+    """
+
+    policy: str = "reject"
+    max_abs: float = float(PAD_COORD)
+
+    def __post_init__(self):
+        if self.policy not in POLICIES:
+            raise ValueError(f"unknown quarantine policy {self.policy!r}; "
+                             f"expected one of {POLICIES}")
+        if not self.max_abs > 0.0:
+            raise ValueError(f"max_abs must be positive, got {self.max_abs!r}")
+
+
+class AdmissionResult(NamedTuple):
+    points: np.ndarray      # admitted rows, f32, 2-D (clamped under 'clamp')
+    keep: np.ndarray        # (m,) bool over the INPUT rows; False = dropped
+    quarantined: int        # rows caught (dropped, clamped, or — reject — 0)
+
+
+def admit(points, cfg: AdmissionConfig, *,
+          where: str = "ingest") -> AdmissionResult:
+    """Validate ``points`` against ``cfg`` at boundary ``where``.
+
+    Returns the admitted (possibly repaired) rows plus the keep mask over
+    the input — callers that must stay row-aligned (predict) re-expand
+    with it.  ``reject`` raises on any poisoned row; non-numeric input
+    raises under every policy.
+    """
+    arr = np.asarray(points)
+    if (arr.dtype == object or arr.dtype.kind in "cSUVmM"):
+        _M_QUARANTINED.inc(max(arr.shape[0], 1) if arr.ndim else 1,
+                           reason="bad_dtype", policy=cfg.policy, where=where)
+        raise PoisonedInputError(
+            f"{where}: points have non-numeric dtype {arr.dtype!r}; no "
+            f"quarantine policy can repair that — submit a real-valued "
+            f"array")
+    pts = np.atleast_2d(np.asarray(arr, np.float32))
+    if pts.size == 0:
+        return AdmissionResult(pts, np.zeros(len(pts), bool), 0)
+    nonfinite = ~np.isfinite(pts)
+    oob = np.abs(pts) >= np.float32(cfg.max_abs)
+    bad = (nonfinite | oob).any(axis=1)
+    nbad = int(bad.sum())
+    if nbad == 0:
+        return AdmissionResult(pts, np.ones(len(pts), bool), 0)
+
+    n_nonfin = int(nonfinite.any(axis=1).sum())
+    if n_nonfin:
+        _M_QUARANTINED.inc(n_nonfin, reason="non_finite",
+                           policy=cfg.policy, where=where)
+    if nbad - n_nonfin:
+        _M_QUARANTINED.inc(nbad - n_nonfin, reason="out_of_range",
+                           policy=cfg.policy, where=where)
+
+    if cfg.policy == "reject":
+        first = int(np.nonzero(bad)[0][0])
+        raise PoisonedInputError(
+            f"{where}: {nbad}/{len(pts)} poisoned point(s) (non-finite or "
+            f"|x| >= {cfg.max_abs:g}); first bad row {first}: "
+            f"{pts[first].tolist()} — policy='reject' admits nothing "
+            f"(use 'drop' or 'clamp' to degrade instead)")
+    if cfg.policy == "drop":
+        return AdmissionResult(pts[~bad], ~bad, nbad)
+    # clamp: NaN -> 0, +-inf and out-of-range -> largest admissible value
+    limit = np.nextafter(np.float32(cfg.max_abs), np.float32(0.0))
+    fixed = np.nan_to_num(pts, nan=0.0, posinf=limit, neginf=-limit)
+    fixed = np.clip(fixed, -limit, limit)
+    return AdmissionResult(fixed, np.ones(len(pts), bool), nbad)
+
+
+def finite_or(x, fill):
+    """jnp-traceable non-finite guard: ``x`` where finite, ``fill``
+    elsewhere — the shared kernel-epilogue cap (inf deltas at global
+    density peaks, NaN distances from poisoned rows)."""
+    return jnp.where(jnp.isfinite(x), x, fill)

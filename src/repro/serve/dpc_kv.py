@@ -31,6 +31,7 @@ from repro.core.dpc_types import density_jitter, with_jitter
 from repro.engine.planner import as_plan
 from repro.engine.spec import ExecSpec, merge_legacy
 from repro.kernels.backend import get_backend
+from repro.resilience.sanitize import finite_or
 
 
 @dataclass(frozen=True)
@@ -144,7 +145,7 @@ def _compress_head(k_head, v_head, valid, cfg: DPCKVConfig):
         delta, parent = be.denser_nn(pts, rho_key, pts, rho_key,
                                      block=block, layout=layout)
     # global peak: delta = inf -> cap at the domain diameter for gamma
-    delta = jnp.where(jnp.isfinite(delta), delta, 2.0 * d_cut * 10.0)
+    delta = finite_or(delta, 2.0 * d_cut * 10.0)
     gamma = jnp.where(valid, rho * delta, -jnp.inf)
 
     # top-M gamma peaks are the kept centers

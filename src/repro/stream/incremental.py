@@ -168,6 +168,53 @@ class IncrementalGrid:
             jnp.asarray(ids_p), mode="drop")
         self.last_touched = np.concatenate([old_coords, new_coords])
 
+    # ----------------------------------------------------------- snapshot
+    def snapshot(self) -> dict:
+        """Cheap pre-tick state capture for transactional rollback.
+
+        Host arrays that ``apply`` mutates in place (``cell_count``,
+        ``seg_np``) are copied; everything ``apply``/``rebuild`` only
+        *reassigns* (``seg_dev``, the box arrays, ``last_touched``) is
+        captured by reference — the old object stays valid."""
+        if not self._built:
+            return {"built": False}
+        return {
+            "built": True,
+            "box_lo": self.box_lo, "box_extent": self.box_extent,
+            "strides": self.strides,
+            "key_to_id": dict(self.key_to_id),
+            "cell_count": self.cell_count.copy(),
+            "live_cells": self.live_cells,
+            "free_ids": list(self.free_ids),
+            "next_id": self.next_id,
+            "maxima_cap": self.maxima_cap,
+            "seg_np": self.seg_np.copy(),
+            "seg_dev": self.seg_dev,
+            "rebuilds": self.rebuilds,
+            "last_touched": self.last_touched,
+        }
+
+    def restore(self, snap: dict) -> None:
+        """Roll back to a :meth:`snapshot` (a failed tick's grid state may
+        be part-mutated — see ``apply``)."""
+        self._built = snap["built"]
+        if not self._built:
+            self.last_touched = None
+            return
+        self.box_lo = snap["box_lo"]
+        self.box_extent = snap["box_extent"]
+        self.strides = snap["strides"]
+        self.key_to_id = dict(snap["key_to_id"])
+        self.cell_count = snap["cell_count"].copy()
+        self.live_cells = snap["live_cells"]
+        self.free_ids = list(snap["free_ids"])
+        self.next_id = snap["next_id"]
+        self.maxima_cap = snap["maxima_cap"]
+        self.seg_np = snap["seg_np"].copy()
+        self.seg_dev = snap["seg_dev"]
+        self.rebuilds = snap["rebuilds"]
+        self.last_touched = snap["last_touched"]
+
     # --------------------------------------------------------------- dirty
     def dirty_near(self, coords: np.ndarray, radius_cells: int) -> np.ndarray:
         """(len(coords),) bool: within ``radius_cells`` (Chebyshev, grouping

@@ -32,6 +32,8 @@ import jax.numpy as jnp
 
 from repro import obs
 from repro.kernels.density import PAD_COORD
+from repro.resilience import faultinject
+from repro.resilience.sanitize import AdmissionConfig, admit
 
 from .stream_dpc import StreamDPC, StreamDPCConfig, StreamTick
 
@@ -50,6 +52,7 @@ class QueryStatus(enum.IntEnum):
     HIT = 0            # nearest window point within d_cut; its stable label
     MISS_FALLBACK = 1  # out of coverage; nearest current center's stable id
     MISS = 2           # out of coverage and no centers exist; label is -1
+    QUARANTINED = 3    # point failed admission (NaN/Inf/dropped); label -1
 
 
 class QueryResult(NamedTuple):
@@ -77,11 +80,17 @@ def nearest_label_query(backend, points, d_cut: float, ref_table,
     """
     points = np.atleast_2d(np.asarray(points, np.float32))
     m = len(points)
+    if m == 0 or points.shape[1] == 0:
+        return QueryResult(labels=np.zeros(0, np.int64),
+                           status=np.zeros(0, np.int8))
     with obs.span("serve.query", m=m) as sp:
+        # non-finite query rows would poison the kernel distances AND the
+        # fallback argmin — quarantine them (label -1) instead of guessing
+        finite = np.isfinite(points).all(axis=1)
         B = max(int(pad_multiple), 1)
         mp = -(-m // B) * B                   # fixed-shape request pad
         q = np.full((mp, points.shape[1]), PAD_COORD, np.float32)
-        q[:m] = points
+        q[:m] = np.where(finite[:, None], points, PAD_COORD)
         qk = np.full(mp, np.inf, np.float32)  # +inf key: padding inert
         qk[:m] = -np.inf                      # -inf key: plain NN
         wkey = jnp.zeros((ref_table.shape[0],), jnp.float32)
@@ -93,15 +102,16 @@ def nearest_label_query(backend, points, d_cut: float, ref_table,
         labels = np.full(m, -1, np.int64)
         status = np.full(m, int(QueryStatus.MISS), np.int8)
         ok = (np.isfinite(dist) & (dist < d_cut)
-              & (parent >= 0) & (parent < len(ref_labels)))
+              & (parent >= 0) & (parent < len(ref_labels)) & finite)
         labels[ok] = ref_labels[parent[ok]]
         status[ok] = int(QueryStatus.HIT)
-        miss = ~ok
+        miss = ~ok & finite
         if miss.any() and len(center_ids):
             d2 = ((points[miss][:, None, :].astype(np.float64)
                    - np.asarray(center_pos)[None]) ** 2).sum(-1)
             labels[miss] = np.asarray(center_ids)[np.argmin(d2, axis=1)]
             status[miss] = int(QueryStatus.MISS_FALLBACK)
+        status[~finite] = int(QueryStatus.QUARANTINED)
         _M_QUERY_CALLS.inc()
         for st in QueryStatus:
             cnt = int((status == int(st)).sum())
@@ -117,6 +127,8 @@ class StreamServeConfig:
 
     stream: StreamDPCConfig
     micro_batch: int = field(default=0)  # 0 -> stream.batch_cap
+    # write-path admission control (resilience.sanitize); None disables
+    admission: AdmissionConfig | None = AdmissionConfig()
 
     def resolved_micro_batch(self) -> int:
         return self.micro_batch or self.stream.batch_cap
@@ -132,8 +144,20 @@ class StreamService:
 
     # ------------------------------------------------------------- writes
     def submit(self, points: np.ndarray) -> list[StreamTick]:
-        """Buffer points; run one ingest tick per full micro-batch."""
-        points = np.atleast_2d(np.asarray(points, np.float32))
+        """Buffer points; run one ingest tick per full micro-batch.
+
+        Points pass admission control first (``cfg.admission``): poisoned
+        rows are rejected/dropped/clamped per policy before they can touch
+        the buffer.  An empty or fully-quarantined submit is a no-op —
+        it never contributes padded ghost ticks."""
+        faultinject.fire("service.submit")
+        if self.cfg.admission is not None:
+            points = admit(points, self.cfg.admission,
+                           where="service.submit").points
+        else:
+            points = np.atleast_2d(np.asarray(points, np.float32))
+        if points.size == 0:
+            return []
         self._buffer.append(points)
         self._buffered += len(points)
         self._submitted += len(points)

@@ -62,6 +62,7 @@ from repro.core.labels import Clustering, assign_labels
 from repro.engine.planner import plan
 from repro.engine.spec import ExecSpec, merge_legacy
 from repro.kernels.density import PAD_COORD
+from repro.resilience import faultinject
 
 from .incremental import CellOverflow, IncrementalGrid, make_sharded_repair, \
     repair_rho
@@ -107,6 +108,7 @@ class StreamDPCConfig:
     extent_margin: int = 4              # indexed-box margin, in cells
     continuity_radius: float | None = None  # center matching (default 2*d_cut)
     dirty_tracking: bool = True         # skip clean-cell maxima NN re-query
+    transactional: bool = True          # roll a failed tick back pre-tick
     exec_spec: ExecSpec | None = None   # the unified execution axes
     backend: str | None = None          # deprecated -> ExecSpec.backend
     data_axis: str = "data"             # deprecated -> ExecSpec.data_axis
@@ -220,8 +222,12 @@ class StreamDPC:
     # ------------------------------------------------------------- public
     def initialize(self, points: np.ndarray) -> StreamTick:
         """Bulk-load up to ``capacity`` points (one full recompute)."""
-        points = np.asarray(points, np.float32)
-        assert len(points) <= self.cfg.capacity, "initialize overfills window"
+        points = np.atleast_2d(np.asarray(points, np.float32))
+        if len(points) > self.cfg.capacity:
+            raise ValueError(
+                f"initialize got {len(points)} points for a capacity-"
+                f"{self.cfg.capacity} window; bulk-load at most capacity "
+                f"and stream the rest through ingest()")
         self._ensure_window(points.shape[1])
         w = self.window
         w.host[: len(points)] = points
@@ -231,18 +237,47 @@ class StreamDPC:
         return self._full_tick()
 
     def ingest(self, batch: np.ndarray) -> StreamTick:
-        """Micro-batch ingest; batches larger than ``batch_cap`` chunk."""
-        batch = np.atleast_2d(np.asarray(batch, np.float32))
+        """Micro-batch ingest; batches larger than ``batch_cap`` chunk.
+
+        Transactional (``cfg.transactional``, default on): an exception
+        inside a tick — kernel failure, grid corruption, injected fault —
+        rolls window/grid/rho back to the pre-tick snapshot before
+        re-raising, so a failed tick never leaves half-applied state and
+        the stream stays serviceable.  An empty batch is a no-op (returns
+        the last tick), never a padded ghost tick."""
+        batch = np.asarray(batch, np.float32)
+        if batch.size == 0:
+            return self._last
+        batch = np.atleast_2d(batch)
         self._ensure_window(batch.shape[1])
         tick = self._last
         while len(batch):
             chunk, batch = batch[: self.cfg.batch_cap], \
                 batch[self.cfg.batch_cap:]
-            if not self.window.full:
-                tick = self._warmup(chunk)
-            else:
-                tick = self._steady(chunk)
+            snap = self._snapshot() if self.cfg.transactional else None
+            try:
+                if not self.window.full:
+                    tick = self._warmup(chunk)
+                else:
+                    tick = self._steady(chunk)
+            except Exception:
+                if snap is not None:
+                    self._rollback(snap)
+                raise
         return tick
+
+    def save(self, path: str) -> None:
+        """Atomic, versioned checkpoint of the complete incremental state
+        (see :mod:`repro.resilience.checkpoint`)."""
+        from repro.resilience.checkpoint import save_stream
+        save_stream(self, path)
+
+    @classmethod
+    def restore(cls, path: str, mesh=None) -> "StreamDPC":
+        """Rebuild a stream from a checkpoint; post-restore ticks are
+        bit-identical to the uninterrupted run, on any device count."""
+        from repro.resilience.checkpoint import restore_stream
+        return restore_stream(path, mesh=mesh)
 
     def window_points(self) -> np.ndarray:
         """Window contents in slot order — run_approxdpc on this array is
@@ -284,6 +319,11 @@ class StreamDPC:
 
     # ------------------------------------------------------------ phases
     def _ensure_window(self, dim: int):
+        if self.window is not None and dim != self.window.dim:
+            raise ValueError(
+                f"batch dimensionality {dim} != window dimensionality "
+                f"{self.window.dim}; a stream's dimension is fixed at "
+                f"first ingest")
         if self.window is None:
             self.window = SlidingWindow(self.cfg.capacity, dim)
             self.grid = IncrementalGrid(
@@ -308,6 +348,53 @@ class StreamDPC:
             self._nn_delta_cache = np.full(cap, np.inf, np.float32)
             self._nn_parent_cache = np.full(cap, -1, np.int32)
             self._nn_valid = np.zeros(cap, bool)
+
+    # ------------------------------------------------------- transactions
+    def _snapshot(self) -> dict:
+        """Pre-tick state capture.  Host arrays mutated in place (window
+        host mirror, NN caches) are copied; device arrays are immutable
+        jnp values captured by reference — a snapshot costs O(capacity)
+        host memcpy, nothing on device."""
+        w = self.window
+        return {
+            "host": w.host.copy(), "device": w.device,
+            "count": w.count, "cursor": w.cursor, "wticks": w.ticks,
+            "grid": self.grid.snapshot(),
+            "rho": self._rho,
+            "nn_delta": self._nn_delta_cache.copy(),
+            "nn_parent": self._nn_parent_cache.copy(),
+            "nn_valid": self._nn_valid.copy(),
+            "registry": list(self._registry),
+            "next_stable": self._next_stable,
+            "ticks": self._ticks,
+            "full_recomputes": self._full_recomputes,
+            "nn_maxima_total": self._nn_maxima_total,
+            "nn_queries": self._nn_queries,
+            "result": self._result,
+            "clustering": self._clustering,
+            "last": self._last,
+        }
+
+    def _rollback(self, snap: dict) -> None:
+        w = self.window
+        w.host[:] = snap["host"]
+        w.device = snap["device"]
+        w.count, w.cursor, w.ticks = snap["count"], snap["cursor"], \
+            snap["wticks"]
+        self.grid.restore(snap["grid"])
+        self._rho = snap["rho"]
+        self._nn_delta_cache[:] = snap["nn_delta"]
+        self._nn_parent_cache[:] = snap["nn_parent"]
+        self._nn_valid[:] = snap["nn_valid"]
+        self._registry = list(snap["registry"])
+        self._next_stable = snap["next_stable"]
+        self._ticks = snap["ticks"]
+        self._full_recomputes = snap["full_recomputes"]
+        self._nn_maxima_total = snap["nn_maxima_total"]
+        self._nn_queries = snap["nn_queries"]
+        self._result = snap["result"]
+        self._clustering = snap["clustering"]
+        self._last = snap["last"]
 
     def _warmup(self, chunk: np.ndarray) -> StreamTick:
         """Below capacity: append and recompute from scratch (the density
@@ -355,6 +442,7 @@ class StreamDPC:
             padded[:r] = chunk
             slots, evicted, ev_valid = w.push(padded, r)
             rebuilt = False
+            faultinject.fire("tick.grid_apply")
             with obs.span("stream.grid_apply") as sp:
                 try:
                     self.grid.apply(slots, padded, evicted, r)
@@ -370,6 +458,7 @@ class StreamDPC:
             signs[B:][ev_valid] = -1.0
             repair = self._sharded if self._sharded is not None else partial(
                 repair_rho, self.be, cfg.d_cut)
+            faultinject.fire("tick.rho_repair")
             with obs.span("stream.rho_repair") as sp:
                 self._rho = sp.sync(repair(
                     w.device, self._rho, delta_batch, jnp.asarray(signs),
@@ -406,6 +495,7 @@ class StreamDPC:
         self._nn_queries += len(dq)
         _M_NN_MAXIMA.inc(len(q))
         _M_NN_QUERIES.inc(len(dq))
+        faultinject.fire("tick.nn_update")
 
         if len(dq):
             # pad the dirty set to a power of two (few shape buckets), not
@@ -439,6 +529,7 @@ class StreamDPC:
     # ------------------------------------------------- labels + continuity
     def _finish(self, res: DPCResult, *, rebuilt: bool,
                 full: bool) -> StreamTick:
+        faultinject.fire("tick.finish")
         cfg = self.cfg
         # warm-up ticks run below capacity; the sharded propagation is
         # shape-frozen at capacity, so they fall back to the replicated pass
