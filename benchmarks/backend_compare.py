@@ -249,7 +249,7 @@ def measure_acceptance(repeats: int = 3) -> dict:
 _DIST_SCRIPT = r"""
 import json, sys, time, warnings, os
 warnings.filterwarnings("ignore")
-os.environ["REPRO_ANALYSIS"] = "0"   # bench plans, not production fits
+os.environ["REPRO_ANALYSIS"] = "suspend"   # bench plans, not production fits
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map

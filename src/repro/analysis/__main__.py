@@ -23,7 +23,7 @@ def _pin_environment() -> None:
             (flags + " --xla_force_host_platform_device_count=4").strip()
 
 
-def main(argv=None) -> int:
+def main(argv: list[str] | None = None) -> int:
     parser = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="jaxpr-level static analysis sweep over every ExecSpec "
@@ -38,12 +38,26 @@ def main(argv=None) -> int:
     parser.add_argument("--obs-snapshot", default=None,
                         help="also write the repro.obs metrics/trace "
                              "snapshot accumulated during the sweep here")
+    parser.add_argument("--sarif", default=None,
+                        help="also write the report as SARIF 2.1.0 here "
+                             "(for code-host/IDE problem panes)")
+    parser.add_argument("--baseline", default=None,
+                        help="suppression file (default: "
+                             "analysis-baseline.json at the repo root); "
+                             "entries carry a reason and an expiry date")
     args = parser.parse_args(argv)
 
     _pin_environment()
     from .report import run_sweep
 
-    report = run_sweep(args.root)
+    report = run_sweep(args.root, baseline_path=args.baseline)
+    if args.sarif:
+        from .sarif import to_sarif
+
+        with open(args.sarif, "w", encoding="utf-8") as fh:
+            json.dump(to_sarif(report), fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"analysis: wrote SARIF to {args.sarif}", file=sys.stderr)
     if args.obs_snapshot:
         from repro.obs import report as obs_report
         obs_report.export_snapshot(args.obs_snapshot)
@@ -58,10 +72,14 @@ def main(argv=None) -> int:
             fh.write(text + "\n")
 
     errors = [f for f in report["findings"] if f["severity"] == "error"]
-    warns = [f for f in report["findings"] if f["severity"] != "error"]
+    suppressed = [f for f in report["findings"]
+                  if f["severity"] == "suppressed"]
+    warns = [f for f in report["findings"]
+             if f["severity"] not in ("error", "suppressed")]
     print(f"analysis: {len(report['targets'])} targets, "
           f"{len(report['skipped'])} skipped, {len(errors)} error(s), "
-          f"{len(warns)} warning(s)", file=sys.stderr)
+          f"{len(suppressed)} suppressed, {len(warns)} warning(s)",
+          file=sys.stderr)
     for f in errors:
         print(f"  [{f['rule']}] {f['target']} @ {f['where']}: "
               f"{f['message']}", file=sys.stderr)

@@ -26,6 +26,7 @@ unpin, a worklist rewrite to one-hot matmuls, ...).
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Any
 
 from .rules import Finding, Rule, register_rule
 from .walker import spmd_sort_tainted_slices
@@ -41,8 +42,8 @@ class SpmdGatherRule(Rule):
                         "body (jax-0.4.37 XLA CPU SPMD miscompiles it)")
     kind: str = "jaxpr"
 
-    def check_jaxpr(self, target, closed_jaxpr):
-        out = []
+    def check_jaxpr(self, target: str, closed_jaxpr: Any) -> list[Finding]:
+        out: list[Finding] = []
         for hit in spmd_sort_tainted_slices(closed_jaxpr):
             axes = ", ".join(f"{a}={s}" for a, s in hit.shard.axis_sizes)
             out.append(Finding(
@@ -59,7 +60,7 @@ class SpmdGatherRule(Rule):
 register_rule(SpmdGatherRule())
 
 
-def spmd_gather_safe(fn, *example_args) -> bool:
+def spmd_gather_safe(fn: Any, *example_args: Any) -> bool:
     """True iff tracing ``fn(*example_args)`` shows no R1 pattern.
 
     The guard ``distributed_dpc`` consults before running block-sparse

@@ -33,6 +33,7 @@ from __future__ import annotations
 import ast
 import os
 from dataclasses import dataclass
+from typing import Any
 
 from .rules import Finding, Rule, register_rule
 
@@ -76,7 +77,7 @@ def _scope_infos(tree: ast.Module) -> dict:
     """Map every FunctionDef/Module to its direct child defs + assigns."""
     parents: dict = {}
 
-    def visit(node, owner):
+    def visit(node: Any, owner: Any) -> None:
         for child in ast.iter_child_nodes(node):
             if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
                 parents.setdefault(owner, []).append(("def", child))
@@ -92,8 +93,8 @@ def _scope_infos(tree: ast.Module) -> dict:
     visit(tree, tree)
     infos: dict = {}
     for owner, items in parents.items():
-        defs = {}
-        assigns = []
+        defs: dict[str, ast.FunctionDef] = {}
+        assigns: list[tuple[int, str, Any]] = []
         for kind, payload in items:
             if kind == "def":
                 defs.setdefault(payload.name, payload)
@@ -114,7 +115,8 @@ def _factory_inner_def(factory: ast.FunctionDef) -> ast.FunctionDef | None:
     return None
 
 
-def _resolve_body(arg, scope_stack, infos, call_lineno):
+def _resolve_body(arg: Any, scope_stack: list, infos: dict,
+                  call_lineno: int) -> ast.FunctionDef | None:
     """Resolve a shard_map body expression to its FunctionDef, or None."""
     if not isinstance(arg, ast.Name):
         return None
@@ -150,7 +152,7 @@ def scan_module(path: str, rel: str) -> list[Finding]:
     infos = _scope_infos(tree)
     findings: list[Finding] = []
 
-    def visit(node, stack):
+    def visit(node: Any, stack: list) -> None:
         for child in ast.iter_child_nodes(node):
             new_stack = stack + [child] \
                 if isinstance(child, ast.FunctionDef) else stack
@@ -192,7 +194,7 @@ class CheckRepAuditRule(Rule):
                         "annotation")
     kind: str = "project"
 
-    def check_project(self, repo_root):
+    def check_project(self, repo_root: str) -> list[Finding]:
         src = os.path.join(repo_root, "src", "repro")
         skip = os.path.join(src, "analysis")
         findings: list[Finding] = []

@@ -20,27 +20,28 @@ descends into ``pallas_call`` jaxprs).
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Any
 
 from .rules import Finding, Rule, register_rule
 
 RULE_NAME = "R3-precision-flow"
 
 
-def _is_bf16(var) -> bool:
+def _is_bf16(var: Any) -> bool:
     aval = getattr(var, "aval", None)
     return str(getattr(aval, "dtype", "")) == "bfloat16"
 
 
-def _is_wide(var) -> bool:
+def _is_wide(var: Any) -> bool:
     """f32-or-wider: the refinement contract says *direct-diff in at least
     f32*; under x64 mode the same epilogue traces as f64."""
     aval = getattr(var, "aval", None)
     return str(getattr(aval, "dtype", "")) in ("float32", "float64")
 
 
-def _jaxpr_has_refinement(jaxpr) -> bool:
+def _jaxpr_has_refinement(jaxpr: Any) -> bool:
     """One jaxpr level: sub -> square -> reduce_sum in f32-or-wider?"""
-    producer = {}
+    producer: dict[Any, Any] = {}
     for eqn in jaxpr.eqns:
         for v in eqn.outvars:
             producer[v] = eqn
@@ -71,14 +72,14 @@ class PrecisionFlowRule(Rule):
                         "reduce_sum) before winners are consumed")
     kind: str = "jaxpr"
 
-    def check_jaxpr(self, target, closed_jaxpr):
+    def check_jaxpr(self, target: str, closed_jaxpr: Any) -> list[Finding]:
         from .walker import iter_sites, sub_jaxprs, unwrap
 
         bf16_dot = None
         refined = False
-        seen_jaxprs = []
+        seen_jaxprs: list[Any] = []
 
-        def collect(jaxpr):
+        def collect(jaxpr: Any) -> None:
             seen_jaxprs.append(unwrap(jaxpr))
             for eqn in unwrap(jaxpr).eqns:
                 for _k, sub in sub_jaxprs(eqn):

@@ -25,16 +25,14 @@ with ``block_shape`` / ``array_shape_dtype`` / SMEM-typed
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Any
 
 from .rules import Finding, Rule, register_rule
 
 RULE_NAME = "R4-pallas-legality"
 
-# scalar-prefetch operands live in SMEM: tiny index/threshold tables only
-_SMEM_MAX_ELEMS = 1 << 20
 
-
-def _check_pallas_eqn(target, site) -> list:
+def _check_pallas_eqn(target: str, site: Any) -> list[Finding]:
     eqn = site.eqn
     gm = eqn.params.get("grid_mapping")
     out: list[Finding] = []
@@ -42,7 +40,7 @@ def _check_pallas_eqn(target, site) -> list:
     name_info = eqn.params.get("name_and_src_info")
     kernel = str(name_info) if name_info is not None else "<kernel>"
 
-    def finding(msg):
+    def finding(msg: str) -> None:
         out.append(Finding(rule=RULE_NAME, severity="error", target=target,
                            message=f"{kernel}: {msg}", where=where))
 
@@ -80,6 +78,9 @@ def _check_pallas_eqn(target, site) -> list:
 
     n_idx = int(getattr(gm, "num_index_operands", 0) or 0)
     if n_idx:
+        from . import limits
+
+        smem_budget = limits.limits_for_eqn(eqn).smem_bytes
         avals = tuple(getattr(gm, "index_map_avals", ()) or ())
         # index_map avals = grid indices followed by the prefetch refs
         prefetch = avals[len(avals) - n_idx:]
@@ -89,14 +90,21 @@ def _check_pallas_eqn(target, site) -> list:
                 finding(f"scalar-prefetch operand {aval} is not an SMEM "
                         f"reference — worklist meta tables must prefetch "
                         f"into SMEM, not ride the block mappings")
+            inner = getattr(aval, "inner_aval", None)
+            shape = tuple(getattr(aval, "shape", ()) or
+                          getattr(inner, "shape", ()) or ())
+            dtype = getattr(aval, "dtype", None) or \
+                getattr(inner, "dtype", None)
             size = 1
-            for s in tuple(getattr(aval, "shape", ()) or
-                           getattr(getattr(aval, "inner_aval", None),
-                                   "shape", ()) or ()):
+            for s in shape:
                 size *= int(s)
-            if size > _SMEM_MAX_ELEMS:
-                finding(f"scalar-prefetch operand {aval} has {size} "
-                        f"elements — too large for SMEM residency")
+            nbytes = size * int(getattr(dtype, "itemsize", 4) or 4)
+            if nbytes > smem_budget:
+                finding(f"scalar-prefetch operand {aval} is {nbytes} "
+                        f"bytes — over the "
+                        f"{limits.limits_for_eqn(eqn).platform} SMEM "
+                        f"budget of {smem_budget} bytes (shared table "
+                        f"with R9; REPRO_LIMIT_SMEM_BYTES overrides)")
     return out
 
 
@@ -108,7 +116,7 @@ class PallasLegalityRule(Rule):
                         "refs, grids are host-static")
     kind: str = "jaxpr"
 
-    def check_jaxpr(self, target, closed_jaxpr):
+    def check_jaxpr(self, target: str, closed_jaxpr: Any) -> list[Finding]:
         from .walker import iter_sites
 
         out: list[Finding] = []

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import os
 from dataclasses import dataclass
+from typing import Any
 
 from .rules import Finding, Rule, register_rule
 
@@ -39,13 +40,14 @@ KNOWN_LAYOUTS = ("dense", "block-sparse")
 KNOWN_PRECISIONS = ("f32", "bf16")
 
 
-def _expected_spec_valid(backend, layout, precision) -> bool:
+def _expected_spec_valid(backend: str, layout: str,
+                         precision: str) -> bool:
     """ExecSpec construction-time validity (backend-explicit combos)."""
     del layout
     return not (precision == "bf16" and backend == "jnp")
 
 
-def _expected_plan_valid(be, precision) -> bool:
+def _expected_plan_valid(be: Any, precision: str) -> bool:
     """plan()-time validity for a resolved backend instance."""
     return precision != "bf16" or be.mxu_dense
 
@@ -58,14 +60,14 @@ class SpecCoverageRule(Rule):
                         "for exhaustiveness")
     kind: str = "project"
 
-    def check_project(self, repo_root):
+    def check_project(self, repo_root: str) -> list[Finding]:
         from repro.engine.planner import plan
         from repro.engine.spec import ExecSpec, LAYOUTS, PRECISIONS
         from repro.kernels.backend import available_backends, get_backend
 
         out: list[Finding] = []
 
-        def finding(msg, where=""):
+        def finding(msg: str, where: str = "") -> None:
             out.append(Finding(rule=RULE_NAME, severity="error",
                                target="spec-coverage", message=msg,
                                where=where))
@@ -86,8 +88,10 @@ class SpecCoverageRule(Rule):
         # Plan-time jaxpr analysis is suspended for these probe plans:
         # AnalysisError subclasses ValueError and would read as validity
         # drift here, and the sweep already analyzes every combo's traces.
+        # ("suspend", not "0": the 0/off escape hatch now still computes
+        # findings for telemetry — probe plans must skip entirely.)
         prev = os.environ.get("REPRO_ANALYSIS")
-        os.environ["REPRO_ANALYSIS"] = "0"
+        os.environ["REPRO_ANALYSIS"] = "suspend"
         try:
             self._check_table(plan, ExecSpec, get_backend, finding)
         finally:
@@ -113,7 +117,8 @@ class SpecCoverageRule(Rule):
         return out
 
     @staticmethod
-    def _check_table(plan, ExecSpec, get_backend, finding):
+    def _check_table(plan: Any, ExecSpec: Any, get_backend: Any,
+                     finding: Any) -> None:
         for backend in KNOWN_BACKENDS:
             for layout in KNOWN_LAYOUTS:
                 for precision in KNOWN_PRECISIONS:

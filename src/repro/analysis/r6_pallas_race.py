@@ -1,0 +1,126 @@
+"""R6 pallas-race: output blocks are visited once or merged associatively.
+
+The worklist-driven sweep *deliberately* revisits output row tiles — many
+worklist entries share a row tile, and ``gather_nn``'s doubled column grid
+revisits every output block ``2 * nbc`` times.  That is only sound because
+every revisit-path write is either an associative accumulate/merge of the
+block's old value (``+`` / min / max / the kept-k lexicographic merge) or a
+first-visit init under a grid/prefetch-pure guard.  A plain overwrite on a
+revisited block is a lost update: the last worklist entry wins and every
+earlier tile's contribution silently disappears — exactly what mutating
+``kernels/sweep.py``'s ``_merge_topk`` into a passthrough would ship.
+
+Per ``pallas_call``:
+
+* every *output* block mapping's index map is evaluated over the symbolic
+  grid (``absint.eval_index_map`` + ``visit_verdict``); blocks proved to be
+  visited ``once`` need no write discipline;
+* for ``revisit`` / ``data`` / ``unknown`` outputs, every kernel-body write
+  to that output ref must classify as ``rmw-clean`` (associative merge of
+  the old value) or ``overwrite-guarded`` (init under a pure guard):
+  ``rmw-dirty`` and plain ``overwrite`` are findings;
+* ``input_output_aliases`` entries whose aliased input is read anywhere in
+  the body are read-write aliasing findings (the read races the output
+  pipeline's writes to the shared buffer).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+from .rules import Finding, Rule, register_rule
+
+RULE_NAME = "R6-pallas-race"
+
+_UNSAFE_KINDS = ("rmw-dirty", "overwrite")
+
+
+def _check_pallas_eqn(target: str, site: Any) -> list[Finding]:
+    from . import absint
+
+    eqn = site.eqn
+    gm = eqn.params.get("grid_mapping")
+    body = eqn.params.get("jaxpr")
+    out: list[Finding] = []
+    where = site.where + "/pallas_call"
+    name_info = eqn.params.get("name_and_src_info")
+    kernel = str(name_info) if name_info is not None else "<kernel>"
+
+    def finding(msg: str) -> None:
+        out.append(Finding(rule=RULE_NAME, severity="error", target=target,
+                           message=f"{kernel}: {msg}", where=where))
+
+    if gm is None or body is None:
+        finding("pallas_call eqn carries no grid_mapping/jaxpr params "
+                "(jax version drift? — re-probe the eqn layout)")
+        return out
+
+    grid = tuple(getattr(gm, "grid", ()) or ())
+    n_pf = int(getattr(gm, "num_index_operands", 0) or 0)
+    n_in = int(getattr(gm, "num_inputs", 0) or 0)
+    n_out = int(getattr(gm, "num_outputs", 0) or 0)
+    bms = tuple(getattr(gm, "block_mappings", ()) or ())
+    out_bms = [bm for bm in bms
+               if str(getattr(bm, "origin", "")).startswith("output")]
+    if len(out_bms) != n_out:           # origin format drift: positional
+        out_bms = list(bms[n_in:n_in + n_out])
+
+    writes, reads = absint.classify_kernel_writes(body, n_pf, n_in, n_out)
+
+    for k, bm in enumerate(out_bms):
+        imj = getattr(bm, "index_map_jaxpr", None)
+        if imj is None:
+            finding(f"output {k}: block mapping carries no index_map_jaxpr")
+            continue
+        dims = absint.eval_index_map(imj, len(grid))
+        verdict = absint.visit_verdict(dims, grid)
+        if verdict == "once":
+            continue
+        bad = [w for w in writes
+               if w.slot in (k, -1) and w.kind in _UNSAFE_KINDS]
+        for w in bad:
+            how = ("old value crosses non-associative ops before the "
+                   "write-back" if w.kind == "rmw-dirty" else
+                   "plain overwrite (no merge of the block's prior value, "
+                   "no pure first-visit guard)")
+            finding(f"output {k} blocks are revisited across the grid "
+                    f"(visit verdict: {verdict}) but the write at "
+                    f"{w.path} is a {w.kind}: {how} — a revisited block "
+                    f"loses every earlier tile's contribution")
+
+    aliases = tuple(eqn.params.get("input_output_aliases") or ())
+    for pair in aliases:
+        try:
+            i_in, i_out = int(pair[0]), int(pair[1])
+        except (TypeError, ValueError, IndexError):
+            continue
+        # alias indices count the call's flattened operands (scalar
+        # prefetch included); probe both interpretations of the input slot
+        cand = {("input", i_in), ("input", i_in - n_pf)}
+        if cand & reads:
+            finding(f"input {i_in} is aliased onto output {i_out} and read "
+                    f"inside the kernel body — read-write aliasing: the "
+                    f"read races the output pipeline's writes to the "
+                    f"shared buffer")
+    return out
+
+
+@dataclass(frozen=True)
+class PallasRaceRule(Rule):
+    name: str = RULE_NAME
+    description: str = ("pallas_call output blocks are visited once or only "
+                        "updated through associative accumulates; aliased "
+                        "inputs are never read")
+    kind: str = "jaxpr"
+
+    def check_jaxpr(self, target: str, closed_jaxpr: Any) -> list[Finding]:
+        from .walker import iter_sites
+
+        out: list[Finding] = []
+        for site in iter_sites(closed_jaxpr):
+            if site.eqn.primitive.name == "pallas_call":
+                out.extend(_check_pallas_eqn(target, site))
+        return out
+
+
+register_rule(PallasRaceRule())

@@ -1,0 +1,127 @@
+"""R9 memory-budget: kernels fit their memory hierarchy, provably, at plan
+time.
+
+Two estimators from :mod:`repro.analysis.absint` feed one gate:
+
+* per ``pallas_call``: peak VMEM from the block shapes (every non-SMEM
+  block double-buffered by the Mosaic pipeline, so 2x per mapping, plus
+  scratch) and SMEM from scalar-prefetch operands + SMEM-space blocks /
+  scratch;
+* per dense trace: a live-buffer upper bound over the jaxpr (last-use
+  liveness; the XLA fusion floor, not a promise of what the compiler
+  allocates — useful as a regression tripwire, not an exact number).
+
+Budgets come from :mod:`repro.analysis.limits` — per-platform rows shared
+with R4's scalar-prefetch check, overridable via ``REPRO_LIMIT_*``
+environment knobs.  A kernel over budget is an **error** (it would OOM or
+spill on the real device long after ``plan()`` succeeded); the live-buffer
+gate only arms when ``REPRO_LIMIT_LIVE_BYTES`` is set (dense peaks scale
+with the caller's ``n``, so a hard default would fail legitimate fits).
+
+:func:`plan_memory` reuses the same estimators to build the ``memory``
+block ``DPCPlan.telemetry()`` reports.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+from .rules import Finding, Rule, register_rule
+
+RULE_NAME = "R9-memory-budget"
+
+
+def _fmt(n: int) -> str:
+    return f"{n} B ({n / (1 << 20):.2f} MiB)"
+
+
+@dataclass(frozen=True)
+class MemoryBudgetRule(Rule):
+    name: str = RULE_NAME
+    description: str = ("per-pallas_call VMEM/SMEM estimates (block shapes "
+                        "+ scalar prefetch, double-buffered) and dense "
+                        "live-buffer peaks stay under the per-platform "
+                        "budget table")
+    kind: str = "jaxpr"
+
+    def check_jaxpr(self, target: str, closed_jaxpr: Any) -> list[Finding]:
+        from . import absint, limits
+        from .walker import iter_sites
+
+        out: list[Finding] = []
+        for site in iter_sites(closed_jaxpr):
+            eqn = site.eqn
+            if eqn.primitive.name != "pallas_call":
+                continue
+            est = absint.pallas_memory(eqn)
+            lims = limits.limits_for_eqn(eqn)
+            where = site.where + "/pallas_call"
+            for kind_key, budget in (("vmem_bytes", lims.vmem_bytes),
+                                     ("smem_bytes", lims.smem_bytes)):
+                used = int(est.get(kind_key, 0))
+                if used <= budget:
+                    continue
+                space = kind_key.split("_", 1)[0].upper()
+                out.append(Finding(
+                    rule=RULE_NAME, severity="error", target=target,
+                    message=(f"{est.get('kernel', '<kernel>')}: estimated "
+                             f"{space} {_fmt(used)} exceeds the "
+                             f"{lims.platform} budget {_fmt(budget)} "
+                             f"(block shapes double-buffered + scratch; "
+                             f"shrink the block spec or raise "
+                             f"REPRO_LIMIT_{space}_BYTES deliberately)"),
+                    where=where))
+
+        live_budget = limits.live_budget_bytes()
+        if live_budget is not None:
+            from . import absint as _ai
+
+            peak = int(_ai.live_buffer_peak(closed_jaxpr))
+            if peak > live_budget:
+                out.append(Finding(
+                    rule=RULE_NAME, severity="error", target=target,
+                    message=(f"dense live-buffer peak {_fmt(peak)} exceeds "
+                             f"REPRO_LIMIT_LIVE_BYTES "
+                             f"{_fmt(live_budget)}"),
+                    where="<live-buffers>"))
+        return out
+
+
+def plan_memory(pl: Any) -> dict:
+    """The ``memory`` telemetry block for one plan: per-kernel VMEM/SMEM
+    estimates, the dense live-buffer peak across the plan's canonical
+    traces, and the budgets they were gated against."""
+    from repro.kernels import blocksparse
+    from repro.resilience import faultinject
+
+    from . import absint, limits
+    from .targets import plan_targets
+    from .walker import iter_sites
+
+    kernels: list[dict] = []
+    live_peak = 0
+    platform = None
+    with faultinject.suspended(), blocksparse.suspend_counters():
+        for name, thunk in plan_targets(pl):
+            try:
+                closed = thunk()
+            except Exception:   # noqa: BLE001 — telemetry is best-effort
+                continue
+            live_peak = max(live_peak, int(absint.live_buffer_peak(closed)))
+            for site in iter_sites(closed):
+                if site.eqn.primitive.name != "pallas_call":
+                    continue
+                est = absint.pallas_memory(site.eqn)
+                lims = limits.limits_for_eqn(site.eqn)
+                platform = platform or lims.platform
+                kernels.append({"target": name, **est})
+    lims = limits.limits_for_platform(platform)
+    return {
+        "kernels": kernels,
+        "live_peak_bytes": live_peak,
+        "live_budget_bytes": limits.live_budget_bytes(),
+        "limits": lims.to_dict(),
+    }
+
+
+register_rule(MemoryBudgetRule())

@@ -1,11 +1,15 @@
 """Rule base + registry for the jaxpr static analyzer.
 
-Two rule kinds share one :class:`Finding` vocabulary:
+Three rule kinds share one :class:`Finding` vocabulary:
 
 * **jaxpr rules** (``kind = "jaxpr"``) check one traced computation at a
   time — they run at plan time (``repro.engine.planner.plan``) on each
   plan's canonical traces, and in the CLI sweep on every target the
   subsystems expose.
+* **plan rules** (``kind = "plan"``) check a resolved :class:`DPCPlan`
+  itself — properties that live *between* traces, like R7's retrace-churn
+  probe (the same plan called with different but equivalent ``d_cut``
+  spellings must produce identical jit-boundary avals).
 * **project rules** (``kind = "project"``) check the source tree or the
   spec/dispatch tables once per sweep (R2's audit scan, R5's coverage
   cross-check); they have no single jaxpr to anchor to.
@@ -19,6 +23,7 @@ backend.  Rule implementations that need jaxpr machinery import
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Any, Iterable
 
 
 @dataclass(frozen=True)
@@ -45,12 +50,13 @@ class Finding:
 class AnalysisError(ValueError):
     """Raised by plan-time analysis when error-severity findings exist."""
 
-    def __init__(self, findings):
+    def __init__(self, findings: Iterable[Finding]) -> None:
         self.findings = tuple(findings)
         lines = [f"static analysis found {len(self.findings)} problem(s):"]
         lines += [f"  [{f.rule}] {f.target} @ {f.where}: {f.message}"
                   for f in self.findings]
-        lines.append("  (set REPRO_ANALYSIS=0 to bypass while debugging)")
+        lines.append("  (set REPRO_ANALYSIS=0 to bypass while debugging — "
+                     "findings still land on analysis_findings_total)")
         super().__init__("\n".join(lines))
 
 
@@ -60,9 +66,12 @@ class Rule:
 
     name: str = ""
     description: str = ""
-    kind: str = "jaxpr"        # "jaxpr" | "project"
+    kind: str = "jaxpr"        # "jaxpr" | "plan" | "project"
 
-    def check_jaxpr(self, target: str, closed_jaxpr) -> list[Finding]:
+    def check_jaxpr(self, target: str, closed_jaxpr: Any) -> list[Finding]:
+        return []
+
+    def check_plan(self, pl: Any) -> list[Finding]:
         return []
 
     def check_project(self, repo_root: str) -> list[Finding]:
@@ -85,6 +94,8 @@ def _load() -> None:
         return
     from . import r1_spmd_gather, r2_check_rep, r3_precision  # noqa: F401
     from . import r4_pallas, r5_coverage                       # noqa: F401
+    from . import r6_pallas_race, r7_transfer_retrace          # noqa: F401
+    from . import r8_determinism, r9_memory_budget             # noqa: F401
     _LOADED = True
 
 
@@ -97,11 +108,15 @@ def jaxpr_rules() -> tuple[Rule, ...]:
     return tuple(r for r in all_rules() if r.kind == "jaxpr")
 
 
+def plan_rules() -> tuple[Rule, ...]:
+    return tuple(r for r in all_rules() if r.kind == "plan")
+
+
 def project_rules() -> tuple[Rule, ...]:
     return tuple(r for r in all_rules() if r.kind == "project")
 
 
-def analyze_jaxpr(target: str, closed_jaxpr,
+def analyze_jaxpr(target: str, closed_jaxpr: Any,
                   rules: tuple[Rule, ...] | None = None) -> list[Finding]:
     """Run every (or the given) jaxpr rule over one traced computation."""
     out: list[Finding] = []

@@ -26,6 +26,7 @@ defect — R5 checks that table separately.
 from __future__ import annotations
 
 import numpy as np
+from typing import Any
 
 from .rules import Finding, analyze_jaxpr
 
@@ -51,7 +52,7 @@ def _trace_failure(target: str, exc: Exception) -> Finding:
 
 
 # --------------------------------------------------------- batch (plan time)
-def plan_targets(pl) -> list:
+def plan_targets(pl: Any) -> list:
     """``(name, thunk)`` pairs tracing the plan's driver-facing primitives.
 
     ``fused_traceable`` backends trace ``plan.rho_delta`` / ``plan.denser_nn``
@@ -72,7 +73,7 @@ def plan_targets(pl) -> list:
     jitter = density_jitter(N_POINTS)
     rk = jnp.arange(N_POINTS, dtype=jnp.float32)   # all-distinct NN keys
     be = pl.backend
-    targets = []
+    targets: list[tuple[str, Any]] = []
 
     if be.fused_traceable:
         targets.append((
@@ -101,14 +102,14 @@ def plan_targets(pl) -> list:
             x_np, x_np, None, block_n=nn_bn, block_m=256, count=False,
             nn="best1")
 
-    def fused(a, b, jit_):
+    def fused(a: Any, b: Any, jit_: Any) -> Any:
         cnt, topv, topi = ops.fused_sweep(
             a, b, D_CUT, precision=pl.precision, block_n=bn,
             interpret=interpret, worklist=wl)
         rho_key = cnt + jit_
         return _fused_resolve(a, b, rho_key, rho_key, topv, topi)
 
-    def masked_nn(a, ak, b, bk):
+    def masked_nn(a: Any, ak: Any, b: Any, bk: Any) -> Any:
         return ops.dependent_masked(a, ak, b, bk, block_n=nn_bn,
                                     interpret=interpret, worklist=nn_wl)
 
@@ -119,23 +120,36 @@ def plan_targets(pl) -> list:
     return targets
 
 
-def analyze_plan(pl) -> list:
-    """Run every jaxpr rule over the plan's canonical traces."""
+def analyze_plan(pl: Any) -> list:
+    """Run every jaxpr rule over the plan's canonical traces, then every
+    plan rule over the plan itself.  Tracing is side-effect-neutral: an
+    armed chaos fault neither fires in here nor has its hit budget spent
+    by probe traffic (``faultinject.suspended``)."""
+    from repro.resilience import faultinject
+
+    from .rules import plan_rules
+
     label = f"plan[{pl.backend_name}:{pl.layout}:{pl.precision}]"
-    findings: list = []
-    for name, thunk in plan_targets(pl):
-        target = f"{label}:{name}"
-        try:
-            closed = thunk()
-        except Exception as exc:          # noqa: BLE001 — report, don't die
-            findings.append(_trace_failure(target, exc))
-            continue
-        findings.extend(analyze_jaxpr(target, closed))
+    findings: list[Finding] = []
+    with faultinject.suspended():
+        for name, thunk in plan_targets(pl):
+            target = f"{label}:{name}"
+            try:
+                closed = thunk()
+            except Exception as exc:      # noqa: BLE001 — report, don't die
+                findings.append(_trace_failure(target, exc))
+                continue
+            findings.extend(analyze_jaxpr(target, closed))
+        for rule in plan_rules():
+            try:
+                findings.extend(rule.check_plan(pl))
+            except Exception as exc:      # noqa: BLE001 — report, don't die
+                findings.append(_trace_failure(f"{label}:{rule.name}", exc))
     return findings
 
 
 # ------------------------------------------------------- sweep-only targets
-def distributed_targets(pl) -> tuple[list, list]:
+def distributed_targets(pl: Any) -> tuple[list, list]:
     """The distributed phase shard_maps this plan dispatches, traced on a
     flat mesh over every visible device.  Returns (targets, skip_reasons).
 
@@ -173,9 +187,10 @@ def distributed_targets(pl) -> tuple[list, list]:
 
     shard_layout = ddpc.shard_blocksparse_layout(pl, mesh)
     dense = be.mxu_dense or shard_layout == "block-sparse"
-    targets = []
+    targets: list[tuple[str, Any]] = []
 
-    def add(name, fn, in_specs, out_specs, args, check_rep=True):
+    def add(name: str, fn: Any, in_specs: Any, out_specs: Any,
+            args: Any, check_rep: bool = True) -> None:
         sm = shard_map(fn, mesh=mesh, in_specs=in_specs,
                        out_specs=out_specs, check_rep=check_rep)
         targets.append((name, lambda sm=sm, args=args:
@@ -218,7 +233,7 @@ def distributed_targets(pl) -> tuple[list, list]:
     return targets, []
 
 
-def stream_targets(pl) -> tuple[list, list]:
+def stream_targets(pl: Any) -> tuple[list, list]:
     """Every sharded stage of the stream repair tail, traced over every
     visible device: rho repair, dirty-maxima NN re-query (at the plan's
     probe-resolved layout), label propagation and the center-continuity
@@ -276,7 +291,7 @@ def stream_targets(pl) -> tuple[list, list]:
     return targets, []
 
 
-def serve_targets(spec) -> tuple[list, list]:
+def serve_targets(spec: Any) -> tuple[list, list]:
     """DPC-KV per-head compression (fully traced serve path) for a spec."""
     import jax
     import jax.numpy as jnp

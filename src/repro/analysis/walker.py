@@ -37,12 +37,12 @@ Jaxpr = jcore.Jaxpr
 ClosedJaxpr = jcore.ClosedJaxpr
 
 
-def unwrap(j):
+def unwrap(j: Any) -> Any:
     """ClosedJaxpr | Jaxpr -> Jaxpr."""
     return j.jaxpr if isinstance(j, ClosedJaxpr) else j
 
 
-def sub_jaxprs(eqn) -> Iterator[tuple[str, Jaxpr]]:
+def sub_jaxprs(eqn: Any) -> Iterator[tuple[str, Jaxpr]]:
     """Every sub-jaxpr a primitive's params carry (pjit/while/scan/cond
     bodies, shard_map bodies, pallas kernels), with its param name."""
     for key, val in eqn.params.items():
@@ -66,7 +66,7 @@ class ShardCtx:
         return any(s > 1 for _, s in self.axis_sizes)
 
 
-def shard_ctx_of(eqn) -> ShardCtx:
+def shard_ctx_of(eqn: Any) -> ShardCtx:
     """Build the ShardCtx for a shard_map eqn (defensive over param shape)."""
     mesh = eqn.params.get("mesh")
     names: set = set()
@@ -76,7 +76,7 @@ def shard_ctx_of(eqn) -> ShardCtx:
             for axes in spec.values():
                 names.update(axes if isinstance(axes, (tuple, list))
                              else (axes,))
-    sizes = []
+    sizes: list[tuple[str, int]] = []
     shape = getattr(mesh, "shape", None)
     if shape:
         for ax, sz in dict(shape).items():
@@ -99,7 +99,7 @@ class Site:
         return "/".join(self.path) or "<top>"
 
 
-def iter_sites(jaxpr, path: tuple[str, ...] = (),
+def iter_sites(jaxpr: Any, path: tuple[str, ...] = (),
                shard: ShardCtx | None = None) -> Iterator[Site]:
     """Recursively yield every eqn in the program as a :class:`Site`.
 
@@ -142,7 +142,9 @@ class TaintHit:
         return "/".join(self.path) or "<top>"
 
 
-def spmd_sort_tainted_slices(closed_jaxpr) -> list[TaintHit]:
+def spmd_sort_tainted_slices(closed_jaxpr: Any, *,
+                             require_multi_partition: bool = True
+                             ) -> list[TaintHit]:
     """All R1 pattern instances in a traced computation.
 
     Taint = "derives from a ``sort`` output computed in traced code"
@@ -150,21 +152,29 @@ def spmd_sort_tainted_slices(closed_jaxpr) -> list[TaintHit]:
     carries reach a fixpoint through while/scan).  A hit is a ``gather`` /
     ``dynamic_slice`` whose *index* operands carry taint while inside a
     shard_map body mapped over an axis of size > 1.
+
+    ``require_multi_partition=False`` reports hits inside *any* shard_map
+    body regardless of mapped axis sizes — the property tests exercise the
+    taint engine on single-device runtimes where no multi-partition mesh
+    exists; R1 itself always uses the default.
     """
     hits: list[TaintHit] = []
 
-    def sub_run(inner, in_t, path, shard, report, eqn):
+    def sub_run(inner: Any, in_t: list[bool], path: tuple[str, ...],
+                shard: ShardCtx | None, report: bool,
+                eqn: Any) -> list[bool]:
         """Recurse into a call-like sub-jaxpr; conservative on mismatch."""
         j = unwrap(inner)
         if len(j.invars) != len(in_t):
             return [any(in_t)] * len(eqn.outvars)
         return run(j, in_t, path, shard, report)
 
-    def run(jaxpr, in_taint, path, shard, report):
+    def run(jaxpr: Any, in_taint: list[bool], path: tuple[str, ...],
+            shard: ShardCtx | None, report: bool) -> list[bool]:
         jaxpr = unwrap(jaxpr)
-        env: dict = {}
+        env: dict[Any, bool] = {}
 
-        def get(v) -> bool:
+        def get(v: Any) -> bool:
             if isinstance(v, jcore.Literal):
                 return False
             return env.get(v, False)
@@ -176,7 +186,8 @@ def spmd_sort_tainted_slices(closed_jaxpr) -> list[TaintHit]:
             name = eqn.primitive.name
             in_t = [get(v) for v in eqn.invars]
 
-            if report and shard is not None and shard.multi_partition:
+            if report and shard is not None and \
+                    (shard.multi_partition or not require_multi_partition):
                 pick = _INDEX_OPERANDS.get(name)
                 if pick is not None and any(get(v) for v in pick(eqn)):
                     hits.append(TaintHit(primitive=name, path=path,

@@ -112,6 +112,7 @@ class DPCPlan:
             self.worklist_strategy = "host"
         self._wl: OrderedDict = OrderedDict()   # host-worklist LRU
         self._cost: dict | None = None          # hlo_cost estimate (lazy)
+        self._memory: dict | None = None        # R9 memory block (lazy)
 
     def _native_block(self) -> int:
         if self.backend.mxu_dense:
@@ -145,6 +146,13 @@ class DPCPlan:
         free), and host-worklist plans are costed on the dense formulation
         — an upper bound — because flat worklists cannot be built during an
         abstract trace.
+
+        The ``memory`` block carries the R9 estimates the plan was gated
+        against: per-``pallas_call`` VMEM/SMEM (block shapes
+        double-buffered + scalar prefetch + scratch), the dense
+        live-buffer peak over the canonical traces, and the platform
+        budget table (``repro.analysis.limits``).  Computed once per plan
+        and cached (it traces the canonical targets).
         """
         t: dict = {
             "backend": self.backend_name,
@@ -158,6 +166,7 @@ class DPCPlan:
             else {"n": self.pspec.n, "d": self.pspec.d},
             "pad": self._pad_telemetry(),
             "worklists": self._worklist_telemetry(),
+            "memory": self._memory_estimate(),
         }
         if include_cost:
             t["hlo_cost"] = self._cost_estimate()
@@ -185,6 +194,16 @@ class DPCPlan:
                  "pruned_frac": round(w.pruned_frac, 6)}
                 for w in self._wl.values()]
         return out
+
+    def _memory_estimate(self) -> dict:
+        if self._memory is None:
+            from repro.analysis.r9_memory_budget import plan_memory
+
+            try:
+                self._memory = plan_memory(self)
+            except Exception as e:   # noqa: BLE001 — telemetry, not a gate
+                self._memory = {"error": f"{type(e).__name__}: {e}"}
+        return self._memory
 
     def _cost_estimate(self) -> dict:
         if self._cost is not None:
@@ -259,6 +278,13 @@ class DPCPlan:
                   fallback_interest=None, block=_PLAN, layout=_PLAN,
                   precision=_PLAN):
         faultinject.fire("kernel.dispatch")
+        if d_cut is not None:
+            # strong-f32 before any jit boundary: a python float traces
+            # weak-typed, a numpy scalar strong — one cache entry per
+            # spelling otherwise (R7's retrace-churn finding)
+            import jax.numpy as jnp
+
+            d_cut = jnp.asarray(d_cut, jnp.float32)
         with self._ctx():
             return self.backend.rho_delta(
                 x, y, d_cut, jitter=jitter, y_sel_slots=y_sel_slots,
@@ -282,16 +308,33 @@ _M_EVICTIONS = _obsm.counter(
 # traces depend only on the spec's resolved axes, not the point shape)
 _ANALYZED: dict = {}
 
+# every plan-time finding lands here, bypassed or not — the escape hatch
+# silences the raise, never the telemetry
+_M_FINDINGS = _obsm.counter(
+    "analysis_findings_total",
+    "plan-time static-analyzer findings, labeled by rule and level")
+
+_BYPASS_WARNED = False
+
 
 def _plan_check(pl: DPCPlan) -> None:
-    """Run the jaxpr static analyzer (``repro.analysis``) over the plan's
-    canonical traces, once per spec; raise on error-severity findings so a
-    spec that dispatches into a flagged kernel path fails at ``plan()``,
-    before any data is touched.  ``REPRO_ANALYSIS=0`` bypasses (debugging
-    escape hatch; the CI sweep still covers every combo)."""
+    """Run the static analyzer (``repro.analysis``) over the plan's
+    canonical traces + the plan itself, once per spec; raise on
+    error-severity findings so a spec that dispatches into a flagged
+    kernel path fails at ``plan()``, before any data is touched.
+
+    ``REPRO_ANALYSIS=0`` (also ``off``/``no``) is the debugging escape
+    hatch: findings are still computed and recorded on the
+    ``analysis_findings_total`` obs counter, and the first bypassed error
+    logs one warning — the raise is suppressed, the evidence is not.  The
+    internal value ``suspend`` (set by the analyzer's own sweep, which
+    builds plans *in order to* analyze them) skips entirely."""
     import os
 
-    if os.environ.get("REPRO_ANALYSIS", "1").lower() in ("0", "off", "no"):
+    global _BYPASS_WARNED
+
+    mode = os.environ.get("REPRO_ANALYSIS", "1").lower()
+    if mode == "suspend":
         return
     res = _ANALYZED.get(pl.spec)
     if res is None:
@@ -303,11 +346,25 @@ def _plan_check(pl: DPCPlan) -> None:
         with blocksparse.suspend_counters():
             res = tuple(analysis.analyze_plan(pl))
         _ANALYZED[pl.spec] = res
+        for f in res:
+            _M_FINDINGS.inc(rule=f.rule, level=f.severity)
     errors = [f for f in res if f.severity == "error"]
-    if errors:
-        from repro.analysis import AnalysisError
+    if not errors:
+        return
+    if mode in ("0", "off", "no"):
+        if not _BYPASS_WARNED:
+            import logging
 
-        raise AnalysisError(errors)
+            logging.getLogger("repro.analysis").warning(
+                "REPRO_ANALYSIS=%s: bypassing %d error finding(s) for %s "
+                "(recorded on analysis_findings_total; this warning is "
+                "logged once per process)", mode, len(errors),
+                pl.describe())
+            _BYPASS_WARNED = True
+        return
+    from repro.analysis import AnalysisError
+
+    raise AnalysisError(errors)
 
 
 def plan(points_spec: PointsSpec | tuple | None,

@@ -339,7 +339,6 @@ def _dense_worklist(nbr: int, nbc: int, prefix: bool, block_n: int,
             jnp.zeros((len(wi),), jnp.float32))
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "interpret"))
 def tile_sweep(spec: SweepSpec, x, y, d_cut=None, x_key=None, y_key=None,
                signs=None, nn_sel=None, starts=None, ends=None,
                wl_meta=None, wl_lb=None, *, interpret: bool = False):
@@ -353,7 +352,24 @@ def tile_sweep(spec: SweepSpec, x, y, d_cut=None, x_key=None, y_key=None,
     block-sparse tile-pair worklist; ``None`` runs the dense all-pairs
     sweep.  Returns the tuple of requested accumulators, in order:
     ``count`` (n,), then ``nn`` — (best_d2, arg) or (topv, topi).
+
+    Host wrapper: ``d_cut`` is normalized to a strong ``f32`` *before* the
+    jit boundary — a python float traces weak-typed and a numpy scalar
+    strong, so an un-normalized scalar would land one trace-cache entry
+    per spelling the caller uses (R7's retrace-churn finding).
     """
+    if d_cut is not None:
+        d_cut = jnp.asarray(d_cut, jnp.float32)
+    return _tile_sweep_jit(spec, x, y, d_cut, x_key, y_key, signs, nn_sel,
+                           starts, ends, wl_meta, wl_lb,
+                           interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "interpret"))
+def _tile_sweep_jit(spec: SweepSpec, x, y, d_cut=None, x_key=None,
+                    y_key=None, signs=None, nn_sel=None, starts=None,
+                    ends=None, wl_meta=None, wl_lb=None, *,
+                    interpret: bool = False):
     n, d = x.shape
     m, _ = y.shape
     assert n % spec.block_n == 0 and m % spec.block_m == 0

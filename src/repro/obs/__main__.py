@@ -16,7 +16,7 @@ import sys
 from . import report
 
 
-def main(argv=None) -> int:
+def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.obs")
     sub = ap.add_subparsers(dest="cmd", required=True)
     rp = sub.add_parser("report", help="render a trace/metrics snapshot")

@@ -16,6 +16,7 @@ stat dicts (histograms), keyed by a canonical rendering of the label set.
 from __future__ import annotations
 
 import threading
+from typing import Any, TypeVar, cast
 
 __all__ = ["Counter", "Gauge", "Histogram", "counter", "gauge", "histogram",
            "get_metric", "snapshot", "reset"]
@@ -37,10 +38,10 @@ class Metric:
 
     kind = "metric"
 
-    def __init__(self, name: str, help: str = ""):
+    def __init__(self, name: str, help: str = "") -> None:
         self.name = name
         self.help = help
-        self._vals: dict[str, object] = {}
+        self._vals: dict[str, Any] = {}
 
     # -- suspension support (blocksparse.suspend_counters): the full series
     # -- state can be snapshotted and restored atomically
@@ -68,15 +69,15 @@ class Counter(Metric):
 
     kind = "counter"
 
-    def inc(self, v: float = 1, **labels):
+    def inc(self, v: float = 1, **labels: Any) -> None:
         k = _label_key(labels)
         with _LOCK:
             self._vals[k] = self._vals.get(k, 0) + v
 
-    def value(self, **labels):
+    def value(self, **labels: Any) -> Any:
         return self._vals.get(_label_key(labels), 0)
 
-    def total(self):
+    def total(self) -> Any:
         """Sum over every label set (the unlabeled view of the family)."""
         with _LOCK:
             return sum(self._vals.values())
@@ -87,11 +88,11 @@ class Gauge(Metric):
 
     kind = "gauge"
 
-    def set(self, v: float, **labels):
+    def set(self, v: float, **labels: Any) -> None:
         with _LOCK:
             self._vals[_label_key(labels)] = v
 
-    def value(self, default=None, **labels):
+    def value(self, default: Any = None, **labels: Any) -> Any:
         return self._vals.get(_label_key(labels), default)
 
 
@@ -100,7 +101,7 @@ class Histogram(Metric):
 
     kind = "histogram"
 
-    def observe(self, v: float, **labels):
+    def observe(self, v: float, **labels: Any) -> None:
         k = _label_key(labels)
         with _LOCK:
             s = self._vals.get(k)
@@ -112,12 +113,15 @@ class Histogram(Metric):
                 s["min"] = min(s["min"], v)
                 s["max"] = max(s["max"], v)
 
-    def stats(self, **labels) -> dict | None:
+    def stats(self, **labels: Any) -> dict | None:
         s = self._vals.get(_label_key(labels))
         return dict(s) if s is not None else None
 
 
-def _register(cls, name: str, help: str):
+_M = TypeVar("_M", bound=Metric)
+
+
+def _register(cls: type[_M], name: str, help: str) -> _M:
     with _LOCK:
         m = _REGISTRY.get(name)
         if m is None:
@@ -128,7 +132,7 @@ def _register(cls, name: str, help: str):
                             f"{m.kind}, not {cls.kind}")
         elif help and not m.help:
             m.help = help
-        return m
+        return cast(_M, m)
 
 
 def counter(name: str, help: str = "") -> Counter:

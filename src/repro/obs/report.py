@@ -18,7 +18,7 @@ __all__ = ["load_trace", "aggregate", "render_table", "render_metrics",
 
 def load_trace(path: str) -> list[dict]:
     """Parse a JSON-lines trace file into span records."""
-    out = []
+    out: list[dict] = []
     with open(path) as f:
         for line in f:
             line = line.strip()
@@ -54,7 +54,7 @@ def aggregate(spans: list[dict]) -> dict[str, dict]:
     return phases
 
 
-def _fmt_s(v) -> str:
+def _fmt_s(v: float | None) -> str:
     if v is None:
         return "-"
     if v >= 1.0:
@@ -93,7 +93,7 @@ def _indent_name(path: str, row: dict) -> str:
 
 def render_metrics(snap: dict) -> str:
     """Flat ``name{labels} = value`` listing of a metrics snapshot."""
-    lines = []
+    lines: list[str] = []
     for name, fam in sorted(snap.items()):
         for key, val in sorted(fam.get("values", {}).items()):
             label = f"{{{key}}}" if key else ""

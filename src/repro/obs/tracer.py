@@ -33,6 +33,7 @@ import os
 import threading
 import time
 import warnings
+from typing import Any
 
 import jax
 
@@ -54,7 +55,7 @@ _ORIGIN = time.perf_counter()
 class _State:
     level: str = "off"
     trace_path: str | None = None
-    file = None  # lazily-opened JSONL handle
+    file: Any = None  # lazily-opened JSONL handle
     profile_dir: str | None = None
     profiling: bool = False
 
@@ -65,7 +66,8 @@ _DONE: list[dict] = []
 _KEEP = object()  # configure() sentinel: leave this setting unchanged
 
 
-def configure(level=_KEEP, trace_path=_KEEP, profile_dir=_KEEP) -> None:
+def configure(level: Any = _KEEP, trace_path: Any = _KEEP,
+              profile_dir: Any = _KEEP) -> None:
     """Set the global observability level and trace sinks.
 
     ``level`` is one of ``LEVELS``.  ``trace_path`` names a JSON-lines file
@@ -132,16 +134,16 @@ class _NullSpan:
 
     __slots__ = ()
 
-    def __enter__(self):
+    def __enter__(self) -> "_NullSpan":
         return self
 
-    def __exit__(self, *exc):
+    def __exit__(self, *exc: Any) -> bool:
         return False
 
-    def sync(self, value=None):
+    def sync(self, value: Any = None) -> Any:
         return value
 
-    def set(self, **attrs) -> None:
+    def set(self, **attrs: Any) -> None:
         pass
 
 
@@ -152,7 +154,7 @@ class Span:
     __slots__ = ("name", "attrs", "id", "parent", "depth", "path",
                  "_t0", "_mark", "_fence_s")
 
-    def __init__(self, name: str, attrs: dict):
+    def __init__(self, name: str, attrs: dict) -> None:
         self.name = name
         self.attrs = attrs
         self.id = next(_IDS)
@@ -163,11 +165,11 @@ class Span:
         self._mark = 0.0
         self._fence_s = 0.0
 
-    def set(self, **attrs) -> None:
+    def set(self, **attrs: Any) -> None:
         """Attach attributes to an open span (e.g. sizes known mid-phase)."""
         self.attrs.update(attrs)
 
-    def sync(self, value=None):
+    def sync(self, value: Any = None) -> Any:
         """Fence device work attributed to this span.
 
         At trace level, blocks until ``value`` (any pytree of arrays) is
@@ -193,7 +195,7 @@ class Span:
             self._mark = now
         return value
 
-    def __enter__(self):
+    def __enter__(self) -> "Span":
         stack = getattr(_TLS, "stack", None)
         if stack is None:
             stack = _TLS.stack = []
@@ -206,13 +208,13 @@ class Span:
         self._t0 = self._mark = time.perf_counter()
         return self
 
-    def __exit__(self, exc_type, exc, tb):
+    def __exit__(self, exc_type: Any, exc: Any, tb: Any) -> bool:
         t1 = time.perf_counter()
         stack = getattr(_TLS, "stack", None)
         if stack and stack[-1] is self:
             stack.pop()
         host_s = t1 - self._t0
-        rec = {
+        rec: dict[str, Any] = {
             "name": self.name,
             "path": self.path,
             "id": self.id,
@@ -240,7 +242,7 @@ class Span:
         return False
 
 
-def span(name: str, **attrs):
+def span(name: str, **attrs: Any) -> "Span | _NullSpan":
     """Open a named span context.  At ``level="off"`` returns the shared
     null singleton, keeping uninstrumented runs overhead-free."""
     if _STATE.level == "off":

@@ -29,13 +29,14 @@ validation).
 """
 from __future__ import annotations
 
+import contextlib
 import os
 
 from repro import obs
 
 __all__ = ["FaultError", "FaultPlan", "KILL_EXIT_CODE", "KNOWN_SITES",
            "MODES", "activate", "active", "deactivate", "fire",
-           "should_corrupt"]
+           "should_corrupt", "suspended"]
 
 # Every plantable site.  Adding a fire() call requires adding its name
 # here — activate() validates against this tuple so a typo in a chaos
@@ -114,6 +115,22 @@ def deactivate() -> None:
 
 def active() -> FaultPlan | None:
     return _PLAN
+
+
+@contextlib.contextmanager
+def suspended():
+    """Temporarily disarm the active plan (restored on exit, hit count
+    intact).  Observability/analysis code that *traces* production
+    primitives on the host — the plan-time static analyzer, the telemetry
+    memory estimator — wraps its tracing here so an armed chaos fault
+    neither fires inside the analyzer nor has its hit budget consumed by
+    probe traffic the production code never sees."""
+    global _PLAN
+    saved, _PLAN = _PLAN, None
+    try:
+        yield
+    finally:
+        _PLAN = saved
 
 
 def fire(site: str) -> None:

@@ -42,7 +42,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.analysis.audit import audit_check_rep
+from repro.analysis.audit import audit_check_rep, audit_determinism
 from repro.core.grid import canonical_group_coords
 from repro.launch.mesh import flatten_mesh
 
@@ -265,6 +265,12 @@ def make_sharded_repair(mesh, axis: str, backend, d_cut: float):
         "(inserted rows' fresh counts) is produced by an explicit psum, "
         "identical on every member by construction",
         collectives=("psum",))
+    @audit_determinism(
+        "the psum reduces per-shard neighbor *counts* — exact integers in "
+        "f32 far below 2^24, so addition is associative over them and "
+        "every reduction order (ring, tree, any device count) yields "
+        "identical bits; parity-tested against the replicated recount",
+        ops=("psum",))
     def f(w_my, rho_my, batch, sgn, ins):
         d = backend.range_count_delta(w_my, batch, sgn, d_cut)
         part = backend.range_count(ins, w_my, d_cut)

@@ -1,4 +1,4 @@
-"""repro.analysis: the jaxpr-level static analyzer (rules R1-R5 + audits).
+"""repro.analysis: the jaxpr-level static analyzer (rules R1-R9 + audits).
 
 The R1 positive control reconstructs the PR 4 distributed block-sparse
 miscompile shape — a sort-derived order gather inside a multi-partition
@@ -306,7 +306,7 @@ def test_single_device_blocksparse_layout():
 _R1_SCRIPT = r"""
 import warnings, json, os
 warnings.filterwarnings("ignore")
-os.environ["REPRO_ANALYSIS"] = "0"     # probe plans, not production fits
+os.environ["REPRO_ANALYSIS"] = "suspend"   # probe plans, not production fits
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
@@ -424,3 +424,444 @@ def test_r1_positive_control_and_production_tree_is_clean():
         "the probe must re-enable multi-partition block-sparse"
     assert out["layout_dense"] is None
     assert out["clean_errors"] == []
+
+
+# ------------------------------------------------------ R6 pallas-race
+class TestR6PallasRace:
+    """The race detector over real kernel traces: the shipping merges are
+    proved associative-or-guarded, and the seeded lost-update mutation
+    (kept-k merge -> passthrough overwrite) fires."""
+
+    def _trace(self, spec):
+        from repro.kernels import sweep as S
+
+        x = jnp.zeros((128, 2), jnp.float32)
+        return jax.make_jaxpr(
+            lambda a, b: S.tile_sweep(spec, a, b, 0.35, interpret=True))(x, x)
+
+    def _findings(self, closed):
+        from repro.analysis.r6_pallas_race import PallasRaceRule
+
+        return PallasRaceRule().check_jaxpr("t", closed)
+
+    def test_shipping_topk_merge_clean(self):
+        from repro.kernels import sweep as S
+
+        spec = S.SweepSpec(block_n=64, block_m=128, count=True,
+                           nn="topk", k=4)
+        assert self._findings(self._trace(spec)) == []
+
+    def test_shipping_best1_merge_clean(self):
+        from repro.kernels import sweep as S
+
+        spec = S.SweepSpec(block_n=64, block_m=128, nn="best1")
+        assert self._findings(self._trace(spec)) == []
+
+    def test_overwrite_mutation_fires(self, monkeypatch):
+        """Positive control: _merge_topk mutated into last-tile-wins.  A
+        unique SweepSpec forces a fresh trace (the jit cache would
+        otherwise replay the unmutated kernel)."""
+        from repro.kernels import sweep as S
+
+        monkeypatch.setattr(S, "_merge_topk",
+                            lambda ov, oi, nv, ni, k: (nv, ni))
+        spec = S.SweepSpec(block_n=64, block_m=128, count=True,
+                           nn="topk", k=3)
+        findings = self._findings(self._trace(spec))
+        assert len(findings) == 2, findings       # topv and topi outputs
+        assert all(f.severity == "error" for f in findings)
+        assert all("overwrite" in f.message for f in findings)
+        assert all("revisited" in f.message for f in findings)
+
+
+# ------------------------------------------------- R7 transfer / retrace
+class TestR7TransferRetrace:
+    def test_callback_in_trace_fires(self):
+        from repro.analysis.r7_transfer_retrace import TransferRule
+
+        def f(x):
+            y = jax.pure_callback(
+                lambda v: v, jax.ShapeDtypeStruct(x.shape, x.dtype), x)
+            return y * 2.0
+
+        closed = jax.make_jaxpr(f)(jnp.ones((4,), jnp.float32))
+        fs = TransferRule().check_jaxpr("t", closed)
+        assert [f.severity for f in fs] == ["error"]
+        assert "round trip" in fs[0].message
+
+    def test_clean_trace_passes(self):
+        from repro.analysis.r7_transfer_retrace import TransferRule
+
+        closed = jax.make_jaxpr(lambda x: x * 2.0)(jnp.ones((4,)))
+        assert TransferRule().check_jaxpr("t", closed) == []
+
+    def test_raw_jit_spellings_diverge_and_wrapper_normalizes(self):
+        """The detection mechanism end-to-end: the un-normalized jit
+        boundary shows weak-vs-strong aval drift across d_cut spellings;
+        the public tile_sweep wrapper erases it."""
+        import numpy as np
+
+        from repro.analysis.r7_transfer_retrace import _jit_signature
+        from repro.kernels import sweep as S
+
+        x = jnp.zeros((128, 2), jnp.float32)
+        spec = S.SweepSpec(block_n=64, block_m=128, count=True)
+
+        def sig(fn, d):
+            return _jit_signature(jax.make_jaxpr(
+                lambda a, b: fn(spec, a, b, d, interpret=True))(x, x))
+
+        assert sig(S._tile_sweep_jit, 0.35) != \
+            sig(S._tile_sweep_jit, np.float32(0.35))
+        assert sig(S.tile_sweep, 0.35) == sig(S.tile_sweep,
+                                              np.float32(0.35))
+
+    def test_plan_probe_clean_on_shipping_specs(self):
+        from repro.analysis.r7_transfer_retrace import RetraceChurnRule
+
+        for spec in (ExecSpec(backend="jnp"),
+                     ExecSpec(backend="pallas-interpret",
+                              layout="block-sparse")):
+            pl = planner.plan(None, spec)
+            assert RetraceChurnRule().check_plan(pl) == []
+
+    def test_plan_probe_fires_on_unnormalized_plan(self):
+        """Positive control: a plan whose rho_delta forwards d_cut raw
+        into a jit boundary produces one trace-cache entry per spelling —
+        the probe must call that out."""
+        from repro.analysis.r7_transfer_retrace import RetraceChurnRule
+
+        inner = jax.jit(lambda a, b, d: (a * d).sum() + b.sum())
+
+        class _BE:
+            fused_traceable = True
+
+        class _FakePlan:
+            backend = _BE()
+            backend_name = "fake"
+            layout = "dense"
+            precision = "f32"
+            spec = ("fake-spec",)
+            sparse = False
+            block = None
+
+            def rho_delta(self, a, b, d):
+                return inner(a, b, d)       # no normalization: the defect
+
+        fs = RetraceChurnRule().check_plan(_FakePlan())
+        assert any(f.severity == "error" and "retrace churn" in f.message
+                   for f in fs), fs
+
+
+# ------------------------------------------------------ R8 determinism
+class TestR8Determinism:
+    def _mesh(self):
+        import numpy as np
+
+        from jax.sharding import Mesh
+
+        return Mesh(np.array(jax.devices()), ("i",))
+
+    def _psum_trace(self, body, out_spec):
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        sm = shard_map(body, mesh=self._mesh(), in_specs=(P("i"),),
+                       out_specs=out_spec)
+        return jax.make_jaxpr(sm)(jnp.ones((8,), jnp.float32))
+
+    def _findings(self, closed):
+        from repro.analysis.r8_determinism import DeterminismRule
+
+        return DeterminismRule().check_jaxpr("t", closed)
+
+    @pytest.mark.skipif(len(jax.devices()) < 2,
+                        reason="needs a multi-partition mesh")
+    def test_unannotated_float_psum_feeding_outputs_is_error(self):
+        from jax.sharding import PartitionSpec as P
+
+        def body(x):
+            return jax.lax.psum(jnp.sum(x * 1.5), "i")
+
+        fs = self._findings(self._psum_trace(body, P(None)))
+        assert [f.severity for f in fs] == ["error"]
+        assert "audit_determinism" in fs[0].message
+
+    @pytest.mark.skipif(len(jax.devices()) < 2,
+                        reason="needs a multi-partition mesh")
+    def test_internal_only_psum_is_warn(self):
+        from jax.sharding import PartitionSpec as P
+
+        def body(x):
+            _ = jax.lax.psum(jnp.sum(x * 1.5), "i")
+            return jnp.ones_like(x)
+
+        fs = self._findings(self._psum_trace(body, P("i")))
+        assert [f.severity for f in fs] == ["warn"]
+
+    @pytest.mark.skipif(len(jax.devices()) < 2,
+                        reason="needs a multi-partition mesh")
+    def test_blessed_psum_is_clean(self):
+        from jax.sharding import PartitionSpec as P
+
+        from repro.analysis import audit_determinism
+
+        @audit_determinism("test blessing: values are integer-exact",
+                           ops=("psum",))
+        def body(x):
+            return jax.lax.psum(jnp.sum(x * 1.5), "i")
+
+        assert self._findings(self._psum_trace(body, P(None))) == []
+
+    def test_duplicate_index_scatter_add_fires(self):
+        def scat(x, idx):
+            return jnp.zeros((4,), jnp.float32).at[idx].add(x)
+
+        closed = jax.make_jaxpr(scat)(jnp.ones((8,), jnp.float32),
+                                      jnp.zeros((8,), jnp.int32))
+        fs = self._findings(closed)
+        assert [f.severity for f in fs] == ["error"]
+        assert "scatter-add" in fs[0].message
+
+    def test_unique_index_scatter_add_clean(self):
+        def scat(x):
+            idx = jnp.arange(8)
+            return jnp.zeros((8,), jnp.float32).at[idx].add(
+                x, unique_indices=True)
+
+        closed = jax.make_jaxpr(scat)(jnp.ones((8,), jnp.float32))
+        assert self._findings(closed) == []
+
+    def test_integer_scatter_add_clean(self):
+        def scat(x, idx):
+            return jnp.zeros((4,), jnp.int32).at[idx].add(x)
+
+        closed = jax.make_jaxpr(scat)(jnp.ones((8,), jnp.int32),
+                                      jnp.zeros((8,), jnp.int32))
+        assert self._findings(closed) == []
+
+    def test_production_blessings_registered(self):
+        """The two shipping non-associative sites carry their audits.
+        ``_compress_head``'s registers at import; the sharded repair's
+        rides its factory (decorators on the inner def run per build)."""
+        import repro.serve.dpc_kv                  # noqa: F401
+        from repro.analysis import all_determinism_audits
+        from repro.kernels.backend import get_backend
+        from repro.stream.incremental import make_sharded_repair
+
+        make_sharded_repair(jax.make_mesh((1,), ("i",)), "i",
+                            get_backend("jnp"), 0.35)
+        keys = set(all_determinism_audits())
+        assert "repro.serve.dpc_kv._compress_head" in keys
+        assert any(k.startswith("repro.stream.incremental."
+                                "make_sharded_repair") for k in keys)
+
+
+# --------------------------------------------------- R9 memory budget
+class TestR9MemoryBudget:
+    def _trace(self):
+        from repro.kernels import sweep as S
+
+        x = jnp.zeros((128, 2), jnp.float32)
+        spec = S.SweepSpec(block_n=64, block_m=128, count=True)
+        return jax.make_jaxpr(
+            lambda a, b: S.tile_sweep(spec, a, b, 0.35, interpret=True))(x, x)
+
+    def test_default_budget_passes(self):
+        from repro.analysis.r9_memory_budget import MemoryBudgetRule
+
+        assert MemoryBudgetRule().check_jaxpr("t", self._trace()) == []
+
+    def test_tiny_vmem_budget_fires(self, monkeypatch):
+        from repro.analysis.r9_memory_budget import MemoryBudgetRule
+
+        monkeypatch.setenv("REPRO_LIMIT_VMEM_BYTES", "1024")
+        fs = MemoryBudgetRule().check_jaxpr("t", self._trace())
+        assert fs and all(f.severity == "error" for f in fs)
+        assert any("VMEM" in f.message for f in fs)
+
+    def test_live_buffer_gate_arms_only_with_env(self, monkeypatch):
+        from repro.analysis.r9_memory_budget import MemoryBudgetRule
+
+        closed = jax.make_jaxpr(
+            lambda x: (x @ x.T).sum())(jnp.ones((64, 64), jnp.float32))
+        assert MemoryBudgetRule().check_jaxpr("t", closed) == []
+        monkeypatch.setenv("REPRO_LIMIT_LIVE_BYTES", "64")
+        fs = MemoryBudgetRule().check_jaxpr("t", closed)
+        assert [f.severity for f in fs] == ["error"]
+        assert "live-buffer" in fs[0].message
+
+    def test_limits_table_and_env_override(self, monkeypatch):
+        from repro.analysis import limits
+
+        base = limits.limits_for_platform(None)
+        assert base.platform == "tpu"
+        assert base.smem_bytes == 4 * (1 << 20)    # the R4-era contract
+        monkeypatch.setenv("REPRO_LIMIT_SMEM_BYTES", "17")
+        assert limits.limits_for_platform("tpu").smem_bytes == 17
+        assert limits.limits_for_platform("tpu").vmem_bytes == \
+            base.vmem_bytes
+
+    def test_plan_telemetry_reports_memory(self):
+        pl = planner.plan(None, ExecSpec(backend="pallas-interpret"))
+        mem = pl.telemetry()["memory"]
+        assert mem["kernels"], "pallas plan must report kernel estimates"
+        for k in mem["kernels"]:
+            assert k["vmem_bytes"] > 0
+            assert k["vmem_bytes"] <= mem["limits"]["vmem_bytes"]
+        assert mem["live_peak_bytes"] > 0
+        assert mem["limits"]["platform"] == "tpu"
+        # memoized: second call returns the same object, no re-trace
+        assert pl.telemetry()["memory"] is mem
+
+
+# ------------------------------------------- escape hatch + obs counter
+class TestEscapeHatch:
+    def test_bypass_records_findings_and_warns_once(self, monkeypatch,
+                                                    caplog):
+        import logging
+
+        from repro import analysis
+
+        bad = Finding(rule="X-hatch", severity="error", target="t",
+                      message="injected failure")
+        monkeypatch.setattr(analysis, "analyze_plan", lambda pl: [bad])
+        monkeypatch.setenv("REPRO_ANALYSIS", "0")
+        monkeypatch.setattr(planner, "_BYPASS_WARNED", False)
+        spec = ExecSpec(backend="jnp", block=141)   # unique -> memo miss
+        planner._ANALYZED.pop(spec, None)
+        planner._PLANS.pop((None, spec), None)
+        planner._M_FINDINGS._reset()
+        try:
+            with caplog.at_level(logging.WARNING, logger="repro.analysis"):
+                assert planner.plan(None, spec) is not None
+            assert any("bypassing" in r.message for r in caplog.records)
+            vals = planner._M_FINDINGS._vals
+            assert vals.get("level=error,rule=X-hatch") == 1, vals
+            # second bypassed plan: counted via memo? new spec -> counted,
+            # but the warning stays once-per-process
+            caplog.clear()
+            spec2 = ExecSpec(backend="jnp", block=143)
+            planner._ANALYZED.pop(spec2, None)
+            planner._PLANS.pop((None, spec2), None)
+            with caplog.at_level(logging.WARNING, logger="repro.analysis"):
+                assert planner.plan(None, spec2) is not None
+            assert not any("bypassing" in r.message
+                           for r in caplog.records)
+        finally:
+            for s in (spec, ExecSpec(backend="jnp", block=143)):
+                planner._ANALYZED.pop(s, None)
+                planner._PLANS.pop((None, s), None)
+            planner._M_FINDINGS._reset()
+            planner._BYPASS_WARNED = False
+
+    def test_suspend_skips_entirely(self, monkeypatch):
+        from repro import analysis
+
+        calls = []
+        monkeypatch.setattr(analysis, "analyze_plan",
+                            lambda pl: calls.append(pl) or [])
+        monkeypatch.setenv("REPRO_ANALYSIS", "suspend")
+        spec = ExecSpec(backend="jnp", block=145)
+        planner._ANALYZED.pop(spec, None)
+        planner._PLANS.pop((None, spec), None)
+        try:
+            assert planner.plan(None, spec) is not None
+            assert calls == []
+        finally:
+            planner._ANALYZED.pop(spec, None)
+            planner._PLANS.pop((None, spec), None)
+
+
+# --------------------------------------------------- SARIF + baseline
+class TestSarifAndBaseline:
+    def _report(self, findings):
+        return {"ok": not any(f["severity"] == "error" for f in findings),
+                "findings": findings, "targets": ["a"], "skipped": [],
+                "rules": {"R6-pallas-race":
+                          {"kind": "jaxpr", "description": "races"}}}
+
+    def test_sarif_levels_and_locations(self):
+        from repro.analysis.sarif import to_sarif
+
+        findings = [
+            {"rule": "R6-pallas-race", "severity": "error", "target": "t",
+             "message": "m", "where": "pjit.jaxpr/pallas_call"},
+            {"rule": "R2-check-rep-audit", "severity": "warn",
+             "target": "t2", "message": "m2",
+             "where": "src/repro/stream/incremental.py:271"},
+        ]
+        doc = to_sarif(self._report(findings))
+        assert doc["version"] == "2.1.0"
+        run = doc["runs"][0]
+        ids = [r["id"] for r in run["tool"]["driver"]["rules"]]
+        assert "R6-pallas-race" in ids and "baseline" in ids
+        res = run["results"]
+        assert res[0]["level"] == "error"
+        fq = res[0]["locations"][0]["logicalLocations"][0]
+        assert fq["fullyQualifiedName"] == "t::pjit.jaxpr/pallas_call"
+        assert res[1]["level"] == "warning"
+        phys = res[1]["locations"][0]["physicalLocation"]
+        assert phys["artifactLocation"]["uri"].endswith("incremental.py")
+        assert phys["region"]["startLine"] == 271
+
+    def test_sarif_suppressed_findings_carry_justification(self):
+        from repro.analysis.sarif import to_sarif
+
+        findings = [{"rule": "R6-pallas-race", "severity": "suppressed",
+                     "target": "t", "message": "m", "where": "w",
+                     "suppressed_reason": "leased until fix lands",
+                     "suppressed_until": "2099-01-01"}]
+        res = to_sarif(self._report(findings))["runs"][0]["results"][0]
+        assert res["suppressions"][0]["justification"] == \
+            "leased until fix lands"
+
+    def test_baseline_downgrades_matching_errors(self):
+        import datetime
+
+        from repro.analysis import report as R
+
+        f = Finding(rule="R6-pallas-race", severity="error",
+                    target="plan[x]:fused", message="m", where="p/q")
+        entries = [{"rule": "R6-*", "target": "plan*", "reason": "leased",
+                    "expires": "2099-01-01"}]
+        out = R.apply_baseline([f], entries,
+                               today=datetime.date(2026, 1, 1))
+        assert out[0]["severity"] == "suppressed"
+        assert out[0]["suppressed_reason"] == "leased"
+
+    def test_expired_baseline_entry_fails(self):
+        import datetime
+
+        from repro.analysis import report as R
+
+        today = datetime.date(2026, 8, 7)
+        entries = [{"rule": "R6-*", "reason": "old lease",
+                    "expires": "2025-01-01"}]
+        errs = R._baseline_findings(entries, "analysis-baseline.json",
+                                    today)
+        assert [e.severity for e in errs] == ["error"]
+        assert "expired" in errs[0].message
+        # and an expired entry no longer suppresses anything
+        f = Finding(rule="R6-pallas-race", severity="error", target="t",
+                    message="m", where="w")
+        out = R.apply_baseline([f], entries, today=today)
+        assert out[0]["severity"] == "error"
+
+    def test_entry_without_reason_or_date_fails(self):
+        import datetime
+
+        from repro.analysis import report as R
+
+        errs = R._baseline_findings([{"rule": "*"}], "b.json",
+                                    datetime.date(2026, 8, 7))
+        kinds = " | ".join(e.message for e in errs)
+        assert "no reason" in kinds and "expires" in kinds
+
+    def test_checked_in_baseline_is_well_formed(self):
+        from repro.analysis import report as R
+
+        path = os.path.join(_REPO_ROOT, R.BASELINE_FILE)
+        entries = R.load_baseline(path)
+        assert R._baseline_findings(
+            entries, path, __import__("datetime").date.today()) == []
